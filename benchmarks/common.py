@@ -1,0 +1,43 @@
+"""Shared benchmark plumbing: inputs, timing, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import graph as G
+
+
+def bench_graphs(scale: int = 14, seed: int = 1):
+    """Structural analogues of the paper's input classes (Table 1):
+    power-law (rmat*), flat road network (road-USA), moderate-skew
+    social (orkut -> uniform high-degree)."""
+    return {
+        "rmat": G.rmat(scale, 16, seed=seed),
+        "road": G.road_grid(1 << (scale // 2 + 1), seed=seed),
+        "uniform": G.uniform_random(1 << scale, 16, seed=seed),
+    }
+
+
+def symmetrized(g):
+    rp = np.asarray(g.row_ptr).astype(np.int64)
+    ci = np.asarray(g.col_idx).astype(np.int64)
+    src = np.repeat(np.arange(g.num_vertices, dtype=np.int64),
+                    rp[1:] - rp[:-1])
+    return G.from_edge_list(np.concatenate([src, ci]),
+                            np.concatenate([ci, src]), g.num_vertices)
+
+
+def timed(fn, repeats: int = 3):
+    """median-of-N wall clock (first call includes jit; we warm once)."""
+    fn()                                     # warmup (compilation)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.0f},{derived}", flush=True)

@@ -1,0 +1,37 @@
+"""Fig 1/5 analogue: per-tile ("thread block") edge-load distribution
+with and without ALB, round by round."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.balancer import BalancerConfig
+from repro.core import graph as G
+from repro.core.apps import sssp
+
+from .common import bench_graphs, emit
+
+
+def imbalance(loads: np.ndarray) -> float:
+    mean = max(loads.mean(), 1.0)
+    return float(loads.max() / mean)
+
+
+def run(scale: int = 13):
+    g = bench_graphs(scale)["rmat"]
+    src = G.highest_out_degree_vertex(g)
+    out = {}
+    for strat in ["twc", "alb"]:
+        cfg = BalancerConfig(strategy=strat, threshold=1024)
+        res = sssp(g, src, cfg, collect_stats=True)
+        for rnd, st in enumerate(res.stats[:4]):
+            total = st.tile_loads_twc + st.tile_loads_lb
+            imb = imbalance(total)
+            out[(strat, rnd)] = imb
+            emit(f"fig5/{strat}/round{rnd}", res.seconds,
+                 f"imbalance={imb:.1f} edges_twc={st.edges_twc} "
+                 f"edges_lb={st.edges_lb} lb_fired={st.lb_invoked}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Fig 6/10 analogue: multi-device scaling of D-IrGL(TWC) vs
+D-IrGL(ALB) — BSP rounds over partitioned graphs, 1..8 devices.
+
+Re-execs itself with a forced host device count so the multi-device
+run never contaminates the parent process's single-device state.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+MAX_DEV = 8
+
+
+def run():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count="
+                          f"{MAX_DEV}").strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    r = subprocess.run([sys.executable, "-m", "benchmarks.fig6_scaling",
+                        "--inner"], env=env, cwd=root,
+                       capture_output=True, text=True, timeout=3600)
+    sys.stdout.write(r.stdout)
+    if r.returncode != 0:
+        sys.stderr.write(r.stderr[-3000:])
+        raise RuntimeError("fig6 inner run failed")
+
+
+def inner():
+    import time
+    import jax
+    import numpy as np
+    from repro.core import graph as G
+    from repro.core.partition import partition
+    from repro.core import gluon
+    from repro.core.balancer import BalancerConfig
+    from .common import emit
+
+    g = G.rmat(13, 16, seed=1)
+    src = G.highest_out_degree_vertex(g)
+    for ndev in [1, 2, 4, 8]:
+        mesh = gluon.device_mesh(ndev)
+        sg = partition(g, ndev, "oec")
+        for strat in ["twc", "alb"]:
+            cfg = BalancerConfig(strategy=strat, threshold=1024)
+            # warmup (compile)
+            gluon.sssp_distributed(sg, mesh, src, cfg, max_rounds=200)
+            t0 = time.perf_counter()
+            labels, rounds, _ = gluon.sssp_distributed(
+                sg, mesh, src, cfg, max_rounds=200)
+            secs = time.perf_counter() - t0
+            emit(f"fig6/sssp/{strat}/gpus{ndev}", secs,
+                 f"rounds={rounds}")
+
+
+if __name__ == "__main__":
+    if "--inner" in sys.argv:
+        inner()
+    else:
+        run()

@@ -1,0 +1,156 @@
+"""§Roofline: three-term roofline per (arch × shape) from the dry-run
+artifacts in artifacts/dryrun/.
+
+  compute   = FLOPs_per_device / peak_FLOPs            (197 TF bf16)
+  memory    = HBM_bytes_per_device / HBM_bw            (819 GB/s)
+  collective= collective_bytes_per_device / link_bw    (~50 GB/s/link)
+
+FLOPs / HBM bytes / collective bytes come from the cost-extraction
+lowerings (scan-free, depth-extrapolated — see dryrun.cost_extract);
+memory-fit comes from the full-depth scanned compile.  MODEL_FLOPS is
+the analytic 6·N·D (dense) / 6·N_active·D (MoE) useful-work count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+ART = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter / useful-FLOPs model
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg):
+    """(total_params, active_params) excluding embeddings (standard
+    6ND convention counts non-embedding matmul params)."""
+    d = cfg.d_model
+    if cfg.family in ("ssm", "hybrid"):
+        d_inner = cfg.ssm.expand * d
+        nheads = d_inner // cfg.ssm.head_dim
+        n = cfg.ssm.d_state
+        per = (d * (2 * d_inner + 2 * n + nheads)        # w_in
+               + cfg.ssm.d_conv * (d_inner + 2 * n)      # conv
+               + d_inner * d)                            # w_out
+        total = per * cfg.num_layers
+        if cfg.family == "hybrid":
+            hd = cfg.resolved_head_dim
+            shared = (d * cfg.num_heads * hd * 2
+                      + d * cfg.num_kv_heads * hd * 2
+                      + 3 * d * cfg.d_ff)
+            total += shared * (cfg.num_layers // cfg.attn_every)
+        return total, total
+    hd = cfg.resolved_head_dim
+    attn = (d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd
+            + cfg.num_heads * hd * d)
+    if cfg.attention == "mla":
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        attn = (d * m.q_lora_rank + m.q_lora_rank * cfg.num_heads * qk
+                + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                + m.kv_lora_rank * cfg.num_heads
+                * (m.qk_nope_head_dim + m.v_head_dim)
+                + cfg.num_heads * m.v_head_dim * d)
+    if cfg.family == "moe":
+        e = cfg.moe
+        expert = 3 * d * e.d_expert
+        routed_total = expert * e.num_experts
+        routed_active = expert * e.top_k
+        shared = 3 * d * e.d_expert * e.num_shared_experts
+        total = (attn + routed_total + shared) * cfg.num_layers
+        active = (attn + routed_active + shared) * cfg.num_layers
+        return total, active
+    mlp = 3 * d * cfg.d_ff if cfg.act == "silu" else 2 * d * cfg.d_ff
+    per = attn + mlp
+    return per * cfg.num_layers, per * cfg.num_layers
+
+
+def model_flops(cfg, shape, devices: int) -> float:
+    """Per-device useful FLOPs for the step (6·N_active·D train,
+    2·N_active·D forward-only serve steps)."""
+    total, active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens / devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens / devices
+    tokens = shape.global_batch          # one new token per sequence
+    return 2.0 * active * tokens / devices
+
+
+# ---------------------------------------------------------------------------
+
+def load_artifacts():
+    cells = {}
+    for f in glob.glob(os.path.join(ART, "*.json")):
+        with open(f) as fh:
+            d = json.load(fh)
+        opts = "-".join(d.get("opts", []))
+        key = (d["arch"], d["shape"], d.get("mesh", "16x16"), opts)
+        if f.endswith("__cost.json"):
+            cells.setdefault(key, {})["cost"] = d
+        else:
+            cells.setdefault(key, {})["run"] = d
+    return cells
+
+
+def analyze(devices_per_pod: int = 256):
+    from repro.configs import get_config, shape_by_name
+    cells = load_artifacts()
+    rows = []
+    for (arch, shape_name, mesh, opts), parts in sorted(cells.items()):
+        if mesh != "16x16" or "cost" not in parts:
+            continue
+        cfg = get_config(arch)
+        shape = shape_by_name(shape_name)
+        c = parts["cost"]
+        flops = c["flops_per_device"]
+        hbm = c["hbm_bytes_per_device"]
+        coll = c["collective_bytes_per_device"]
+        t_c = flops / PEAK_FLOPS
+        t_m = hbm / HBM_BW
+        t_n = coll / LINK_BW
+        dom = max((t_c, "compute"), (t_m, "memory"),
+                  (t_n, "collective"))[1]
+        mf = model_flops(cfg, shape, devices_per_pod)
+        useful = mf / max(flops, 1.0)
+        temp = (parts.get("run", {}).get("memory", {})
+                .get("temp_size_in_bytes", 0))
+        args_b = (parts.get("run", {}).get("memory", {})
+                  .get("argument_size_in_bytes", 0))
+        rows.append(dict(
+            arch=arch, shape=shape_name, opts=opts,
+            compute_s=t_c, memory_s=t_m, collective_s=t_n,
+            dominant=dom, model_flops=mf, hlo_flops=flops,
+            useful_ratio=useful, temp_gb=temp / 1e9,
+            args_gb=args_b / 1e9,
+            roofline_fraction=t_c / max(t_c, t_m, t_n),
+        ))
+    return rows
+
+
+def main():
+    rows = analyze()
+    hdr = ("arch,shape,opts,compute_s,memory_s,collective_s,dominant,"
+           "useful_ratio,roofline_frac,temp_GB,args_GB")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']},{r['shape']},{r['opts'] or 'baseline'},"
+              f"{r['compute_s']:.4f},"
+              f"{r['memory_s']:.4f},{r['collective_s']:.4f},"
+              f"{r['dominant']},{r['useful_ratio']:.3f},"
+              f"{r['roofline_fraction']:.3f},{r['temp_gb']:.1f},"
+              f"{r['args_gb']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

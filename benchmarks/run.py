@@ -1,0 +1,43 @@
+"""Benchmark aggregator: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run table2 fig8 # subset
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    which = set(sys.argv[1:]) or {"table2", "table2sim", "fig5", "fig6",
+                                  "fig8", "fig9", "roofline"}
+    print("name,us_per_call,derived")
+    if "table2" in which:
+        from . import table2_strategies
+        table2_strategies.run()
+    if "table2sim" in which:
+        from . import table2_simulated
+        table2_simulated.run()
+    if "fig5" in which:
+        from . import fig5_load_distribution
+        fig5_load_distribution.run()
+    if "fig6" in which:
+        from . import fig6_scaling
+        fig6_scaling.run()
+    if "fig8" in which:
+        from . import fig8_cyclic_blocked
+        fig8_cyclic_blocked.run()
+    if "fig9" in which:
+        from . import fig9_partition
+        fig9_partition.run()
+    if "roofline" in which:
+        from . import roofline
+        try:
+            roofline.main()
+        except Exception as e:       # artifacts may not exist yet
+            print(f"roofline,0,skipped ({e})")
+
+
+if __name__ == "__main__":
+    main()

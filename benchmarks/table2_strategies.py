@@ -1,0 +1,48 @@
+"""Table 2 analogue: execution time per (input x app x strategy).
+
+The paper's headline: ALB ~matches TWC on flat inputs (road, orkut)
+and beats it up to 4x on power-law inputs (rmat*).
+"""
+from __future__ import annotations
+
+from repro.core.balancer import BalancerConfig
+from repro.core import graph as G
+from repro.core.apps import bfs, sssp, cc, kcore, pagerank
+
+from .common import bench_graphs, symmetrized, timed, emit
+
+STRATEGIES = ["vertex", "twc", "edge_lb", "alb"]
+THRESHOLD = 1024
+
+
+def run(scale: int = 13):
+    graphs = bench_graphs(scale)
+    rows = {}
+    for gname, g in graphs.items():
+        src = (G.highest_out_degree_vertex(g) if gname != "road" else 0)
+        sym = symmetrized(g)
+        for strat in STRATEGIES:
+            cfg = BalancerConfig(strategy=strat, threshold=THRESHOLD)
+            apps = {
+                "bfs": lambda: bfs(g, src, cfg, max_rounds=200),
+                "sssp": lambda: sssp(g, src, cfg, max_rounds=200),
+                "cc": lambda: cc(sym, cfg, max_rounds=200),
+                "kcore": lambda: kcore(sym, 10, cfg, max_rounds=200),
+                "pr": lambda: pagerank(g, cfg=cfg, max_rounds=20,
+                                       tol=0.0),
+            }
+            for aname, fn in apps.items():
+                secs = timed(fn, repeats=3)
+                rows[(gname, aname, strat)] = secs
+                emit(f"table2/{gname}/{aname}/{strat}", secs)
+    # derived: ALB speedup vs TWC per cell (the paper's metric)
+    for (gname, aname), _ in {(k[0], k[1]): None for k in rows}.items():
+        twc = rows[(gname, aname, "twc")]
+        alb = rows[(gname, aname, "alb")]
+        emit(f"table2/{gname}/{aname}/alb_speedup_vs_twc", alb,
+             f"speedup={twc / alb:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Regenerate the EXPERIMENTS.md dry-run table from artifacts/dryrun."""
+import glob, json, sys
+
+def main(art='artifacts/dryrun'):
+    rows = []
+    for f in sorted(glob.glob(f'{art}/*.json')):
+        if f.endswith('__cost.json'):
+            continue
+        d = json.load(open(f))
+        m = d['memory']
+        rows.append((d['arch'], d['shape'], d['mesh'],
+                     m['argument_size_in_bytes'] / 1e9,
+                     m['temp_size_in_bytes'] / 1e9,
+                     d['collectives']['total_bytes'] / 1e9,
+                     d['collectives']['counts'], d['compile_s']))
+    print('| arch | shape | mesh | args GB/dev | temp GB/dev | '
+          'coll GB/dev | compile s |')
+    print('|---|---|---|---|---|---|---|')
+    for r in rows:
+        print(f'| {r[0]} | {r[1]} | {r[2]} | {r[3]:.2f} | {r[4]:.2f} '
+              f'| {r[5]:.2f} | {r[7]:.0f} |')
+    print(f'\n{len(rows)} cells, all compiled OK.')
+
+if __name__ == '__main__':
+    main(*sys.argv[1:])

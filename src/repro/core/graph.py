@@ -1,0 +1,193 @@
+"""CSR graph container + synthetic graph generators.
+
+The paper evaluates on RMAT power-law graphs, social networks (orkut,
+twitter40), and road networks (road-USA).  We generate structurally
+equivalent synthetic inputs: RMAT (power-law out-degree), a 2-D grid
+"road" network (constant low degree, huge diameter), and a uniform
+random graph (Erdos-Renyi-ish).
+
+The device-resident representation is CSR (row_ptr, col_idx, edge_w),
+exactly as in the paper (Section 4.1: "like most systems in this space,
+our system uses a CSR representation of the graph to save space").
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel "infinity" for int32 distance labels.  We avoid INT32_MAX so
+# that INF + weight does not wrap around.
+INF = np.int32(1 << 30)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Device-resident CSR graph.
+
+    row_ptr : int32[V+1]   prefix of out-degrees
+    col_idx : int32[E]     destination vertex of each edge
+    edge_w  : int32[E]     edge weights (all-ones for unweighted apps)
+    """
+
+    row_ptr: jax.Array
+    col_idx: jax.Array
+    edge_w: jax.Array
+
+    # ---- pytree plumbing -------------------------------------------------
+    def tree_flatten(self):
+        return (self.row_ptr, self.col_idx, self.edge_w), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # ---- basic properties ------------------------------------------------
+    @property
+    def num_vertices(self) -> int:
+        return self.row_ptr.shape[0] - 1
+
+    @property
+    def num_edges(self) -> int:
+        return self.col_idx.shape[0]
+
+    def out_degrees(self) -> jax.Array:
+        return self.row_ptr[1:] - self.row_ptr[:-1]
+
+    def max_out_degree(self) -> int:
+        return int(jnp.max(self.out_degrees()))
+
+
+# ---------------------------------------------------------------------------
+# Construction helpers (host side, numpy).
+# ---------------------------------------------------------------------------
+
+def from_edge_list(src: np.ndarray, dst: np.ndarray, num_vertices: int,
+                   weights: np.ndarray | None = None,
+                   dedup: bool = True) -> Graph:
+    """Build a CSR Graph from a COO edge list (host-side)."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if dedup and len(src):
+        key = src * np.int64(num_vertices) + dst
+        _, keep = np.unique(key, return_index=True)
+        src, dst = src[keep], dst[keep]
+        if weights is not None:
+            weights = np.asarray(weights)[keep]
+    order = np.lexsort((dst, src))
+    src, dst = src[order], dst[order]
+    if weights is None:
+        weights = np.ones(len(src), dtype=np.int32)
+    else:
+        weights = np.asarray(weights, dtype=np.int32)[order]
+    counts = np.bincount(src, minlength=num_vertices).astype(np.int32)
+    row_ptr = np.zeros(num_vertices + 1, dtype=np.int32)
+    np.cumsum(counts, out=row_ptr[1:])
+    return Graph(
+        row_ptr=jnp.asarray(row_ptr),
+        col_idx=jnp.asarray(dst.astype(np.int32)),
+        edge_w=jnp.asarray(weights),
+    )
+
+
+def rmat(scale: int, edge_factor: int = 16, seed: int = 0,
+         a: float = 0.57, b: float = 0.19, c: float = 0.19,
+         weighted: bool = True, max_weight: int = 100) -> Graph:
+    """RMAT generator (Chakrabarti et al.), the paper's power-law inputs.
+
+    Produces ~2**scale vertices, edge_factor * 2**scale directed edges
+    with a power-law out-degree distribution (a-heavy corner => vertex 0
+    region accumulates huge out-degree, mirroring rmat23's 35M max Dout).
+    """
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = edge_factor * n
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    ab, abc = a + b, a + b + c
+    for bit in range(scale):
+        r = rng.random(m)
+        # pick quadrant: 0=a 1=b 2=c 3=d
+        quad = np.select(
+            [r < a, r < ab, r < abc], [0, 1, 2], default=3)
+        src = (src << 1) | (quad >= 2)
+        dst = (dst << 1) | (quad & 1)
+    w = rng.integers(1, max_weight + 1, size=m) if weighted else None
+    return from_edge_list(src, dst, n, weights=w)
+
+
+def road_grid(side: int, seed: int = 0, weighted: bool = True,
+              max_weight: int = 100) -> Graph:
+    """2-D grid graph: constant degree <= 4, diameter 2*side.
+
+    Structural stand-in for road-USA (max degree 9, diameter 6261).
+    """
+    rng = np.random.default_rng(seed)
+    n = side * side
+    vs = np.arange(n).reshape(side, side)
+    srcs, dsts = [], []
+    # bidirectional horizontal + vertical edges
+    srcs += [vs[:, :-1].ravel(), vs[:, 1:].ravel(),
+             vs[:-1, :].ravel(), vs[1:, :].ravel()]
+    dsts += [vs[:, 1:].ravel(), vs[:, :-1].ravel(),
+             vs[1:, :].ravel(), vs[:-1, :].ravel()]
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
+    w = rng.integers(1, max_weight + 1, size=len(src)) if weighted else None
+    return from_edge_list(src, dst, n, weights=w)
+
+
+def uniform_random(num_vertices: int, avg_degree: int = 8, seed: int = 0,
+                   weighted: bool = True, max_weight: int = 100) -> Graph:
+    """Uniform random digraph (no skew) — the balanced control input."""
+    rng = np.random.default_rng(seed)
+    m = num_vertices * avg_degree
+    src = rng.integers(0, num_vertices, size=m)
+    dst = rng.integers(0, num_vertices, size=m)
+    w = rng.integers(1, max_weight + 1, size=m) if weighted else None
+    return from_edge_list(src, dst, num_vertices, weights=w)
+
+
+def reverse_graph(g: Graph) -> Graph:
+    """CSC view (incoming edges) as a CSR graph — used by pull operators."""
+    row_ptr = np.asarray(g.row_ptr)
+    col = np.asarray(g.col_idx)
+    w = np.asarray(g.edge_w)
+    n = g.num_vertices
+    src = np.repeat(np.arange(n, dtype=np.int64),
+                    (row_ptr[1:] - row_ptr[:-1]).astype(np.int64))
+    return from_edge_list(col.astype(np.int64), src, n, weights=w,
+                          dedup=False)
+
+
+def highest_out_degree_vertex(g: Graph) -> int:
+    """Paper's bfs/sssp source for power-law graphs."""
+    return int(jnp.argmax(g.out_degrees()))
+
+
+# ---------------------------------------------------------------------------
+# Padding: devices want power-of-two-ish aligned arrays.
+# ---------------------------------------------------------------------------
+
+def pad_graph(g: Graph, v_multiple: int = 8, e_multiple: int = 1024) -> Graph:
+    """Pad V and E to multiples so Pallas BlockSpecs tile cleanly.
+
+    Padded vertices have degree 0; padded edges point at a padded vertex
+    with INF-ish weight so they can never win a relaxation.
+    """
+    v, e = g.num_vertices, g.num_edges
+    vp = -(-v // v_multiple) * v_multiple
+    ep = -(-e // e_multiple) * e_multiple
+    if vp == v and ep == e:
+        return g
+    row_ptr = jnp.concatenate(
+        [g.row_ptr, jnp.full((vp - v,), g.row_ptr[-1], dtype=jnp.int32)])
+    col_idx = jnp.concatenate(
+        [g.col_idx, jnp.full((ep - e,), max(vp - 1, 0), dtype=jnp.int32)])
+    edge_w = jnp.concatenate(
+        [g.edge_w, jnp.full((ep - e,), INF, dtype=jnp.int32)])
+    return Graph(row_ptr=row_ptr, col_idx=col_idx, edge_w=edge_w)

@@ -1,0 +1,50 @@
+"""Operator algebra for vertex programs.
+
+A vertex program round applies an *operator* along edges of active
+vertices (Section 2.1 of the paper).  We factor an operator into:
+
+* ``direction``: ``push`` (value flows src -> dst, scatter at dst) or
+  ``pull`` (value gathered from the neighbour, scatter at the anchor),
+* ``msg``: candidate from the propagated vertex value + edge weight,
+* ``combine``: how candidates merge at the target label (``min``/``add``).
+
+Operators are module-level singletons so jit caches key on identity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Operator:
+    name: str
+    direction: str                    # 'push' | 'pull'
+    combine: str                      # 'min'  | 'add'
+    msg: Callable                     # (value, weight) -> candidate
+    uses_weight: bool = True
+
+
+# sssp relaxation: dist[dst] = min(dist[dst], dist[src] + w)
+SSSP_RELAX = Operator("sssp_relax", "push", "min",
+                      lambda v, w: v + w)
+
+# bfs: level[dst] = min(level[dst], level[src] + 1)
+BFS_HOP = Operator("bfs_hop", "push", "min",
+                   lambda v, w: v + 1, uses_weight=False)
+
+# connected components (label propagation on symmetrized graph):
+# comp[dst] = min(comp[dst], comp[src])
+CC_MIN = Operator("cc_min", "push", "min",
+                  lambda v, w: v, uses_weight=False)
+
+# kcore: when a vertex dies, its (symmetrized) neighbours lose a degree
+KCORE_DEC = Operator("kcore_dec", "push", "add",
+                     lambda v, w: jnp.full_like(v, -1), uses_weight=False)
+
+# pagerank (pull): acc[v] += contrib[u] for in-neighbours u; the per-
+# vertex contribution rank[u]/outdeg[u] is precomputed as the value.
+PR_PULL = Operator("pr_pull", "pull", "add",
+                   lambda v, w: v, uses_weight=False)

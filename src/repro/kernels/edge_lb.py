@@ -1,0 +1,127 @@
+"""Pallas TPU kernel for the LB executor (the paper's SSSP_LB kernel).
+
+The kernel implements the edge-balanced renumbering: given the huge
+vertices' exclusive degree prefix sum (``start_e``), their CSR row
+starts and propagated values, every grid step processes one tile of
+global edge ids and recovers, per edge,
+
+    j        = searchsorted(start_e, eid)      (binary search, Fig. 4)
+    graph_e  = row_start[j] + (eid - start_e[j])
+    src, val = vertex id and propagated value of slot j
+
+GPU -> TPU mapping: one grid step = one "thread block"; the (R, 128)
+edge tile = the block's lanes.  The ``cyclic`` distribution gives every
+grid step a *contiguous* run of edge ids, so neighbouring lanes binary-
+search for neighbouring ids (same root->leaf path: VPU-uniform, one
+VMEM line of ``start_e`` per step) and the subsequent ``col_idx``
+gathers are coalesced.  ``blocked`` strides lane ids by ``w_per``,
+destroying both properties — the paper's Figure 4/8 comparison.
+
+The prefix/row/value arrays of the huge bin are small (a few thousand
+entries at most: huge vertices are rare by definition), so each grid
+step keeps them whole in VMEM — the TPU realization of the paper's
+"binary search path stays in cache" argument.
+
+The heavy irregular traffic (col_idx[graph_e] gathers from HBM and the
+scatter-min into the label array) is left to XLA's native gather /
+scatter-min, which the TPU does well; the kernel produces the
+(graph_e, src, val) triples.  Validated with interpret=True vs ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(start_ref, row_ref, val_ref, total_ref,
+            ge_ref, src_ref, val_out_ref, msk_ref,
+            *, tile_r: int, distribution: str, w_per: int,
+            num_tiles: int, h: int):
+    i = pl.program_id(0)
+    tile = tile_r * 128
+    # ---- edge ids for this tile -------------------------------------
+    lin = (jax.lax.broadcasted_iota(jnp.int32, (tile_r, 128), 0) * 128
+           + jax.lax.broadcasted_iota(jnp.int32, (tile_r, 128), 1))
+    eid0 = i * tile + lin
+    if distribution == "blocked":
+        eid = (eid0 % num_tiles) * w_per + eid0 // num_tiles
+    else:  # cyclic: contiguous ids per tile (lane-major)
+        eid = eid0
+    total = total_ref[0, 0]
+    emask = eid < total
+    eid_c = jnp.where(emask, eid, 0)
+
+    start_e = start_ref[0, :]                      # [H] whole, in VMEM
+    row_start = row_ref[0, :]
+    hval = val_ref[0, :]
+
+    # ---- vectorized binary search (searchsorted right - 1) ----------
+    # fixed trip count log2(H); all lanes walk the same depth
+    lo = jnp.zeros_like(eid_c)
+    hi = jnp.full_like(eid_c, h)                   # search in [lo, hi)
+    steps = max(1, (h - 1).bit_length())
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi) // 2
+        pivot = jnp.take(start_e, mid)
+        go_right = pivot <= eid_c
+        return (jnp.where(go_right, mid + 1, lo),
+                jnp.where(go_right, hi, mid))
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    j = jnp.clip(lo - 1, 0, h - 1)
+
+    ge_ref[...] = jnp.where(emask,
+                            jnp.take(row_start, j)
+                            + (eid_c - jnp.take(start_e, j)), 0)
+    src_ref[...] = j
+    val_out_ref[...] = jnp.take(hval, j)
+    msk_ref[...] = emask.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_enum", "tile_edges", "distribution", "num_tiles",
+                     "interpret"))
+def edge_lb_map(start_e: jax.Array, row_start: jax.Array, hval: jax.Array,
+                total_edges: jax.Array, n_enum: int | None = None, *,
+                tile_edges: int = 2048, distribution: str = "cyclic",
+                num_tiles: int = 64, interpret: bool = True):
+    """Run the LB mapping kernel over ``n_enum`` edge ids.
+
+    Returns (graph_e, slot_j, src_val, mask) flat arrays of length
+    n_enum (= len span padded to the tile size).
+    """
+    h = start_e.shape[0]
+    if n_enum is None:
+        n_enum = h  # caller really should pass the edge span
+    tile_r = tile_edges // 128
+    assert tile_edges % 128 == 0
+    n_enum = -(-n_enum // tile_edges) * tile_edges
+    grid = n_enum // tile_edges
+    w_per = n_enum // num_tiles if n_enum % num_tiles == 0 \
+        else -(-n_enum // num_tiles)
+
+    out_shape = [
+        jax.ShapeDtypeStruct((grid * tile_r, 128), jnp.int32),  # graph_e
+        jax.ShapeDtypeStruct((grid * tile_r, 128), jnp.int32),  # slot j
+        jax.ShapeDtypeStruct((grid * tile_r, 128), hval.dtype),  # value
+        jax.ShapeDtypeStruct((grid * tile_r, 128), jnp.int32),  # mask
+    ]
+    kern = functools.partial(_kernel, tile_r=tile_r,
+                             distribution=distribution, w_per=w_per,
+                             num_tiles=num_tiles, h=h)
+    full = pl.BlockSpec((1, h), lambda i: (0, 0))
+    outs = pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[full, full, full, pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((tile_r, 128), lambda i: (i, 0))] * 4,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(start_e[None, :], row_start[None, :], hval[None, :],
+      total_edges.reshape(1, 1))
+    ge, j, val, msk = (o.reshape(-1) for o in outs)
+    return ge, j, val, msk.astype(bool)

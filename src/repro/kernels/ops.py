@@ -1,0 +1,64 @@
+"""jit'd wrappers: Pallas mapping kernels + XLA gather/scatter epilogue.
+
+These are the ``use_pallas=True`` implementations of the two hot paths
+in core/balancer.py.  The mapping (searchsorted / tile expansion) runs
+in the Pallas kernel; the irregular HBM traffic (col_idx gather,
+scatter-combine into labels) runs in XLA, which lowers it to native TPU
+gather/scatter — see edge_lb.py for the design rationale.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import edge_lb as _edge_lb
+from . import twc_gather as _twc
+
+
+def _apply(labels, target, cand, mask, combine):
+    v = labels.shape[0]
+    tgt = jnp.where(mask, target, v)
+    if combine == "min":
+        return labels.at[tgt].min(cand.astype(labels.dtype), mode="drop")
+    return labels.at[tgt].add(
+        jnp.where(mask, cand, 0).astype(labels.dtype), mode="drop")
+
+
+@partial(jax.jit,
+         static_argnames=("ecap", "op", "distribution", "tile_edges"))
+def edge_lb_apply(g, values, labels, hvidx, hdeg, hrow, total, ecap: int,
+                  op, distribution: str, tile_edges: int):
+    start_e = jnp.cumsum(hdeg) - hdeg
+    vsafe = jnp.where(hvidx < values.shape[0], hvidx, 0)
+    hval = values[vsafe]
+    ge, j, val, mask = _edge_lb.edge_lb_map(
+        start_e, hrow, hval, total, ecap,
+        tile_edges=tile_edges, distribution=distribution)
+    dst = g.col_idx[ge]
+    w = g.edge_w[ge]
+    if op.direction == "push":
+        cand = op.msg(val, w)
+        return _apply(labels, dst, cand, mask, op.combine)
+    src = jnp.where(hvidx.shape[0] > 0, hvidx[jnp.clip(j, 0, hvidx.shape[0] - 1)], 0)
+    cand = op.msg(values[dst], w)
+    return _apply(labels, src, cand, mask, op.combine)
+
+
+@partial(jax.jit, static_argnames=("width", "op", "chunk"))
+def twc_bin_apply(g, values, labels, bvidx, bdeg, brow, width: int, op,
+                  chunk: int):
+    sentinel = labels.shape[0]
+    vsafe = jnp.where(bvidx < values.shape[0], bvidx, 0)
+    bval = values[vsafe]
+    ge, anchor, val, mask = _twc.twc_bin_map(
+        bvidx, bdeg, brow, bval, width=width, chunk=chunk,
+        sentinel=sentinel)
+    dst = g.col_idx[ge]
+    w = g.edge_w[ge]
+    if op.direction == "push":
+        cand = op.msg(val, w)
+        return _apply(labels, dst, cand, mask, op.combine)
+    cand = op.msg(values[dst], w)
+    return _apply(labels, anchor, cand, mask, op.combine)

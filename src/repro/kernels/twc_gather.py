@@ -1,0 +1,76 @@
+"""Pallas TPU kernel for the vertex-binned (TWC-analog) path.
+
+Each grid step processes a tile of ``tile_v`` frontier vertices from one
+degree bin; the bin's uniform width ``W`` is the lane dimension, so the
+inner trip count is identical across lanes (the TPU analogue of the
+warp-uniform execution TWC buys on GPUs).  Emits (graph_e, anchor, val,
+mask) tiles; gather/scatter is applied outside by XLA (see edge_lb.py
+for the rationale).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(vidx_ref, deg_ref, row_ref, val_ref,
+            ge_ref, anchor_ref, val_out_ref, msk_ref,
+            *, width: int, chunk: int, sentinel: int):
+    deg = deg_ref[0, :]                        # [tile_v]
+    row = row_ref[0, :]
+    vid = vidx_ref[0, :]
+    val = val_ref[0, :]
+    off = (chunk * width
+           + jax.lax.broadcasted_iota(jnp.int32, (deg.shape[0], width), 1))
+    emask = (off < deg[:, None]) & (vid[:, None] < sentinel)
+    ge_ref[...] = jnp.where(emask, row[:, None] + off, 0)
+    anchor_ref[...] = jnp.broadcast_to(vid[:, None], emask.shape)
+    val_out_ref[...] = jnp.broadcast_to(val[:, None], emask.shape)
+    msk_ref[...] = emask.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("width", "chunk", "tile_v", "sentinel", "interpret"))
+def twc_bin_map(vidx: jax.Array, deg: jax.Array, row_start: jax.Array,
+                val: jax.Array, *, width: int, chunk: int = 0,
+                tile_v: int = 8, sentinel: int = 1 << 30,
+                interpret: bool = True):
+    """Expand one degree bin into (graph_e, anchor, val, mask) tiles."""
+    b = vidx.shape[0]
+    bp = -(-b // tile_v) * tile_v
+    pad = bp - b
+    if pad:
+        vidx = jnp.pad(vidx, (0, pad), constant_values=sentinel)
+        deg = jnp.pad(deg, (0, pad))
+        row_start = jnp.pad(row_start, (0, pad))
+        val = jnp.pad(val, (0, pad))
+    grid = bp // tile_v
+    # lane dim must be 128-aligned for the MXU/VPU; widths are powers of
+    # two >= 8 in our configs, pad up when narrow.
+    wp = max(width, 128) if width % 128 else width
+    kern = functools.partial(_kernel, width=wp, chunk=chunk,
+                             sentinel=sentinel)
+    vec = pl.BlockSpec((1, tile_v), lambda i: (0, i))
+    out_shape = [
+        jax.ShapeDtypeStruct((bp, wp), jnp.int32),
+        jax.ShapeDtypeStruct((bp, wp), jnp.int32),
+        jax.ShapeDtypeStruct((bp, wp), val.dtype),
+        jax.ShapeDtypeStruct((bp, wp), jnp.int32),
+    ]
+    outs = pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[vec, vec, vec, vec],
+        out_specs=[pl.BlockSpec((tile_v, wp), lambda i: (i, 0))] * 4,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(vidx[None, :], deg[None, :], row_start[None, :], val[None, :])
+    ge, anchor, v, msk = outs
+    if wp != width:
+        # only the first `width` lanes are real when width < 128
+        ge, anchor, v, msk = (x[:, :width] for x in (ge, anchor, v, msk))
+    return ge, anchor, v, msk.astype(bool)

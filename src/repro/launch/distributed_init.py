@@ -1,0 +1,54 @@
+"""Multi-host bootstrap for real TPU pods.
+
+On a real v5e pod slice each host runs the same program;
+``jax.distributed.initialize`` wires them together.  This module reads
+the standard launcher environment (GKE/TPU-VM or SLURM) and must be
+called BEFORE any other jax API touches the backend.
+
+Elastic restarts: the coordinator address is stable across restarts
+(headless service / node 0); a restarted job re-initializes with a
+possibly different ``num_processes`` and the checkpoint layer reshapes
+(checkpoints store logical arrays, see checkpoint/ckpt.py).
+"""
+from __future__ import annotations
+
+import os
+
+
+def maybe_initialize_distributed() -> bool:
+    """Initialize jax.distributed from the environment; returns True if
+    multi-host mode was set up, False for single-host (no-op)."""
+    import jax
+
+    coord = os.environ.get("REPRO_COORDINATOR")      # host:port
+    if coord is None and "SLURM_JOB_NODELIST" in os.environ:
+        # SLURM: node 0 of the allocation is the coordinator
+        first = os.environ["SLURM_JOB_NODELIST"].split(",")[0]
+        first = first.split("[")[0] + \
+            os.environ.get("SLURM_NODELIST_SUFFIX", "")
+        coord = f"{first}:8476"
+    if coord is None:
+        return False
+
+    num_procs = int(os.environ.get(
+        "REPRO_NUM_PROCESSES",
+        os.environ.get("SLURM_NTASKS", "1")))
+    proc_id = int(os.environ.get(
+        "REPRO_PROCESS_ID",
+        os.environ.get("SLURM_PROCID", "0")))
+    jax.distributed.initialize(coordinator_address=coord,
+                               num_processes=num_procs,
+                               process_id=proc_id)
+    return True
+
+
+def global_batch_slice(global_batch: int):
+    """Rows of the global batch owned by this host (deterministic:
+    pure function of process index, replay-safe across restarts)."""
+    import jax
+
+    nproc = jax.process_count()
+    assert global_batch % nproc == 0, (global_batch, nproc)
+    per = global_batch // nproc
+    start = jax.process_index() * per
+    return slice(start, start + per)

@@ -1,0 +1,355 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves the distribution config is coherent on the
+production mesh (16×16 single-pod / 2×16×16 multi-pod) and extracts the
+artifacts the roofline analysis reads:
+
+* ``compiled.memory_analysis()``  — bytes per device (fits/doesn't),
+* ``compiled.cost_analysis()``    — FLOPs + HBM bytes (per device,
+  post-SPMD-partitioning),
+* collective bytes parsed from the partitioned HLO text (all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all            # subprocess per cell
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, get_config, shape_by_name,
+                           applicable_shapes)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.launch import sharding as SH
+from repro.models import transformer as T
+from repro.optim import OptConfig, adamw_init
+from repro.train.steps import make_train_step, make_prefill_step, \
+    make_decode_step
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one 'dtype[dims]' group."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-operand bytes of each collective op kind (per device,
+    since the module is the SPMD-partitioned one)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for kind in _COLLECTIVES:
+            # match '= <shape> kind(' — the op result type precedes name
+            if f" {kind}(" in ls or f" {kind}-start(" in ls:
+                lhs = ls.split("=", 1)
+                if len(lhs) != 2:
+                    continue
+                rhs = lhs[1]
+                shape_part = rhs.split(kind)[0]
+                out[kind] += _shape_bytes(shape_part)
+                counts[kind] += 1
+                break
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+VARIANT_FLAGS = ("expert_fsdp", "master_bf16", "seqpar", "logits_bf16",
+                 "moe_data", "moe_group")
+
+
+def build_lowered(arch: str, shape_name: str, multi_pod: bool,
+                  cfg_override=None, unroll: bool = False,
+                  opts: frozenset = frozenset()):
+    for o in opts:
+        assert o in VARIANT_FLAGS, o
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = shape_by_name(shape_name)
+    if "moe_group" in opts and cfg.moe is not None:
+        import dataclasses
+        groups = 32 if multi_pod else 16      # = data axes size
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=groups))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shard_fn = SH.make_shard_fn(mesh, multi_pod,
+                                seqpar="seqpar" in opts,
+                                moe_data="moe_data" in opts)
+    specs = input_specs(cfg, shape)
+    T.set_logits_dtype(jnp.bfloat16 if "logits_bf16" in opts
+                       else jnp.float32)
+
+    params_shape = jax.eval_shape(partial(T.init, cfg=cfg),
+                                  jax.random.PRNGKey(0))
+    if "master_bf16" in opts:
+        params_shape = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct(
+                sd.shape, jnp.bfloat16 if len(sd.shape) > 1
+                else sd.dtype), params_shape)
+    pspec = SH.param_specs(params_shape,
+                           expert_fsdp="expert_fsdp" in opts)
+    psh = named(mesh, pspec)
+    dp = SH.dp_axes_for(multi_pod, shape.global_batch)
+
+    with mesh:
+        if shape.kind == "train":
+            master = "master_bf16" in opts
+            opt_shape = jax.eval_shape(
+                partial(adamw_init, master_weights=master), params_shape)
+            osh = named(mesh, SH.opt_specs(pspec, master_weights=master))
+            bsh = named(mesh, SH.batch_specs(
+                multi_pod, cfg.num_codebooks,
+                with_prefix=cfg.prefix_len > 0,
+                global_batch=shape.global_batch))
+            step = make_train_step(cfg, OptConfig(master_weights=master),
+                                   shard_fn, unroll=unroll)
+            lowered = jax.jit(
+                step,
+                in_shardings=(psh, osh, bsh),
+                out_shardings=(psh, osh,
+                               named(mesh, {"loss": P(), "ce": P(),
+                                            "grad_norm": P()})),
+            ).lower(params_shape, opt_shape, specs)
+        elif shape.kind == "prefill":
+            csh = named(mesh, SH.cache_specs(
+                cfg, multi_pod, shape.global_batch, shape.seq_len))
+            tok_sh = NamedSharding(
+                mesh, P(dp, *([None] * (1 if cfg.num_codebooks == 1
+                                        else 2))))
+            logits_spec = (P(dp, None, None) if cfg.num_codebooks == 1
+                           else P(dp, None, None, None))
+            step = make_prefill_step(cfg, shard_fn, unroll=unroll)
+            lowered = jax.jit(
+                step,
+                in_shardings=(psh, tok_sh, csh),
+                out_shardings=(NamedSharding(mesh, logits_spec), csh),
+            ).lower(params_shape, specs["tokens"], specs["cache"])
+        else:  # decode
+            csh = named(mesh, SH.cache_specs(
+                cfg, multi_pod, shape.global_batch, shape.seq_len))
+            tok_sh = NamedSharding(
+                mesh, P(dp, *([None] * (1 if cfg.num_codebooks == 1
+                                        else 2))))
+            logits_spec = (P(dp, None, None) if cfg.num_codebooks == 1
+                           else P(dp, None, None, None))
+            step = make_decode_step(cfg, shard_fn, unroll=unroll)
+            lowered = jax.jit(
+                step,
+                in_shardings=(psh, tok_sh, csh),
+                out_shardings=(NamedSharding(mesh, logits_spec), csh),
+            ).lower(params_shape, specs["token"], specs["cache"])
+    return lowered, mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None, save_hlo: bool = False,
+             opts: frozenset = frozenset()) -> dict:
+    t0 = time.time()
+    lowered, mesh = build_lowered(arch, shape_name, multi_pod,
+                                  opts=opts)
+    t_lower = time.time() - t0
+    with mesh:
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = dict(compiled.memory_analysis().__dict__) \
+        if hasattr(compiled.memory_analysis(), "__dict__") else {}
+    ma = compiled.memory_analysis()
+    mem = {k: int(getattr(ma, k)) for k in
+           ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes")
+           if hasattr(ma, k)}
+    cost = compiled.cost_analysis()
+    cost = {k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float))} if cost else {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "opts": sorted(opts),
+        "devices": 512 if multi_pod else 256,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem,
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collectives": coll,
+        "ok": True,
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = ("__" + "-".join(sorted(opts))) if opts else ""
+        tag = f"{arch}__{shape_name}__{result['mesh']}{suffix}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+        if save_hlo:
+            with open(os.path.join(out_dir, tag + ".hlo"), "w") as f:
+                f.write(hlo)
+    return result
+
+
+def _cost_point(arch, shape_name, multi_pod, num_layers,
+                opts: frozenset = frozenset()):
+    """Lower an UNROLLED reduced-depth twin and return (flops, bytes,
+    collective_bytes) per device — one point of the linear-in-L model."""
+    import dataclasses
+    from repro.models import layers as LY
+    cfg = get_config(arch)
+    cfg = dataclasses.replace(cfg, num_layers=num_layers)
+    LY.set_attn_impl("plain")       # no scan: trip counts fully visible
+    try:
+        lowered, mesh = build_lowered(arch, shape_name, multi_pod,
+                                      cfg_override=cfg, unroll=True,
+                                      opts=opts)
+        with mesh:
+            compiled = lowered.compile()
+    finally:
+        LY.set_attn_impl("chunked")
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(coll["total_bytes"]))
+
+
+def cost_extract(arch: str, shape_name: str, multi_pod: bool,
+                 out_dir: str | None = None,
+                 opts: frozenset = frozenset()) -> dict:
+    """Two-point linear extrapolation of per-device FLOPs / HBM bytes /
+    collective bytes to the full layer count (scan bodies are counted
+    once by HloCostAnalysis, so the extraction lowers scan-free
+    unrolled twins at small L)."""
+    cfg = get_config(arch)
+    if cfg.family == "hybrid":
+        l1, l2 = cfg.attn_every, 2 * cfg.attn_every
+    else:
+        l1, l2 = 1, 2
+    f1, b1, c1 = _cost_point(arch, shape_name, multi_pod, l1, opts)
+    f2, b2, c2 = _cost_point(arch, shape_name, multi_pod, l2, opts)
+    n = cfg.num_layers
+    per_layer = ((f2 - f1) / (l2 - l1), (b2 - b1) / (l2 - l1),
+                 (c2 - c1) / (l2 - l1))
+    base = (f1 - per_layer[0] * l1, b1 - per_layer[1] * l1,
+            c1 - per_layer[2] * l1)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "opts": sorted(opts),
+        "flops_per_device": base[0] + per_layer[0] * n,
+        "hbm_bytes_per_device": base[1] + per_layer[1] * n,
+        "collective_bytes_per_device": base[2] + per_layer[2] * n,
+        "points": {"l": [l1, l2], "flops": [f1, f2],
+                   "bytes": [b1, b2], "coll": [c1, c2]},
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = ("__" + "-".join(sorted(opts))) if opts else ""
+        tag = f"{arch}__{shape_name}__{result['mesh']}{suffix}__cost"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def all_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            yield arch, shape.name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--cost-extract", action="store_true",
+                    help="extrapolated roofline terms instead of the "
+                         "full-depth compile")
+    ap.add_argument("--opts", default="",
+                    help="comma-separated variant flags: "
+                         + ",".join(VARIANT_FLAGS))
+    args = ap.parse_args()
+    opts = frozenset(o for o in args.opts.split(",") if o)
+
+    if args.all:
+        failures = []
+        for arch, shape in all_cells():
+            for mp in ([False, True] if args.both_meshes
+                       else [args.multi_pod]):
+                tag = f"{arch} {shape} {'2x16x16' if mp else '16x16'}"
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--out", args.out]
+                if mp:
+                    cmd.append("--multi-pod")
+                if args.save_hlo:
+                    cmd.append("--save-hlo")
+                if args.cost_extract:
+                    cmd.append("--cost-extract")
+                t0 = time.time()
+                r = subprocess.run(cmd, capture_output=True, text=True)
+                ok = r.returncode == 0
+                print(f"[{'OK' if ok else 'FAIL'}] {tag} "
+                      f"({time.time() - t0:.0f}s)", flush=True)
+                if not ok:
+                    failures.append((tag, r.stderr[-2000:]))
+        if failures:
+            for tag, err in failures:
+                print("FAILED:", tag, "\n", err)
+            sys.exit(1)
+        return
+
+    if args.cost_extract:
+        res = cost_extract(args.arch, args.shape, args.multi_pod,
+                           args.out, opts=opts)
+        print(json.dumps(res, indent=1))
+        return
+    res = run_cell(args.arch, args.shape, args.multi_pod, args.out,
+                   args.save_hlo, opts=opts)
+    print(json.dumps({k: v for k, v in res.items()
+                      if k != "collectives"}, indent=1))
+    print("collective bytes/dev:", res["collectives"]["total_bytes"],
+          res["collectives"]["counts"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""Sharding rules: param/cache/activation PartitionSpecs per arch.
+
+Megatron TP over ``model`` + FSDP-style parameter sharding over
+``data``; the ``pod`` axis carries pure data parallelism (params
+replicated across pods, gradients reduced over (pod, data)).
+
+Rules are path-based: each param leaf name maps to a spec for its
+TRAILING dims; leading dims (layer stacks, hybrid groups, codebooks,
+expert stacks handled explicitly) are padded with None.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+
+# trailing-dims spec per leaf name (non-MoE-expert params)
+_BASE_RULES = {
+    # embeddings / heads
+    "embed": ("model", "data"),
+    "lm_head": ("data", "model"),
+    # attention (gqa)
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    "bq": ("model",),
+    "bk": ("model",),
+    "bv": ("model",),
+    # attention (mla)
+    "wq_a": ("data", None),
+    "wq_b": (None, "model"),
+    "wkv_a": ("data", None),
+    "wkv_b": (None, "model"),
+    "q_norm": (None,),
+    "kv_norm": (None,),
+    # mlp
+    "w_up": ("data", "model"),
+    "w_gate": ("data", "model"),
+    "w_down": ("model", "data"),
+    # moe router
+    "router": ("data", None),
+    # mamba2
+    "w_in": ("data", "model"),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "a_log": (None,),
+    "dt_bias": (None,),
+    "d_skip": (None,),
+    "out_norm": ("model",),
+    "w_out": ("model", "data"),
+    # norms
+    "norm": (None,),
+    "norm1": (None,),
+    "norm2": (None,),
+    "final_norm": (None,),
+}
+
+# expert-stacked MoE params: leading E dim is the expert-parallel axis
+_MOE_EXPERT_RULES = {
+    "w_gate": ("model", None, None),
+    "w_up": ("model", None, None),
+    "w_down": ("model", None, None),
+}
+
+
+def _path_str(path):
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _spec_for(path, leaf):
+    pstr = _path_str(path)
+    name = pstr.split("/")[-1]
+    in_moe = "/moe/" in f"/{pstr}/" and "/shared/" not in f"/{pstr}/"
+    if in_moe and name in _MOE_EXPERT_RULES:
+        base = _MOE_EXPERT_RULES[name]
+    elif name in _BASE_RULES:
+        base = _BASE_RULES[name]
+    else:
+        base = ()
+    pad = leaf.ndim - len(base)
+    assert pad >= 0, f"{pstr}: rank {leaf.ndim} < rule {base}"
+    return P(*((None,) * pad + tuple(base)))
+
+
+_MOE_EXPERT_FSDP_RULES = {
+    # H1: experts additionally FSDP-sharded over data on d_model
+    "w_gate": ("model", "data", None),
+    "w_up": ("model", "data", None),
+    "w_down": ("model", None, "data"),
+}
+
+
+def param_specs(params_shape, expert_fsdp: bool = False):
+    """PartitionSpec pytree matching a params (shape) pytree."""
+    def spec(path, leaf):
+        if expert_fsdp:
+            pstr = _path_str(path)
+            name = pstr.split("/")[-1]
+            in_moe = "/moe/" in f"/{pstr}/" and "/shared/" not in                 f"/{pstr}/"
+            if in_moe and name in _MOE_EXPERT_FSDP_RULES:
+                base = _MOE_EXPERT_FSDP_RULES[name]
+                pad = leaf.ndim - len(base)
+                return P(*((None,) * pad + tuple(base)))
+        return _spec_for(path, leaf)
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def opt_specs(params_spec, master_weights: bool = False):
+    """Optimizer state mirrors param sharding; step is replicated."""
+    out = {"mu": params_spec, "nu": params_spec, "step": P()}
+    if master_weights:
+        out["master"] = params_spec
+    return out
+
+
+def dp_axes_for(multi_pod: bool, global_batch: int):
+    """Batch axes actually usable: long-context cells with batch 1
+    cannot shard batch — fall back to replication (TP-only posture)."""
+    dp = ("pod", "data") if multi_pod else ("data",)
+    size = 32 if multi_pod else 16
+    return dp if global_batch % size == 0 else None
+
+
+def batch_specs(multi_pod: bool, num_codebooks: int = 1,
+                with_prefix: bool = False, global_batch: int = 0):
+    dp = dp_axes_for(multi_pod, global_batch) if global_batch \
+        else (("pod", "data") if multi_pod else "data")
+    tok = P(dp, None) if num_codebooks == 1 else P(dp, None, None)
+    out = {"tokens": tok, "labels": tok}
+    if with_prefix:
+        out["prefix_emb"] = P(dp, None, None)
+    return out
+
+
+def cache_specs(cfg, multi_pod: bool, global_batch: int = 0,
+                seq_len: int = 0, model_size: int = 16):
+    """Decode-state sharding: batch over data axes; heads over model
+    when the head count divides the model axis, else the SEQUENCE dim
+    (sequence-parallel KV cache — the GQA-few-heads / MQA fallback)."""
+    dp = dp_axes_for(multi_pod, global_batch) if global_batch \
+        else (("pod", "data") if multi_pod else "data")
+    kv_ok = cfg.num_kv_heads % model_size == 0 and cfg.num_kv_heads > 0
+    seq_ok = seq_len % model_size == 0 and seq_len > 0
+
+    def leaf_spec(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        if name == "index":
+            return P()
+        nd = leaf.ndim
+        if name in ("k", "v"):            # [L?, B, S, Hkv, hd]
+            if kv_ok:
+                base = (dp, None, "model", None)
+            elif seq_ok:
+                base = (dp, "model", None, None)
+            else:
+                base = (dp, None, None, None)
+        elif name == "ckv":               # [L, B, S, r]
+            base = (dp, "model" if seq_ok else None, None)
+        elif name == "k_rope":            # [L, B, S, 1, rope]
+            base = (dp, "model" if seq_ok else None, None, None)
+        elif name == "h":                 # [G?, L?, B, H, P, N]
+            base = (dp, "model", None, None)
+        elif name == "conv":              # [G?, L?, B, k-1, C]
+            base = (dp, None, "model")
+        else:
+            base = (dp,)
+        pad = nd - len(base)
+        return P(*((None,) * pad + tuple(base)))
+
+    import repro.models.transformer as T
+    shapes = T.init_cache(cfg, 1, 1)
+    return jax.tree_util.tree_map_with_path(leaf_spec, shapes)
+
+
+def make_shard_fn(mesh, multi_pod: bool, seqpar: bool = False,
+                  moe_data: bool = False, dp_override=...):
+    """Activation constrainer injected into the model.
+
+    seqpar (H3): residual-stream activations are sharded over `model`
+    on the SEQUENCE dim between blocks (Megatron sequence parallelism)
+    so GSPMD replaces the per-block all-reduce with a reduce-scatter +
+    all-gather pair — half the bytes on the wire.
+    """
+    dp = (("pod", "data") if multi_pod else "data")         if dp_override is ... else dp_override
+    model_size = mesh.shape["model"]
+
+    data_size = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+
+    def shard_fn(name, x):
+        if name == "moe_tok":
+            # [G, TgK, D] / [G, TgK]: group dim rides the data axes
+            if x.shape[0] % data_size == 0 and x.shape[0] > 1:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(
+                        mesh, P(dp, *([None] * (x.ndim - 1)))))
+            return x
+        if name == "moe_buf":
+            if x.ndim == 4:
+                # grouped dispatch [G, E, C, D]: groups ride data,
+                # experts ride model
+                if x.shape[0] % data_size == 0 or x.shape[0] == 1:
+                    gspec = dp if x.shape[0] > 1 else None
+                    return jax.lax.with_sharding_constraint(
+                        x, NamedSharding(mesh,
+                                         P(gspec, "model", None, None)))
+                return x
+            # ungrouped [E, C, D] + moe_data: capacity dim over data
+            if moe_data and x.shape[1] % data_size == 0:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P("model", dp, None)))
+            return x
+        if (seqpar and x.ndim == 3 and x.shape[1] > 1
+                and x.shape[1] % model_size == 0):
+            spec = P(dp, "model", None)
+        elif x.ndim >= 3:
+            spec = P(dp, *([None] * (x.ndim - 1)))
+        else:
+            spec = P(dp, None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return shard_fn

@@ -1,0 +1,46 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run contract).
+
+No device allocation: everything here is abstract.  Modality frontends
+are stubs per the assignment — ``input_specs`` supplies precomputed
+patch embeddings (vlm) / token frames (audio) directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+
+
+def _tok_shape(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.num_codebooks > 1:
+        return (batch, seq, cfg.num_codebooks)
+    return (batch, seq)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract inputs for the step function selected by shape.kind."""
+    gb, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        text = s - cfg.prefix_len
+        specs = {
+            "tokens": jax.ShapeDtypeStruct(_tok_shape(cfg, gb, text), i32),
+            "labels": jax.ShapeDtypeStruct(_tok_shape(cfg, gb, text), i32),
+        }
+        if cfg.prefix_len:
+            specs["prefix_emb"] = jax.ShapeDtypeStruct(
+                (gb, cfg.prefix_len, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        return {
+            "tokens": jax.ShapeDtypeStruct(_tok_shape(cfg, gb, s), i32),
+            "cache": T.init_cache(cfg, gb, s),
+        }
+    if shape.kind == "decode":
+        return {
+            "token": jax.ShapeDtypeStruct(_tok_shape(cfg, gb, 1), i32),
+            "cache": T.init_cache(cfg, gb, s),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,334 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA & MLA attention,
+SwiGLU/GELU MLP — pure-JAX, sharding-friendly, KV-cache-capable.
+
+Conventions:
+* params are plain nested dicts of jnp arrays (f32 master copies),
+* compute runs in bf16 (mixed precision), reductions in f32,
+* attention is *chunked* (online softmax over KV blocks) so prefill at
+  32k lowers with O(seq) live memory; a Pallas flash kernel provides
+  the TPU fast path (kernels/flash_attention.py).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale or 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# normalization + rope
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]                 # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked causal attention (online softmax) — O(S) memory at any length
+# ---------------------------------------------------------------------------
+
+# 'chunked' (scan over KV blocks) is the production path; 'plain'
+# (materialized scores, no scan) exists for the dry-run cost extraction:
+# XLA's HloCostAnalysis counts a scan body ONCE regardless of trip
+# count, so roofline FLOPs/bytes are extracted from scan-free lowerings
+# (see launch/dryrun.py --cost-extract) and the scanned lowering is used
+# for the memory/runnability proof.
+_ATTN_IMPL = "chunked"
+
+
+def set_attn_impl(impl: str):
+    global _ATTN_IMPL
+    assert impl in ("chunked", "plain")
+    _ATTN_IMPL = impl
+
+
+def plain_attention(q, k, v, *, causal: bool, q_offset=0,
+                    kv_len: Optional[jax.Array] = None, chunk: int = 0):
+    """Reference attention with materialized scores (no lax.scan)."""
+    b, sq, h, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    vd = v.shape[-1]
+    g = h // hkv
+    qh = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(b, sq, hkv, g, hd)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qh, k.astype(jnp.float32))
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    if kv_len is not None:
+        mask = mask & (kpos[None, :] < kv_len)
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, vd).astype(q.dtype)
+
+
+def attention(q, k, v, **kw):
+    if _ATTN_IMPL == "plain":
+        return plain_attention(q, k, v, **kw)
+    return chunked_attention(q, k, v, **kw)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
+                      kv_len: Optional[jax.Array] = None,
+                      chunk: int = 1024):
+    """q: [B, Sq, H, hd]; k/v: [B, Skv, Hkv, hd] (GQA: H % Hkv == 0).
+
+    Scans KV in blocks with running (max, sum, acc) — the flash
+    recurrence — so live memory is O(Sq * chunk) not O(Sq * Skv).
+    q_offset: position of q[0] within the kv sequence (decode: Skv-1).
+    kv_len: optional dynamic valid length of the kv cache.
+    """
+    b, sq, h, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    vd = v.shape[-1]                 # MLA: v head dim may differ from qk
+    g = h // hkv
+    qh = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(b, sq, hkv, g, hd)
+
+    nchunk = -(-skv // chunk)
+    pad = nchunk * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunk, chunk, hkv, hd)
+    vc = v.reshape(b, nchunk, chunk, hkv, vd)
+
+    qpos = q_offset + jnp.arange(sq)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kb, vb, cidx = blk
+        kpos = cidx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qh, kb.astype(jnp.float32))
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        if kv_len is not None:
+            mask = mask & (kpos[None, :] < kv_len)
+        if pad:
+            mask = mask & (kpos[None, :] < skv)
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        scale = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * scale + jnp.sum(p, axis=-1)
+        acc_new = (acc * scale[..., None]
+                   + jnp.einsum("bqkgc,bckd->bqkgd", p,
+                                vb.astype(jnp.float32)))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, hkv, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, hkv, g, vd), jnp.float32)
+    kc = jnp.moveaxis(kc, 1, 0)
+    vc = jnp.moveaxis(vc, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(nchunk)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, vd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg):
+    d, h, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h * hd)),
+        "wk": _dense_init(ks[1], (d, hkv * hd)),
+        "wv": _dense_init(ks[2], (d, hkv * hd)),
+        "wo": _dense_init(ks[3], (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * hd,), jnp.float32)
+    return p
+
+
+def gqa_apply(p, x, cfg, *, positions, cache=None, cache_index=None,
+              attn_chunk=1024):
+    """cache: optional dict {k: [B, Smax, Hkv, hd], v: ...}; when given
+    with cache_index, performs a decode/prefill update and returns
+    (out, new_cache)."""
+    b, s, d = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    xc = x.astype(COMPUTE_DTYPE)
+    q = xc @ p["wq"].astype(COMPUTE_DTYPE)
+    k = xc @ p["wk"].astype(COMPUTE_DTYPE)
+    v = xc @ p["wv"].astype(COMPUTE_DTYPE)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(COMPUTE_DTYPE)
+        k = k + p["bk"].astype(COMPUTE_DTYPE)
+        v = v + p["bv"].astype(COMPUTE_DTYPE)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is None:
+        out = attention(q, k, v, causal=True, chunk=attn_chunk)
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        out = attention(q, ck, cv, causal=True,
+                        q_offset=cache_index,
+                        kv_len=cache_index + s, chunk=attn_chunk)
+    out = out.reshape(b, s, h * hd) @ p["wo"].astype(COMPUTE_DTYPE)
+    return out.astype(x.dtype), new_cache
+
+
+def gqa_cache_shape(cfg, batch, max_len, dtype=COMPUTE_DTYPE):
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {"k": jax.ShapeDtypeStruct((batch, max_len, hkv, hd), dtype),
+            "v": jax.ShapeDtypeStruct((batch, max_len, hkv, hd), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (MiniCPM3 / DeepSeek-V2): low-rank compressed Q and KV;
+# the decode cache stores only the compressed latent + rope key.
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg):
+    d, h = cfg.d_model, cfg.num_heads
+    m = cfg.mla
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": _dense_init(ks[0], (d, m.q_lora_rank)),
+        "wq_b": _dense_init(ks[1], (m.q_lora_rank, h * qk_dim)),
+        "wkv_a": _dense_init(ks[2], (d, m.kv_lora_rank
+                                     + m.qk_rope_head_dim)),
+        "wkv_b": _dense_init(ks[3], (m.kv_lora_rank,
+                                     h * (m.qk_nope_head_dim
+                                          + m.v_head_dim))),
+        "q_norm": jnp.zeros((m.q_lora_rank,), jnp.float32),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), jnp.float32),
+        "wo": _dense_init(ks[4], (h * m.v_head_dim, d)),
+    }
+
+
+def mla_apply(p, x, cfg, *, positions, cache=None, cache_index=None,
+              attn_chunk=1024):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    m = cfg.mla
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    xc = x.astype(COMPUTE_DTYPE)
+
+    cq = rms_norm(xc @ p["wq_a"].astype(COMPUTE_DTYPE), p["q_norm"],
+                  cfg.norm_eps)
+    q = (cq @ p["wq_b"].astype(COMPUTE_DTYPE)).reshape(b, s, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = xc @ p["wkv_a"].astype(COMPUTE_DTYPE)
+    ckv, k_rope = ckv_full[..., :m.kv_lora_rank], ckv_full[..., m.kv_lora_rank:]
+    ckv = rms_norm(ckv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)                   # [B,S,1,rope_d]
+
+    new_cache = None
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype),
+            (0, cache_index, 0))
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+            (0, cache_index, 0, 0))
+        new_cache = {"ckv": ckv, "k_rope": k_rope}
+        kv_len = cache_index + s
+        q_offset = cache_index
+    else:
+        kv_len = None
+        q_offset = 0
+
+    # decompress k/v from the latent (the FLOPs-for-memory trade MLA makes)
+    kv = (ckv @ p["wkv_b"].astype(COMPUTE_DTYPE)) \
+        .reshape(b, ckv.shape[1], h, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope,
+                                  (*k_nope.shape[:-1], rope_d))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = attention(q_full, k, v, causal=True, q_offset=q_offset,
+                    kv_len=kv_len, chunk=attn_chunk)
+    out = out.reshape(b, s, h * vd) @ p["wo"].astype(COMPUTE_DTYPE)
+    return out.astype(x.dtype), new_cache
+
+
+def mla_cache_shape(cfg, batch, max_len, dtype=COMPUTE_DTYPE):
+    m = cfg.mla
+    return {
+        "ckv": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, max_len, 1,
+                                        m.qk_rope_head_dim), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, act: str):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": _dense_init(ks[0], (d_model, d_ff)),
+         "w_down": _dense_init(ks[1], (d_ff, d_model))}
+    if act == "silu":                      # swiglu needs the gate proj
+        p["w_gate"] = _dense_init(ks[2], (d_model, d_ff))
+    return p
+
+
+def mlp_apply(p, x, act: str):
+    xc = x.astype(COMPUTE_DTYPE)
+    up = xc @ p["w_up"].astype(COMPUTE_DTYPE)
+    if act == "silu":
+        gate = jax.nn.silu(xc @ p["w_gate"].astype(COMPUTE_DTYPE))
+        hidden = gate * up
+    else:
+        hidden = jax.nn.gelu(up)
+    return (hidden @ p["w_down"].astype(COMPUTE_DTYPE)).astype(x.dtype)

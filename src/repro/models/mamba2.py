@@ -1,0 +1,206 @@
+"""Mamba2 (SSD — state-space duality) block, chunked, decode-capable.
+
+Implements the SSD recurrence  h_t = a_t * h_{t-1} + dt_t * B_t x_t^T,
+y_t = C_t h_t  with scalar-per-head decay a_t = exp(-dt_t * A_h), via
+the chunked matrix formulation of arXiv:2405.21060: intra-chunk terms
+are batched matmuls (MXU-friendly), inter-chunk state is a short scan
+over chunks.  Sub-quadratic: compute O(S * chunk), state O(H*P*N).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import COMPUTE_DTYPE, _dense_init, rms_norm
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    nheads = d_inner // cfg.ssm.head_dim
+    return d_inner, nheads
+
+
+def mamba2_init(key, cfg):
+    d = cfg.d_model
+    s = cfg.ssm
+    d_inner, nheads = ssm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    # fused input projection: [z (gate), x, B, C, dt]
+    d_proj = 2 * d_inner + 2 * s.d_state + nheads
+    return {
+        "w_in": _dense_init(ks[0], (d, d_proj)),
+        "conv_w": _dense_init(ks[1], (s.d_conv, d_inner + 2 * s.d_state),
+                              scale=1.0 / math.sqrt(s.d_conv)),
+        "conv_b": jnp.zeros((d_inner + 2 * s.d_state,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads,
+                                      dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "out_norm": jnp.zeros((d_inner,), jnp.float32),
+        "w_out": _dense_init(ks[2], (d_inner, d)),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner, nheads = ssm_dims(cfg)
+    n = cfg.ssm.d_state
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + d_inner + 2 * n]
+    dt = proj[..., -nheads:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """depthwise causal conv over time. xbc: [B, S, C].
+
+    conv_state: [B, d_conv-1, C] trailing context for decode; returns
+    (out, new_conv_state)."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = jnp.zeros_like(xbc)
+    for i in range(k):                      # tiny k (4): unrolled taps
+        out = out + xp[:, i:i + xbc.shape[1]] * conv_w[i].astype(xbc.dtype)
+    out = out + conv_b.astype(xbc.dtype)
+    new_state = xp[:, xp.shape[1] - (k - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int):
+    """SSD scan, chunked matrix form.
+
+    x: [B, S, H, P]; dt: [B, S, H]; b, c: [B, S, N].
+    Returns y: [B, S, H, P] and final state [B, H, P, N].
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    nch = -(-s // chunk)
+    pad = nch * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # pad dt with -inf-ish so softplus(dt)=0: padded steps must be
+        # IDENTITY in the recurrence (decay exp(0)=1, contribution 0),
+        # otherwise the final state hT picks up spurious decay
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=-1e4)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+
+    a = -jnp.exp(a_log.astype(jnp.float32))               # [H], negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32))          # [B, S', H]
+    # log decay per step: la[t] = dt[t] * a  (<= 0)
+    la = dt * a[None, None, :]
+
+    xc = (x.astype(jnp.float32)
+          * dt[..., None]).reshape(bsz, nch, chunk, h, p)
+    bc = b.astype(jnp.float32).reshape(bsz, nch, chunk, n)
+    cc = c.astype(jnp.float32).reshape(bsz, nch, chunk, n)
+    lac = la.reshape(bsz, nch, chunk, h)
+
+    # cumulative log decay within chunk (inclusive)
+    cum = jnp.cumsum(lac, axis=2)                          # [B,Nc,L,H]
+
+    # ---- intra-chunk (dual / attention-like quadratic within chunk) ----
+    # decay(tq, tk) = exp(cum[tq] - cum[tk]) for tq >= tk
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # [B,Nc,L,L,H]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: upper-triangle rel is large-positive and exp(rel)
+    # would be inf, poisoning the where() gradient (inf * 0 = nan)
+    rel = jnp.where(tri[None, None, :, :, None], rel, -jnp.inf)
+    gamma = jnp.exp(rel)
+    scores = jnp.einsum("bzqn,bzkn->bzqk", cc, bc)         # [B,Nc,L,L]
+    y_intra = jnp.einsum("bzqk,bzqkh,bzkhp->bzqhp",
+                         scores, gamma, xc)
+
+    # ---- chunk states + inter-chunk scan ----
+    # state contribution of chunk: sum_k exp(cum[L-1]-cum[k]) * B_k x_k
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                # [B,Nc,L,H]
+    states = jnp.einsum("bzkh,bzkn,bzkhp->bzhpn", tail, bc, xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # [B,Nc,H]
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    hT, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # [B,Nc,H,P,N]
+
+    # ---- inter-chunk output: y += C_t exp(cum[t]) h_prev ----
+    y_inter = jnp.einsum("bzqn,bzqh,bzhpn->bzqhp",
+                         cc, jnp.exp(cum), h_prevs)
+
+    y = (y_intra + y_inter).reshape(bsz, nch * chunk, h, p)
+    if pad:
+        y = y[:, :s]
+    return y.astype(x.dtype), hT
+
+
+def ssd_step(h_state, x, dt, a_log, b, c):
+    """Single decode step. x: [B, H, P]; b, c: [B, N]; dt: [B, H].
+    h_state: [B, H, P, N] -> returns (y [B,H,P], new state)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    decay = jnp.exp(dt * a[None, :])                        # [B,H]
+    xb = jnp.einsum("bhp,bn->bhpn", x.astype(jnp.float32) * dt[..., None],
+                    b.astype(jnp.float32))
+    h_new = h_state * decay[..., None, None] + xb
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c.astype(jnp.float32))
+    return y.astype(x.dtype), h_new
+
+
+def mamba2_apply(p, x, cfg, *, state=None, return_state=False):
+    """x: [B, S, D].  state: None (training/prefill from scratch) or
+    dict {h: [B,H,P,N], conv: [B,d_conv-1,C]} for decode.
+    return_state: emit the final state even when starting stateless
+    (prefill).  Returns (out, new_state)."""
+    bsz, s, d = x.shape
+    scfg = cfg.ssm
+    d_inner, nheads = ssm_dims(cfg)
+    n, pdim = scfg.d_state, scfg.head_dim
+    xc = x.astype(COMPUTE_DTYPE)
+    proj = xc @ p["w_in"].astype(COMPUTE_DTYPE)
+    z, xbc, dt = _split_proj(cfg, proj)
+
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc[..., :d_inner].reshape(bsz, s, nheads, pdim)
+    b = xbc[..., d_inner:d_inner + n]
+    c = xbc[..., d_inner + n:]
+
+    if state is None:
+        y, hT = ssd_chunked(xs, dt, p["a_log"], b, c, scfg.chunk)
+    else:
+        assert s == 1, "stateful path is single-token decode"
+        y1, hT = ssd_step(state["h"], xs[:, 0], dt[:, 0], p["a_log"],
+                          b[:, 0], c[:, 0])
+        y = y1[:, None]
+    y = y + xs * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, d_inner)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(COMPUTE_DTYPE)
+    if state is not None or return_state:
+        new_state = {"h": hT, "conv": new_conv.astype(COMPUTE_DTYPE)}
+    else:
+        new_state = None
+    return out.astype(x.dtype), new_state
+
+
+def mamba2_state_shape(cfg, batch, dtype=jnp.float32):
+    d_inner, nheads = ssm_dims(cfg)
+    s = cfg.ssm
+    return {
+        "h": jax.ShapeDtypeStruct(
+            (batch, nheads, s.head_dim, s.d_state), jnp.float32),
+        "conv": jax.ShapeDtypeStruct(
+            (batch, s.d_conv - 1, d_inner + 2 * s.d_state), COMPUTE_DTYPE),
+    }

@@ -1,0 +1,207 @@
+"""Mixture-of-Experts layer with ALB-adaptive dispatch.
+
+The router's tokens-per-expert histogram is the LM-stack analogue of
+the paper's edges-per-vertex distribution: a few hot experts receive
+orders of magnitude more tokens (power-law routing), and a static
+capacity truncation (the "blocked" baseline) silently drops the
+overflow.  Following DESIGN.md section 5, the dispatch applies the
+paper's inspector-executor split:
+
+* inspector: per-step expert load histogram; if max load <= capacity
+  nothing extra runs (``lax.cond`` — the adaptive part);
+* executor: overflow tokens are re-dealt to their next-best expert via
+  the same prefix-sum + position-renumbering machinery the graph LB
+  kernel uses (kernels/moe_dispatch.py holds the Pallas fast path).
+
+Experts are sharded over the ``model`` mesh axis (expert parallelism);
+the einsum formulation keeps the dispatch compilable under pjit.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .layers import COMPUTE_DTYPE, _dense_init, mlp_init, mlp_apply
+
+
+def moe_init(key, cfg):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _dense_init(ks[0], (d, m.num_experts)),
+        # stacked expert FFNs: [E, ...]
+        "w_gate": _dense_init(ks[1], (m.num_experts, d, m.d_expert)),
+        "w_up": _dense_init(ks[2], (m.num_experts, d, m.d_expert)),
+        "w_down": _dense_init(ks[3], (m.num_experts, m.d_expert, d)),
+    }
+    if m.num_shared_experts:
+        kk = jax.random.split(jax.random.fold_in(key, 99), 1)[0]
+        p["shared"] = mlp_init(kk, d, m.d_expert * m.num_shared_experts,
+                               "silu")
+    return p
+
+
+def _positions_in_expert(expert_of, num_experts):
+    """pos[i] = rank of assignment i within its expert (arrival order).
+
+    The pure-jnp oracle of the position computation; see
+    kernels/moe_dispatch.py for the Pallas tile-scan version.
+    """
+    onehot = jax.nn.one_hot(expert_of, num_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot              # exclusive
+    return jnp.take_along_axis(pos, expert_of[:, None], axis=1)[:, 0]
+
+
+def dispatch_plan(probs, m, t, *, use_pallas_dispatch: bool = False):
+    """Routing plan: (flat_expert, pos, gate_flat, keep, cap).
+
+    Separated from moe_apply so tests / the serving planner can inspect
+    drop behaviour directly.
+    """
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)    # [T, K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    cap = _cap_of(m, t)
+
+    flat_expert = gate_idx.reshape(-1)                     # [T*K]
+    if use_pallas_dispatch:
+        from repro.kernels.moe_dispatch import positions_in_expert_kernel
+        pos = positions_in_expert_kernel(flat_expert, m.num_experts)
+    else:
+        pos = _positions_in_expert(flat_expert, m.num_experts)
+
+    gate_flat = gate_vals.reshape(-1)                      # [T*K]
+    if m.adaptive:
+        # ---- ALB inspector-executor --------------------------------
+        # inspector: any expert over capacity?  executor: deal the
+        # overflow slots CYCLICALLY across the free capacity of ALL
+        # experts via an exclusive prefix sum + searchsorted — the
+        # paper's edge-balanced renumbering, with (expert free slots ↔
+        # vertex degrees, overflow slot rank ↔ global edge id).
+        overflow = pos >= cap
+
+        def rebalance(args):
+            flat_e, pos, gate = args
+            kept1 = (pos < cap).astype(jnp.int32)
+            load = jnp.zeros((m.num_experts,), jnp.int32) \
+                .at[flat_e].add(kept1)
+            free = cap - load                              # >= 0
+            start = jnp.cumsum(free) - free                # exclusive
+            total_free = jnp.sum(free)
+            ovf_rank = jnp.cumsum(overflow.astype(jnp.int32)) - 1
+            j = jnp.searchsorted(start, ovf_rank, side="right") - 1
+            j = jnp.clip(j, 0, m.num_experts - 1)
+            fits = overflow & (ovf_rank < total_free)
+            new_e = jnp.where(fits, j.astype(flat_e.dtype), flat_e)
+            new_pos = jnp.where(fits, load[j] + (ovf_rank - start[j]),
+                                pos)
+            # rerouted slots weight by the router's prob for the expert
+            # they actually landed on
+            probs_flat = jnp.repeat(probs, m.top_k, axis=0)
+            new_gate = jnp.where(
+                fits,
+                probs_flat[jnp.arange(flat_e.shape[0]), j]
+                .astype(gate.dtype),
+                gate)
+            return new_e, new_pos, new_gate
+
+        flat_expert, pos, gate_flat = jax.lax.cond(
+            jnp.any(overflow), rebalance, lambda a: a,
+            (flat_expert, pos, gate_flat))
+
+    keep = pos < cap
+    return flat_expert, pos, gate_flat, keep, cap
+
+
+def moe_apply(p, x, cfg, *, use_pallas_dispatch: bool = False,
+              shard_fn=lambda name, x: x):
+    """x: [B, S, D] -> (out, aux_loss).
+
+    Grouped (GShard-style) dispatch: tokens are split into
+    ``m.dispatch_groups`` groups aligned with the data-parallel axis;
+    positions/capacity/ALB-rebalance are computed per group so the
+    prefix sums never cross shard boundaries (a global cumsum would
+    force GSPMD to replicate the whole dispatch/combine path).
+    """
+    m = cfg.moe
+    bsz, s, d = x.shape
+    t = bsz * s
+    g = m.dispatch_groups
+    assert t % g == 0, (t, g)
+    tg = t // g
+    xf = x.reshape(t, d).astype(COMPUTE_DTYPE)
+
+    logits = (xf @ p["router"].astype(COMPUTE_DTYPE)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                # [T, E]
+
+    # aux load-balancing loss (Switch-style)
+    gate_idx_top1 = jnp.argmax(probs, axis=-1)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx_top1, m.num_experts), axis=0)
+    aux = m.router_aux_weight * m.num_experts * jnp.sum(me * ce)
+
+    probs_g = probs.reshape(g, tg, m.num_experts)
+    if g > 1:
+        flat_expert, pos, gate_flat, keep, _ = jax.vmap(
+            partial(_plan_static, m=m, t=tg))(probs_g)
+        cap = _cap_of(m, tg)
+    else:
+        flat_expert, pos, gate_flat, keep, cap = dispatch_plan(
+            probs, m, t, use_pallas_dispatch=use_pallas_dispatch)
+        flat_expert = flat_expert[None]
+        pos, gate_flat, keep = pos[None], gate_flat[None], keep[None]
+    pos_c = jnp.where(keep, pos, 0)                  # [G, Tg*K]
+
+    # ---- dispatch: scatter tokens into [G, E, C, D] buffers ----------
+    xg = shard_fn("moe_tok", xf.reshape(g, tg, d))
+    xk = jnp.repeat(xg, m.top_k, axis=1)                   # [G, Tg*K, D]
+    xk = shard_fn("moe_tok", jnp.where(keep[..., None], xk, 0)
+                  .astype(COMPUTE_DTYPE))
+
+    def scatter_one(fe, pc, xx):
+        buf = jnp.zeros((m.num_experts, cap, d), COMPUTE_DTYPE)
+        return buf.at[fe, pc].add(xx)
+
+    # vmapped over groups: the batched scatter keeps G a batch dim so
+    # GSPMD can shard it on the data axes
+    buf = jax.vmap(scatter_one)(flat_expert, pos_c, xk)
+    # groups ride the data axis; experts ride the model axis
+    buf = shard_fn("moe_buf", buf)
+
+    # ---- expert FFNs (einsum over stacked experts; E sharded) --------
+    gate = jax.nn.silu(jnp.einsum(
+        "gecd,edf->gecf", buf, p["w_gate"].astype(COMPUTE_DTYPE)))
+    up = jnp.einsum("gecd,edf->gecf", buf,
+                    p["w_up"].astype(COMPUTE_DTYPE))
+    hidden = gate * up
+    eout = jnp.einsum("gecf,efd->gecd", hidden,
+                      p["w_down"].astype(COMPUTE_DTYPE))   # [G, E, C, D]
+    eout = shard_fn("moe_buf", eout)
+
+    # ---- combine: gather expert outputs back to tokens ---------------
+    tok_out = jax.vmap(lambda e, fe, pc: e[fe, pc])(
+        eout, flat_expert, pos_c)                          # [G, Tg*K, D]
+    tok_out = shard_fn("moe_tok", tok_out)
+    tok_out = jnp.where(keep[..., None], tok_out, 0)
+    w = gate_flat[..., None].astype(COMPUTE_DTYPE)
+    combined = jnp.sum(
+        (tok_out * w.astype(COMPUTE_DTYPE)).reshape(g, tg, m.top_k, d),
+        axis=2)
+
+    combined = combined.reshape(t, d)
+    if m.num_shared_experts:
+        combined = combined + mlp_apply(p["shared"], xf, "silu")
+
+    return combined.reshape(bsz, s, d).astype(x.dtype), aux
+
+
+def _cap_of(m, t):
+    return max(int(m.capacity_factor * t * m.top_k / m.num_experts), 4)
+
+
+def _plan_static(probs, m, t):
+    return dispatch_plan(probs, m, t)

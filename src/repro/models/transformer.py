@@ -1,0 +1,519 @@
+"""Decoder-only LM assembly covering all assigned architecture families.
+
+families:
+* dense  — GQA or MLA attention + SwiGLU/GELU MLP          (llama3,
+  minicpm-2b, minicpm3-4b, qwen2.5, paligemma backbone, musicgen)
+* moe    — attention + ALB-adaptive MoE FFN                 (deepseek-moe,
+  llama4-scout)
+* ssm    — Mamba2 (SSD) blocks, attention-free              (mamba2-2.7b)
+* hybrid — Mamba2 backbone + one SHARED attention block applied every
+  ``attn_every`` layers (zamba2's weight-shared global mixer)
+
+Layer stacks run under ``lax.scan`` with stacked [L, ...] params so HLO
+size is O(1) in depth; hybrid nests: scan over groups of
+(attn_every ssm layers + shared attention application).
+
+Entry points:
+* ``init(key, cfg)``                      -> params
+* ``forward(params, cfg, tokens, ...)``   -> logits          (training)
+* ``init_cache(cfg, batch, max_len)``     -> cache pytree (shapes)
+* ``prefill(params, cfg, tokens, cache)`` -> (logits, cache)
+* ``decode_step(params, cfg, token, cache, index)`` -> (logits, cache)
+
+``shard_fn(name, x)`` lets the launcher inject
+``with_sharding_constraint`` without the model importing mesh details.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba2 as M
+from . import moe as MOE
+from .layers import COMPUTE_DTYPE
+
+_IDENT = lambda name, x: x
+
+# H4: logits dtype. f32 is the safe default; bf16 halves the dominant
+# activation (the [B, S, V] logits) for big-vocab archs — CE still
+# reduces in f32 (logsumexp upcasts).
+_LOGITS_DTYPE = jnp.float32
+
+
+def set_logits_dtype(dt):
+    global _LOGITS_DTYPE
+    _LOGITS_DTYPE = dt
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg):
+    """One layer's params (non-hybrid)."""
+    p = {}
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm":
+        p["norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["mamba"] = M.mamba2_init(ks[0], cfg)
+        return p
+    p["norm1"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if cfg.attention == "mla":
+        p["attn"] = L.mla_init(ks[0], cfg)
+    else:
+        p["attn"] = L.gqa_init(ks[0], cfg)
+    if cfg.family == "moe":
+        p["moe"] = MOE.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def _stack_init(key, cfg, n):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _block_init(k, cfg))(keys)
+
+
+def init(key, cfg):
+    ks = jax.random.split(key, 8)
+    p = {}
+    vp = cfg.padded_vocab
+    if cfg.num_codebooks > 1:
+        p["embed"] = jax.vmap(
+            lambda k: L._dense_init(k, (vp, cfg.d_model), 0.02)
+        )(jax.random.split(ks[0], cfg.num_codebooks))
+    else:
+        p["embed"] = L._dense_init(ks[0], (vp, cfg.d_model), 0.02)
+    if cfg.family == "hybrid":
+        groups = cfg.num_layers // cfg.attn_every
+        ssm_cfg = cfg
+        p["layers"] = jax.vmap(
+            lambda k: _stack_init(k, _as_ssm(cfg), cfg.attn_every)
+        )(jax.random.split(ks[1], groups))
+        # zamba2's shared global block: attention + MLP, ONE weight set
+        # applied at every group boundary
+        shared = {"norm1": jnp.zeros((cfg.d_model,), jnp.float32),
+                  "norm2": jnp.zeros((cfg.d_model,), jnp.float32),
+                  "attn": L.gqa_init(ks[2], cfg),
+                  "mlp": L.mlp_init(ks[4], cfg.d_model, cfg.d_ff, cfg.act)}
+        p["shared_attn"] = shared
+    else:
+        p["layers"] = _stack_init(ks[1], cfg, cfg.num_layers)
+    p["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if not cfg.tie_embeddings:
+        if cfg.num_codebooks > 1:
+            p["lm_head"] = jax.vmap(
+                lambda k: L._dense_init(k, (cfg.d_model, vp))
+            )(jax.random.split(ks[3], cfg.num_codebooks))
+        else:
+            p["lm_head"] = L._dense_init(ks[3], (cfg.d_model, vp))
+    return p
+
+
+def _as_ssm(cfg):
+    import dataclasses
+    return dataclasses.replace(cfg, family="ssm")
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _dense_block(p, x, cfg, *, positions, cache=None, cache_index=None,
+                 shard_fn=_IDENT):
+    attn_in = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if cfg.attention == "mla":
+        a, new_cache = L.mla_apply(p["attn"], attn_in, cfg,
+                                   positions=positions, cache=cache,
+                                   cache_index=cache_index)
+    else:
+        a, new_cache = L.gqa_apply(p["attn"], attn_in, cfg,
+                                   positions=positions, cache=cache,
+                                   cache_index=cache_index)
+    x = x + shard_fn("resid", a)
+    ff_in = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        f, aux = MOE.moe_apply(p["moe"], ff_in, cfg, shard_fn=shard_fn)
+    else:
+        f, aux = L.mlp_apply(p["mlp"], ff_in, cfg.act), 0.0
+    x = x + shard_fn("resid", f)
+    return x, new_cache, aux
+
+
+def _ssm_block(p, x, cfg, *, state=None, shard_fn=_IDENT):
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    out, new_state = M.mamba2_apply(p["mamba"], h, cfg, state=state)
+    return x + shard_fn("resid", out), new_state
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed(p, cfg, tokens, prefix_emb=None):
+    if cfg.num_codebooks > 1:
+        # tokens: [B, S, num_codebooks] — sum codebook embeddings
+        parts = [jnp.take(p["embed"][i].astype(COMPUTE_DTYPE),
+                          tokens[..., i], axis=0)
+                 for i in range(cfg.num_codebooks)]
+        x = sum(parts)
+    else:
+        x = jnp.take(p["embed"].astype(COMPUTE_DTYPE), tokens, axis=0)
+    if prefix_emb is not None:
+        x = jnp.concatenate([prefix_emb.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _head(p, cfg, x):
+    xn = L.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = p["embed"].astype(COMPUTE_DTYPE).T
+        return (xn.astype(COMPUTE_DTYPE) @ w).astype(_LOGITS_DTYPE)
+    if cfg.num_codebooks > 1:
+        return jnp.einsum("bsd,ndv->bsnv", xn.astype(COMPUTE_DTYPE),
+                          p["lm_head"].astype(COMPUTE_DTYPE)
+                          ).astype(_LOGITS_DTYPE)
+    return (xn.astype(COMPUTE_DTYPE)
+            @ p["lm_head"].astype(COMPUTE_DTYPE)).astype(_LOGITS_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# forward (training — no cache)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg, tokens, prefix_emb=None, shard_fn=_IDENT,
+            remat: bool = True, unroll: bool = False):
+    """tokens: [B, S] int32 ([B, S, ncb] for multi-codebook).
+    Returns (logits, aux_loss).
+
+    unroll=True replaces lax.scan with a python loop — used ONLY by the
+    dry-run cost extraction (HloCostAnalysis counts scan bodies once)."""
+    x = _embed(params, cfg, tokens, prefix_emb)
+    x = shard_fn("hidden", x)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+
+    if unroll:
+        aux = 0.0
+        if cfg.family == "hybrid":
+            groups = cfg.num_layers // cfg.attn_every
+            sa = params["shared_attn"]
+            for gi in range(groups):
+                for li in range(cfg.attn_every):
+                    lp = jax.tree.map(lambda a: a[gi][li],
+                                      params["layers"])
+                    x, _ = _ssm_block(lp, x, cfg, shard_fn=shard_fn)
+                attn_in = L.rms_norm(x, sa["norm1"], cfg.norm_eps)
+                a, _ = L.gqa_apply(sa["attn"], attn_in, cfg,
+                                   positions=positions)
+                x = x + shard_fn("resid", a)
+                ff_in = L.rms_norm(x, sa["norm2"], cfg.norm_eps)
+                x = x + shard_fn("resid",
+                                 L.mlp_apply(sa["mlp"], ff_in, cfg.act))
+        else:
+            for li in range(cfg.num_layers):
+                lp = jax.tree.map(lambda a: a[li], params["layers"])
+                if cfg.family == "ssm":
+                    x, _ = _ssm_block(lp, x, cfg, shard_fn=shard_fn)
+                else:
+                    x, _, a = _dense_block(lp, x, cfg,
+                                           positions=positions,
+                                           shard_fn=shard_fn)
+                    aux = aux + a
+        return _head(params, cfg, x), aux
+
+    if cfg.family == "hybrid":
+        def group_body(carry, gp):
+            x, aux = carry
+            def ssm_one(xx, lp):
+                out, _ = _ssm_block(lp, xx, cfg, shard_fn=shard_fn)
+                return out, None
+            inner = jax.checkpoint(ssm_one) if remat else ssm_one
+            x, _ = jax.lax.scan(inner, x, gp)
+            sa = params["shared_attn"]
+            attn_in = L.rms_norm(x, sa["norm1"], cfg.norm_eps)
+            a, _ = L.gqa_apply(sa["attn"], attn_in, cfg,
+                               positions=positions)
+            x = x + shard_fn("resid", a)
+            ff_in = L.rms_norm(x, sa["norm2"], cfg.norm_eps)
+            x = x + shard_fn("resid", L.mlp_apply(sa["mlp"], ff_in, cfg.act))
+            return (x, aux), None
+
+        gbody = jax.checkpoint(group_body) if remat else group_body
+        (x, aux), _ = jax.lax.scan(gbody, (x, 0.0), params["layers"])
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            out, _ = _ssm_block(lp, x, cfg, shard_fn=shard_fn)
+            return out, None
+        fbody = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(fbody, x, params["layers"])
+        aux = 0.0
+    else:
+        def body(carry, lp):
+            x, aux = carry
+            x, _, a = _dense_block(lp, x, cfg, positions=positions,
+                                   shard_fn=shard_fn)
+            return (x, aux + a), None
+        fbody = jax.checkpoint(body) if remat else body
+        (x, aux), _ = jax.lax.scan(fbody, (x, 0.0), params["layers"])
+
+    logits = _head(params, cfg, x)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# inference: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch, max_len):
+    """ShapeDtypeStruct pytree of the decode state (KV caches / SSM
+    states), stacked over layers."""
+    def stack(shape_tree, n):
+        return jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct((n, *sd.shape), sd.dtype),
+            shape_tree)
+
+    if cfg.family == "hybrid":
+        groups = cfg.num_layers // cfg.attn_every
+        ssm = stack(stack(M.mamba2_state_shape(cfg, batch),
+                          cfg.attn_every), groups)
+        attn = stack(L.gqa_cache_shape(cfg, batch, max_len), groups)
+        return {"ssm": ssm, "attn": attn,
+                "index": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.family == "ssm":
+        return {"ssm": stack(M.mamba2_state_shape(cfg, batch),
+                             cfg.num_layers),
+                "index": jax.ShapeDtypeStruct((), jnp.int32)}
+    shape = (L.mla_cache_shape(cfg, batch, max_len)
+             if cfg.attention == "mla"
+             else L.gqa_cache_shape(cfg, batch, max_len))
+    return {"kv": stack(shape, cfg.num_layers),
+            "index": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def zeros_cache(cfg, batch, max_len):
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                        init_cache(cfg, batch, max_len))
+
+
+def _step(params, cfg, tokens, cache, cache_index, prefix_emb=None,
+          shard_fn=_IDENT, unroll: bool = False):
+    """Shared prefill/decode body: consumes + updates the cache."""
+    x = _embed(params, cfg, tokens, prefix_emb)
+    x = shard_fn("hidden", x)
+    b, s, _ = x.shape
+    positions = cache_index + jnp.arange(s, dtype=jnp.int32)[None, :]
+
+    if unroll:
+        return _step_unrolled(params, cfg, x, cache, cache_index,
+                              positions, shard_fn)
+
+    if cfg.family == "hybrid":
+        def gbody(carry, inp):
+            x = carry
+            gp, ssm_state, attn_cache = inp
+            def ssm_one(xx, inp2):
+                lp, st = inp2
+                out, new_st = _ssm_block(lp, xx, cfg, state=st,
+                                         shard_fn=shard_fn)
+                return out, new_st
+            x, new_ssm = jax.lax.scan(ssm_one, x, (gp, ssm_state))
+            sa = params["shared_attn"]
+            attn_in = L.rms_norm(x, sa["norm1"], cfg.norm_eps)
+            a, new_kv = L.gqa_apply(sa["attn"], attn_in, cfg,
+                                    positions=positions, cache=attn_cache,
+                                    cache_index=cache_index)
+            x = x + shard_fn("resid", a)
+            ff_in = L.rms_norm(x, sa["norm2"], cfg.norm_eps)
+            x = x + shard_fn("resid", L.mlp_apply(sa["mlp"], ff_in, cfg.act))
+            return x, (new_ssm, new_kv)
+        x, (new_ssm, new_attn) = jax.lax.scan(
+            gbody, x, (params["layers"], cache["ssm"], cache["attn"]))
+        new_cache = {"ssm": new_ssm, "attn": new_attn,
+                     "index": cache_index + s}
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            lp, st = inp
+            out, new_st = _ssm_block(lp, x, cfg, state=st,
+                                     shard_fn=shard_fn)
+            return out, new_st
+        x, new_ssm = jax.lax.scan(body, x, (params["layers"], cache["ssm"]))
+        new_cache = {"ssm": new_ssm, "index": cache_index + s}
+    else:
+        def body(x, inp):
+            lp, kv = inp
+            x, new_kv, _ = _dense_block(lp, x, cfg, positions=positions,
+                                        cache=kv, cache_index=cache_index,
+                                        shard_fn=shard_fn)
+            return x, new_kv
+        x, new_kv = jax.lax.scan(body, x, (params["layers"], cache["kv"]))
+        new_cache = {"kv": new_kv, "index": cache_index + s}
+
+    logits = _head(params, cfg, x[:, -1:])
+    return logits, new_cache
+
+
+def _step_unrolled(params, cfg, x, cache, cache_index, positions,
+                   shard_fn):
+    """python-loop twin of _step for the dry-run cost extraction."""
+    def idx(tree, i):
+        return jax.tree.map(lambda a: a[i], tree)
+
+    def set_idx(tree, new, i):
+        return jax.tree.map(lambda a, n: a.at[i].set(n), tree, new)
+
+    if cfg.family == "hybrid":
+        groups = cfg.num_layers // cfg.attn_every
+        sa = params["shared_attn"]
+        new_cache = {"ssm": cache["ssm"], "attn": cache["attn"],
+                     "index": cache_index + x.shape[1]}
+        for gi in range(groups):
+            for li in range(cfg.attn_every):
+                lp = jax.tree.map(lambda a: a[gi][li], params["layers"])
+                st = jax.tree.map(lambda a: a[gi][li], cache["ssm"])
+                x, nst = _ssm_block(lp, x, cfg, state=st,
+                                    shard_fn=shard_fn)
+                new_cache["ssm"] = jax.tree.map(
+                    lambda a, n, g=gi, l=li: a.at[g, l].set(n),
+                    new_cache["ssm"], nst)
+            attn_in = L.rms_norm(x, sa["norm1"], cfg.norm_eps)
+            a, nkv = L.gqa_apply(sa["attn"], attn_in, cfg,
+                                 positions=positions,
+                                 cache=idx(cache["attn"], gi),
+                                 cache_index=cache_index)
+            new_cache["attn"] = set_idx(new_cache["attn"], nkv, gi)
+            x = x + shard_fn("resid", a)
+            ff_in = L.rms_norm(x, sa["norm2"], cfg.norm_eps)
+            x = x + shard_fn("resid",
+                             L.mlp_apply(sa["mlp"], ff_in, cfg.act))
+    elif cfg.family == "ssm":
+        new_cache = {"ssm": cache["ssm"],
+                     "index": cache_index + x.shape[1]}
+        for li in range(cfg.num_layers):
+            lp = idx(params["layers"], li)
+            st = idx(cache["ssm"], li)
+            x, nst = _ssm_block(lp, x, cfg, state=st, shard_fn=shard_fn)
+            new_cache["ssm"] = set_idx(new_cache["ssm"], nst, li)
+    else:
+        new_cache = {"kv": cache["kv"], "index": cache_index + x.shape[1]}
+        for li in range(cfg.num_layers):
+            lp = idx(params["layers"], li)
+            kv = idx(cache["kv"], li)
+            x, nkv, _ = _dense_block(lp, x, cfg, positions=positions,
+                                     cache=kv, cache_index=cache_index,
+                                     shard_fn=shard_fn)
+            new_cache["kv"] = set_idx(new_cache["kv"], nkv, li)
+    logits = _head(params, cfg, x[:, -1:])
+    return logits, new_cache
+
+
+def prefill(params, cfg, tokens, cache, prefix_emb=None, shard_fn=_IDENT,
+            unroll: bool = False):
+    """Fill the cache from a prompt; SSM prefill runs the chunked scan
+    then keeps only the final state (sub-quadratic)."""
+    if cfg.family in ("ssm", "hybrid"):
+        # stateful path needs s==1 per step for the SSD step; prefill
+        # instead runs the chunked scan statelessly and rebuilds state.
+        return _prefill_ssm(params, cfg, tokens, cache, shard_fn,
+                            unroll=unroll)
+    return _step(params, cfg, tokens, cache, jnp.int32(0),
+                 prefix_emb=prefix_emb, shard_fn=shard_fn, unroll=unroll)
+
+
+def _prefill_ssm(params, cfg, tokens, cache, shard_fn=_IDENT,
+                 unroll: bool = False):
+    x = _embed(params, cfg, tokens)
+    x = shard_fn("hidden", x)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+
+    def run_mamba(lp, xx):
+        h = L.rms_norm(xx, lp["norm"], cfg.norm_eps)
+        out, state = M.mamba2_apply(lp["mamba"], h, cfg, state=None,
+                                    return_state=True)
+        return xx + shard_fn("resid", out.astype(xx.dtype)), state
+
+    if unroll:
+        return _prefill_ssm_unrolled(params, cfg, x, cache, positions,
+                                     run_mamba, shard_fn)
+
+    if cfg.family == "ssm":
+        def body(x, lp):
+            return run_mamba(lp, x)
+        x, new_ssm = jax.lax.scan(body, x, params["layers"])
+        new_cache = {"ssm": new_ssm, "index": jnp.int32(s)}
+    else:  # hybrid
+        def gbody(carry, inp):
+            x = carry
+            gp, attn_cache = inp
+            x, new_ssm = jax.lax.scan(lambda xx, lp: run_mamba(lp, xx),
+                                      x, gp)
+            sa = params["shared_attn"]
+            attn_in = L.rms_norm(x, sa["norm1"], cfg.norm_eps)
+            a, new_kv = L.gqa_apply(sa["attn"], attn_in, cfg,
+                                    positions=positions, cache=attn_cache,
+                                    cache_index=jnp.int32(0))
+            x = x + shard_fn("resid", a)
+            ff_in = L.rms_norm(x, sa["norm2"], cfg.norm_eps)
+            x = x + shard_fn("resid", L.mlp_apply(sa["mlp"], ff_in, cfg.act))
+            return x, (new_ssm, new_kv)
+        x, (new_ssm, new_attn) = jax.lax.scan(
+            gbody, x, (params["layers"], cache["attn"]))
+        new_cache = {"ssm": new_ssm, "attn": new_attn,
+                     "index": jnp.int32(s)}
+    logits = _head(params, cfg, x[:, -1:])
+    return logits, new_cache
+
+
+def _prefill_ssm_unrolled(params, cfg, x, cache, positions, run_mamba,
+                          shard_fn):
+    s = x.shape[1]
+    if cfg.family == "ssm":
+        states = []
+        for li in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[li], params["layers"])
+            x, st = run_mamba(lp, x)
+            states.append(st)
+        new_ssm = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        new_cache = {"ssm": new_ssm, "index": jnp.int32(s)}
+    else:
+        groups = cfg.num_layers // cfg.attn_every
+        sa = params["shared_attn"]
+        gstates, kvs = [], []
+        for gi in range(groups):
+            lstates = []
+            for li in range(cfg.attn_every):
+                lp = jax.tree.map(lambda a: a[gi][li], params["layers"])
+                x, st = run_mamba(lp, x)
+                lstates.append(st)
+            gstates.append(jax.tree.map(lambda *xs: jnp.stack(xs),
+                                        *lstates))
+            attn_in = L.rms_norm(x, sa["norm1"], cfg.norm_eps)
+            a, nkv = L.gqa_apply(
+                sa["attn"], attn_in, cfg, positions=positions,
+                cache=jax.tree.map(lambda c: c[gi], cache["attn"]),
+                cache_index=jnp.int32(0))
+            kvs.append(nkv)
+            x = x + shard_fn("resid", a)
+            ff_in = L.rms_norm(x, sa["norm2"], cfg.norm_eps)
+            x = x + shard_fn("resid",
+                             L.mlp_apply(sa["mlp"], ff_in, cfg.act))
+        new_cache = {"ssm": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                         *gstates),
+                     "attn": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                          *kvs),
+                     "index": jnp.int32(s)}
+    logits = _head(params, cfg, x[:, -1:])
+    return logits, new_cache
+
+
+def decode_step(params, cfg, token, cache, shard_fn=_IDENT,
+                unroll: bool = False):
+    """token: [B, 1] (or [B, 1, ncb]). One autoregressive step."""
+    return _step(params, cfg, token, cache, cache["index"],
+                 shard_fn=shard_fn, unroll=unroll)

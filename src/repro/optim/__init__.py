@@ -1,0 +1,5 @@
+from .adamw import adamw_init, adamw_update, OptConfig
+from .schedules import wsd_schedule, cosine_schedule
+
+__all__ = ["adamw_init", "adamw_update", "OptConfig",
+           "wsd_schedule", "cosine_schedule"]

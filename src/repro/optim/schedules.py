@@ -1,0 +1,32 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM's
+schedule — minicpm-2b's assignment note)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def wsd_schedule(base_lr: float, warmup: int, stable: int, decay: int,
+                 min_ratio: float = 0.01):
+    """Warmup-Stable-Decay (arXiv:2404.06395): flat LR, then a short
+    exponential-ish decay tail."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        in_decay = step > (warmup + stable)
+        dprog = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = base_lr * (min_ratio ** dprog)
+        return jnp.where(step < warmup, warm,
+                         jnp.where(in_decay, dec, base_lr))
+    return lr

@@ -1,0 +1,5 @@
+from .steps import make_train_step, make_prefill_step, make_decode_step, \
+    cross_entropy
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "cross_entropy"]

@@ -1,0 +1,83 @@
+"""train_step / serve_step factories.
+
+These close over the ModelConfig and an activation shard_fn; the
+launcher jits them with explicit in/out shardings (pjit).  The same
+functions back the smoke tests (1 CPU device, shard_fn = identity) and
+the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.optim import adamw_init, adamw_update, OptConfig
+
+_IDENT = lambda name, x: x
+
+
+def cross_entropy(logits, labels):
+    """logits: [B, S, V] (or [B, S, n, V]); labels int32.
+    Reduction always in f32 (logits may arrive bf16 under H4)."""
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0].astype(jnp.float32)
+    return jnp.mean(logz - gold)
+
+
+def make_loss_fn(cfg, shard_fn=_IDENT, remat: bool = True,
+                 unroll: bool = False):
+    def loss_fn(params, batch):
+        prefix = batch.get("prefix_emb")
+        logits, aux = T.forward(params, cfg, batch["tokens"],
+                                prefix_emb=prefix, shard_fn=shard_fn,
+                                remat=remat, unroll=unroll)
+        if cfg.prefix_len:
+            logits = logits[:, cfg.prefix_len:]
+        ce = cross_entropy(logits, batch["labels"])
+        return ce + aux, ce
+    return loss_fn
+
+
+def make_train_step(cfg, opt_cfg: OptConfig, shard_fn=_IDENT,
+                    remat: bool = True, unroll: bool = False):
+    loss_fn = make_loss_fn(cfg, shard_fn, remat, unroll)
+
+    def train_step(params, opt_state, batch):
+        (loss, ce), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state,
+                                                opt_cfg)
+        metrics = {"loss": loss, "ce": ce, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, shard_fn=_IDENT, unroll: bool = False):
+    def prefill_step(params, tokens, cache, prefix_emb=None):
+        return T.prefill(params, cfg, tokens, cache,
+                         prefix_emb=prefix_emb, shard_fn=shard_fn,
+                         unroll=unroll)
+    return prefill_step
+
+
+def make_decode_step(cfg, shard_fn=_IDENT, unroll: bool = False):
+    def decode_step(params, token, cache):
+        return T.decode_step(params, cfg, token, cache, shard_fn=shard_fn,
+                             unroll=unroll)
+    return decode_step
+
+
+def init_train_state(key, cfg, master_weights: bool = False):
+    params = T.init(key, cfg)
+    if master_weights:
+        # H2 mixed precision: bf16 model params, f32 masters in opt
+        params = jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16) if p.ndim > 1 else p,
+            params)
+    opt_state = adamw_init(params, master_weights=master_weights)
+    return params, opt_state

@@ -1,0 +1,53 @@
+"""Distributed (Gluon-analog) runtime: multi-device BSP correctness.
+
+Runs in a subprocess so the forced host device count never leaks into
+other tests (smoke tests must see 1 device).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import graph as G
+from repro.core.partition import partition, partition_stats
+from repro.core import gluon
+from repro.core.balancer import BalancerConfig
+from repro.core.apps import sssp, pagerank
+
+assert len(jax.devices()) == 4, jax.devices()
+g = G.rmat(9, 8, seed=5)
+src = G.highest_out_degree_vertex(g)
+ref = sssp(g, src, BalancerConfig(strategy="alb", threshold=64))
+mesh = gluon.device_mesh(4)
+for policy in ["oec", "iec", "cvc"]:
+    sg = partition(g, 4, policy)
+    labels, rounds, secs = gluon.sssp_distributed(
+        sg, mesh, src, BalancerConfig(strategy="alb", threshold=64))
+    assert np.array_equal(np.asarray(labels), np.asarray(ref.labels)), policy
+    st = partition_stats(sg)
+    assert st["imbalance"] < 2.0, (policy, st)
+
+rg = G.reverse_graph(g)
+srg = partition(rg, 4, "oec")
+rank, rounds, secs = gluon.pagerank_distributed(
+    srg, mesh, g.out_degrees(), max_rounds=30, tol=0.0)
+pref = pagerank(g, max_rounds=30, tol=0.0)
+assert np.allclose(np.asarray(rank), np.asarray(pref.labels), atol=1e-6)
+print("DISTRIBUTED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_apps_match_single_device():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "DISTRIBUTED_OK" in out.stdout

@@ -1,0 +1,74 @@
+"""Graph container + generator invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import graph as G
+
+
+def test_csr_from_edge_list_roundtrip():
+    src = np.array([0, 0, 1, 3, 3, 3])
+    dst = np.array([1, 2, 2, 0, 1, 2])
+    g = G.from_edge_list(src, dst, 4)
+    assert g.num_vertices == 4
+    assert g.num_edges == 6
+    np.testing.assert_array_equal(np.asarray(g.row_ptr), [0, 2, 3, 3, 6])
+    np.testing.assert_array_equal(np.asarray(g.out_degrees()), [2, 1, 0, 3])
+
+
+def test_from_edge_list_dedup():
+    g = G.from_edge_list(np.array([0, 0, 0]), np.array([1, 1, 2]), 3)
+    assert g.num_edges == 2
+
+
+def test_rmat_power_law():
+    g = G.rmat(10, 8, seed=0)
+    assert g.num_vertices == 1024
+    deg = np.asarray(g.out_degrees())
+    # power-law: max degree far above mean
+    assert deg.max() > 10 * deg.mean()
+    assert int(deg.sum()) == g.num_edges
+
+
+def test_road_grid_flat_degree():
+    g = G.road_grid(16)
+    deg = np.asarray(g.out_degrees())
+    assert deg.max() <= 4
+    assert g.num_vertices == 256
+
+
+def test_uniform_balanced():
+    g = G.uniform_random(1024, 8, seed=0)
+    deg = np.asarray(g.out_degrees())
+    assert deg.max() < 8 * deg.mean()
+
+
+def test_reverse_graph_preserves_edges():
+    g = G.rmat(8, 4, seed=1)
+    rg = G.reverse_graph(g)
+    assert rg.num_edges == g.num_edges
+    # reversing twice restores the out-degree multiset
+    rrg = G.reverse_graph(rg)
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(rrg.out_degrees())),
+        np.sort(np.asarray(g.out_degrees())))
+
+
+def test_pad_graph_alignment_and_semantics():
+    g = G.rmat(7, 3, seed=2)
+    gp = G.pad_graph(g, v_multiple=8, e_multiple=1024)
+    assert gp.num_vertices % 8 == 0
+    assert gp.num_edges % 1024 == 0
+    # padded vertices have degree 0
+    deg = np.asarray(gp.out_degrees())
+    assert (deg[g.num_vertices:] == 0).all()
+    # real structure unchanged
+    np.testing.assert_array_equal(np.asarray(gp.row_ptr[: g.num_vertices + 1]),
+                                  np.asarray(g.row_ptr))
+
+
+def test_highest_out_degree_vertex():
+    g = G.rmat(8, 8, seed=0)
+    v = G.highest_out_degree_vertex(g)
+    deg = np.asarray(g.out_degrees())
+    assert deg[v] == deg.max()

@@ -1,0 +1,79 @@
+"""LM-side Pallas kernels vs ref.py oracles (shape/dtype sweeps)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_dispatch import positions_in_expert_kernel
+from repro.kernels import ref
+
+
+@pytest.mark.parametrize("s", [128, 256, 512])
+@pytest.mark.parametrize("h,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(s, h, hkv, dtype):
+    key = jax.random.PRNGKey(s + h)
+    b, hd = 2, 128
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, hd), dtype)
+    out = flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(128, 128), (128, 256),
+                                             (256, 128)])
+def test_flash_attention_block_sweep(block_q, block_k):
+    key = jax.random.PRNGKey(0)
+    b, s, h, hd = 1, 512, 2, 128
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=block_q,
+                          block_k=block_k)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_non_causal():
+    key = jax.random.PRNGKey(3)
+    b, s, h, hd = 2, 256, 2, 128
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=False)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,e", [(64, 8), (1000, 64), (4096, 16)])
+def test_positions_in_expert_matches_ref(n, e):
+    key = jax.random.PRNGKey(n)
+    flat = jax.random.randint(key, (n,), 0, e, jnp.int32)
+    got = positions_in_expert_kernel(flat, e, tile=256)
+    want = ref.positions_in_expert_ref(flat, e)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=300))
+def test_positions_property(assignments):
+    """Property: within each expert, positions are 0..count-1 in
+    arrival order."""
+    flat = jnp.asarray(np.asarray(assignments, np.int32))
+    pos = np.asarray(positions_in_expert_kernel(flat, 8, tile=64))
+    a = np.asarray(assignments)
+    for e in range(8):
+        got = pos[a == e]
+        np.testing.assert_array_equal(got, np.arange(len(got)))

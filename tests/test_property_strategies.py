@@ -1,0 +1,63 @@
+"""Property-based tests of the system's core invariant: every
+load-balancing strategy computes the identical fixpoint on ANY graph
+(the balancer only changes the work schedule, never the semantics)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as G
+from repro.core.balancer import BalancerConfig
+from repro.core.apps import sssp, cc
+
+
+@st.composite
+def random_graph(draw):
+    n = draw(st.integers(4, 48))
+    m = draw(st.integers(0, 160))
+    src = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    dst = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    w = draw(st.lists(st.integers(1, 20), min_size=m, max_size=m))
+    return G.from_edge_list(np.asarray(src, np.int64),
+                            np.asarray(dst, np.int64), n,
+                            weights=np.asarray(w, np.int32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=random_graph(), threshold=st.sampled_from([4, 16, 64]),
+       dist=st.sampled_from(["cyclic", "blocked"]))
+def test_all_strategies_same_sssp_fixpoint(g, threshold, dist):
+    if g.num_edges == 0:
+        return
+    src = G.highest_out_degree_vertex(g)
+    ref = None
+    for strat in ["vertex", "twc", "edge_lb", "alb"]:
+        cfg = BalancerConfig(strategy=strat, threshold=threshold,
+                             distribution=dist, small_width=8,
+                             medium_width=16)
+        out = np.asarray(sssp(g, src, cfg).labels)
+        if ref is None:
+            ref = out
+        else:
+            np.testing.assert_array_equal(out, ref, err_msg=strat)
+
+
+@settings(max_examples=10, deadline=None)
+@given(g=random_graph())
+def test_cc_labels_are_valid_components(g):
+    """Property: after cc on the symmetrized graph, every edge joins
+    two vertices with the same label, and labels are component minima."""
+    rp = np.asarray(g.row_ptr).astype(np.int64)
+    ci = np.asarray(g.col_idx).astype(np.int64)
+    src = np.repeat(np.arange(g.num_vertices), rp[1:] - rp[:-1])
+    sym = G.from_edge_list(np.concatenate([src, ci]),
+                           np.concatenate([ci, src]), g.num_vertices)
+    labels = np.asarray(cc(sym, BalancerConfig(strategy="alb",
+                                               threshold=16)).labels)
+    srp = np.asarray(sym.row_ptr).astype(np.int64)
+    sci = np.asarray(sym.col_idx).astype(np.int64)
+    ssrc = np.repeat(np.arange(sym.num_vertices), srp[1:] - srp[:-1])
+    assert (labels[ssrc] == labels[sci]).all()
+    # each label is the smallest vertex id in its set
+    for lbl in np.unique(labels):
+        members = np.nonzero(labels == lbl)[0]
+        assert members.min() == lbl

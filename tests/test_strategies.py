@@ -1,0 +1,212 @@
+"""All load-balancing strategies must compute identical fixpoints.
+
+numpy references implement each app independently (Bellman-Ford /
+BFS levels / label propagation / iterative peel / power iteration).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import graph as G
+from repro.core.balancer import BalancerConfig, relax, relax_spmd
+from repro.core.frontier import single_source
+from repro.core import operators as ops
+from repro.core.apps import bfs, sssp, cc, pagerank, kcore
+
+STRATS = ["vertex", "twc", "edge_lb", "alb"]
+
+
+# ---------------- numpy oracles ----------------
+
+def np_csr(g):
+    rp = np.asarray(g.row_ptr).astype(np.int64)
+    ci = np.asarray(g.col_idx).astype(np.int64)
+    w = np.asarray(g.edge_w).astype(np.int64)
+    src = np.repeat(np.arange(g.num_vertices), rp[1:] - rp[:-1])
+    return rp, ci, w, src
+
+
+def np_sssp(g, source):
+    rp, ci, w, src = np_csr(g)
+    dist = np.full(g.num_vertices, int(G.INF), np.int64)
+    dist[source] = 0
+    for _ in range(g.num_vertices):
+        new = dist.copy()
+        np.minimum.at(new, ci, dist[src] + w)
+        if np.array_equal(new, dist):
+            break
+        dist = new
+    return dist
+
+
+def np_bfs(g, source):
+    rp, ci, w, src = np_csr(g)
+    lvl = np.full(g.num_vertices, int(G.INF), np.int64)
+    lvl[source] = 0
+    for _ in range(g.num_vertices):
+        new = lvl.copy()
+        np.minimum.at(new, ci, lvl[src] + 1)
+        if np.array_equal(new, lvl):
+            break
+        lvl = new
+    return lvl
+
+
+def np_cc(g):
+    rp, ci, w, src = np_csr(g)
+    comp = np.arange(g.num_vertices)
+    for _ in range(g.num_vertices):
+        new = comp.copy()
+        np.minimum.at(new, ci, comp[src])
+        if np.array_equal(new, comp):
+            break
+        comp = new
+    return comp
+
+
+def np_kcore(g, k):
+    rp, ci, w, src = np_csr(g)
+    deg = (rp[1:] - rp[:-1]).copy()
+    alive = np.ones(g.num_vertices, bool)
+    changed = True
+    while changed:
+        dead = alive & (deg < k)
+        changed = bool(dead.any())
+        for v in np.nonzero(dead)[0]:
+            alive[v] = False
+            deg[ci[rp[v]:rp[v + 1]]] -= 1
+    return alive.astype(np.int32)
+
+
+def np_pagerank(g, damping=0.85, iters=30):
+    rp, ci, w, src = np_csr(g)
+    n = g.num_vertices
+    outdeg = rp[1:] - rp[:-1]
+    inv = np.where(outdeg > 0, 1.0 / np.maximum(outdeg, 1), 0.0)
+    rank = np.full(n, 1.0 / n)
+    for _ in range(iters):
+        acc = np.zeros(n)
+        np.add.at(acc, ci, rank[src] * inv[src])
+        rank = (1 - damping) / n + damping * acc
+    return rank
+
+
+def symmetrize(g):
+    rp, ci, w, src = np_csr(g)
+    return G.from_edge_list(np.concatenate([src, ci]),
+                            np.concatenate([ci, src]), g.num_vertices)
+
+
+# ---------------- fixtures ----------------
+
+@pytest.fixture(scope="module", params=["rmat", "road", "uniform"])
+def graph(request):
+    if request.param == "rmat":
+        return G.rmat(9, 8, seed=3)
+    if request.param == "road":
+        return G.road_grid(20, seed=3)
+    return G.uniform_random(512, 6, seed=3)
+
+
+# ---------------- tests ----------------
+
+@pytest.mark.parametrize("strategy", STRATS)
+def test_sssp_all_strategies(graph, strategy):
+    src = G.highest_out_degree_vertex(graph)
+    cfg = BalancerConfig(strategy=strategy, threshold=64)
+    out = sssp(graph, src, cfg)
+    np.testing.assert_array_equal(np.asarray(out.labels), np_sssp(graph, src))
+
+
+@pytest.mark.parametrize("strategy", STRATS)
+def test_bfs_all_strategies(graph, strategy):
+    src = G.highest_out_degree_vertex(graph)
+    cfg = BalancerConfig(strategy=strategy, threshold=64)
+    out = bfs(graph, src, cfg)
+    np.testing.assert_array_equal(np.asarray(out.labels), np_bfs(graph, src))
+
+
+@pytest.mark.parametrize("strategy", ["twc", "alb"])
+def test_cc_strategies(graph, strategy):
+    sg = symmetrize(graph)
+    cfg = BalancerConfig(strategy=strategy, threshold=64)
+    out = cc(sg, cfg)
+    np.testing.assert_array_equal(np.asarray(out.labels), np_cc(sg))
+
+
+@pytest.mark.parametrize("strategy", ["twc", "alb"])
+def test_kcore_strategies(graph, strategy):
+    sg = symmetrize(graph)
+    cfg = BalancerConfig(strategy=strategy, threshold=64)
+    out = kcore(sg, 4, cfg)
+    np.testing.assert_array_equal(np.asarray(out.labels), np_kcore(sg, 4))
+
+
+@pytest.mark.parametrize("strategy", ["twc", "alb"])
+def test_pagerank_strategies(graph, strategy):
+    cfg = BalancerConfig(strategy=strategy, threshold=64)
+    out = pagerank(graph, cfg=cfg, max_rounds=30, tol=0.0)
+    np.testing.assert_allclose(np.asarray(out.labels),
+                               np_pagerank(graph, iters=30), rtol=2e-4)
+
+
+def test_cyclic_blocked_same_fixpoint(graph):
+    src = G.highest_out_degree_vertex(graph)
+    a = sssp(graph, src, BalancerConfig(strategy="alb", threshold=64,
+                                        distribution="cyclic"))
+    b = sssp(graph, src, BalancerConfig(strategy="alb", threshold=64,
+                                        distribution="blocked"))
+    np.testing.assert_array_equal(np.asarray(a.labels), np.asarray(b.labels))
+
+
+def test_pallas_path_matches_pure(graph):
+    src = G.highest_out_degree_vertex(graph)
+    a = sssp(graph, src, BalancerConfig(strategy="alb", threshold=64))
+    b = sssp(graph, src, BalancerConfig(strategy="alb", threshold=64,
+                                        use_pallas=True))
+    np.testing.assert_array_equal(np.asarray(a.labels), np.asarray(b.labels))
+
+
+def test_relax_spmd_matches_host_round(graph):
+    """The fully-jit SPMD round equals the host-driven round."""
+    src = G.highest_out_degree_vertex(graph)
+    v = graph.num_vertices
+    dist = jnp.full((v,), G.INF, jnp.int32).at[src].set(0)
+    frontier = single_source(v, src)
+    cfg = BalancerConfig(strategy="alb", threshold=64)
+    host, _ = relax(graph, dist, dist, frontier, cfg, ops.SSSP_RELAX)
+    spmd = relax_spmd(graph, dist, dist, frontier, cfg, ops.SSSP_RELAX)
+    np.testing.assert_array_equal(np.asarray(host), np.asarray(spmd))
+
+
+def test_alb_inspector_not_fired_on_flat_graph():
+    """road-style graph: the LB executor must never be invoked (the
+    paper's 'negligible overhead' claim, Table 2 road-USA rows)."""
+    g = G.road_grid(20, seed=0)
+    src = 0
+    cfg = BalancerConfig(strategy="alb", threshold=64)
+    out = sssp(g, src, cfg, collect_stats=True)
+    assert all(not st.lb_invoked for st in out.stats)
+    assert all(st.edges_lb == 0 for st in out.stats)
+
+
+def test_alb_inspector_fires_on_power_law():
+    g = G.rmat(9, 8, seed=3)
+    src = G.highest_out_degree_vertex(g)
+    cfg = BalancerConfig(strategy="alb", threshold=64)
+    out = sssp(g, src, cfg, collect_stats=True)
+    assert any(st.lb_invoked for st in out.stats)
+
+
+def test_alb_tile_loads_balanced_when_lb_fires():
+    """Fig 5 claim: with ALB, per-tile loads of the LB kernel differ by
+    at most one edge."""
+    g = G.rmat(9, 8, seed=3)
+    src = G.highest_out_degree_vertex(g)
+    out = sssp(g, src, BalancerConfig(strategy="alb", threshold=64),
+               collect_stats=True)
+    fired = [st for st in out.stats if st.lb_invoked]
+    assert fired
+    for st in fired:
+        loads = st.tile_loads_lb
+        assert loads.max() - loads.min() <= 1
