@@ -1,5 +1,10 @@
 """Fig 1/5 analogue: per-tile ("thread block") edge-load distribution
-with and without ALB, round by round."""
+with and without ALB, round by round.
+
+Both execution modes are measured: ``host`` (the host-driven round used
+for single-device wall clock) and ``spmd`` (the fully-jit round used
+inside the distributed runtime, whose jit-safe RoundStatsDev
+instrumentation this harness surfaces — DESIGN.md section 3)."""
 from __future__ import annotations
 
 import numpy as np
@@ -9,6 +14,8 @@ from repro.core import graph as G
 from repro.core.apps import sssp
 
 from .common import bench_graphs, emit
+
+MODES = ["host", "spmd"]
 
 
 def imbalance(loads: np.ndarray) -> float:
@@ -21,15 +28,16 @@ def run(scale: int = 13):
     src = G.highest_out_degree_vertex(g)
     out = {}
     for strat in ["twc", "alb"]:
-        cfg = BalancerConfig(strategy=strat, threshold=1024)
-        res = sssp(g, src, cfg, collect_stats=True)
-        for rnd, st in enumerate(res.stats[:4]):
-            total = st.tile_loads_twc + st.tile_loads_lb
-            imb = imbalance(total)
-            out[(strat, rnd)] = imb
-            emit(f"fig5/{strat}/round{rnd}", res.seconds,
-                 f"imbalance={imb:.1f} edges_twc={st.edges_twc} "
-                 f"edges_lb={st.edges_lb} lb_fired={st.lb_invoked}")
+        for mode in MODES:
+            cfg = BalancerConfig(strategy=strat, threshold=1024)
+            res = sssp(g, src, cfg, collect_stats=True, mode=mode)
+            for rnd, st in enumerate(res.stats[:4]):
+                total = st.tile_loads_twc + st.tile_loads_lb
+                imb = imbalance(total)
+                out[(strat, mode, rnd)] = imb
+                emit(f"fig5/{strat}/{mode}/round{rnd}", res.seconds,
+                     f"imbalance={imb:.1f} edges_twc={st.edges_twc} "
+                     f"edges_lb={st.edges_lb} lb_fired={st.lb_invoked}")
     return out
 
 

@@ -3,6 +3,28 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run             # everything
   PYTHONPATH=src python -m benchmarks.run table2 fig8 # subset
+
+Selectors and what each script reproduces:
+
+* ``table2``   (table2_strategies.py)   — Table 2: wall clock per
+  (input x app x strategy); also times the fully-jit SPMD round
+  (``alb_spmd`` rows) and derives ALB-vs-TWC speedups.
+* ``table2sim`` (table2_simulated.py)   — Table 2 with the paper's GPU
+  cost model instead of wall clock (deterministic CI-friendly numbers).
+* ``fig5``     (fig5_load_distribution.py) — Fig 1/5: per-tile edge
+  loads round by round, TWC vs ALB, host and SPMD rounds.
+* ``fig6``     (fig6_scaling.py)        — Fig 6/10: 1..8-device BSP
+  scaling of the Gluon-analog runtime, TWC vs ALB.
+* ``fig8``     (fig8_cyclic_blocked.py) — Fig 8: cyclic vs blocked edge
+  deal inside the LB executor (XLA and Pallas paths) + the Fig 4
+  structural locality metric.
+* ``fig9``     (fig9_partition.py)      — Fig 9: OEC/IEC/CVC partition
+  policies (edge balance, mirrors, round counts).
+* ``roofline`` (roofline.py)            — kernel roofline estimates
+  from dry-run artifacts (skipped when artifacts are absent).
+
+All inputs are synthetic analogues of the paper's graph classes (see
+benchmarks/common.py: rmat = power-law, road = grid, uniform = flat).
 """
 from __future__ import annotations
 

@@ -2,6 +2,11 @@
 
 The paper's headline: ALB ~matches TWC on flat inputs (road, orkut)
 and beats it up to 4x on power-law inputs (rmat*).
+
+Besides the four strategies in the host-driven round, an ``alb_spmd``
+row times the fully-jit static-capacity round (the one the distributed
+runtime executes inside ``shard_map``) on one device, quantifying the
+cost of static capacities + ``lax.cond`` vs per-round host dispatch.
 """
 from __future__ import annotations
 
@@ -35,6 +40,23 @@ def run(scale: int = 13):
                 secs = timed(fn, repeats=3)
                 rows[(gname, aname, strat)] = secs
                 emit(f"table2/{gname}/{aname}/{strat}", secs)
+        # the distributed runtime's fully-jit round, on one device
+        spmd_cfg = BalancerConfig(strategy="alb", threshold=THRESHOLD)
+        spmd_apps = {
+            "bfs": lambda: bfs(g, src, spmd_cfg, max_rounds=200,
+                               mode="spmd"),
+            "sssp": lambda: sssp(g, src, spmd_cfg, max_rounds=200,
+                                 mode="spmd"),
+            "cc": lambda: cc(sym, spmd_cfg, max_rounds=200, mode="spmd"),
+            "kcore": lambda: kcore(sym, 10, spmd_cfg, max_rounds=200,
+                                   mode="spmd"),
+            "pr": lambda: pagerank(g, cfg=spmd_cfg, max_rounds=20,
+                                   tol=0.0, mode="spmd"),
+        }
+        for aname, fn in spmd_apps.items():
+            secs = timed(fn, repeats=3)
+            rows[(gname, aname, "alb_spmd")] = secs
+            emit(f"table2/{gname}/{aname}/alb_spmd", secs)
     # derived: ALB speedup vs TWC per cell (the paper's metric)
     for (gname, aname), _ in {(k[0], k[1]): None for k in rows}.items():
         twc = rows[(gname, aname, "twc")]

@@ -1,0 +1,61 @@
+#!/usr/bin/env python3
+"""Docs-link invariant: every ``DESIGN.md section N`` reference in the
+tree must resolve to a ``Section N`` heading in DESIGN.md.
+
+Run from anywhere:  python scripts/check_design_refs.py
+Exit status 0 = all references resolve; 1 = missing DESIGN.md or at
+least one dangling reference (offenders listed on stderr).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REF = re.compile(r"DESIGN\.md\s+section\s+(\d+)", re.IGNORECASE)
+HEADING = re.compile(r"^#{1,6}\s+Section\s+(\d+)\b", re.MULTILINE)
+SCAN_SUFFIXES = {".py", ".md", ".txt", ".yml", ".yaml"}
+SKIP_PARTS = {".git", "__pycache__", ".github", ".venv", "venv",
+              "node_modules", ".claude", ".tox", ".eggs"}
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    design = root / "DESIGN.md"
+    if not design.exists():
+        print("FAIL: DESIGN.md does not exist but the tree references it",
+              file=sys.stderr)
+        return 1
+    headings = {int(n) for n in HEADING.findall(design.read_text())}
+
+    refs: dict[int, list[str]] = {}
+    for path in sorted(root.rglob("*")):
+        if path == design or path == Path(__file__).resolve() \
+                or not path.is_file() or path.suffix not in SCAN_SUFFIXES:
+            continue
+        # match skip dirs against repo-relative parts only, so a skip
+        # name appearing in the checkout's path prefix can't blank the
+        # whole scan
+        rel = path.relative_to(root)
+        if SKIP_PARTS & set(rel.parts):
+            continue
+        text = path.read_text(errors="ignore")
+        for n in REF.findall(text):
+            refs.setdefault(int(n), []).append(str(rel))
+
+    missing = {n: files for n, files in refs.items() if n not in headings}
+    if missing:
+        for n, files in sorted(missing.items()):
+            print(f"FAIL: 'DESIGN.md section {n}' referenced by "
+                  f"{', '.join(sorted(set(files)))} but DESIGN.md has no "
+                  f"'Section {n}' heading", file=sys.stderr)
+        return 1
+    n_refs = sum(len(v) for v in refs.values())
+    print(f"OK: {n_refs} DESIGN.md section references across "
+          f"{len(refs)} sections all resolve "
+          f"(headings present: {sorted(headings)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

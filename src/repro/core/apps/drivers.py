@@ -2,10 +2,19 @@
 
 Each driver runs the data-driven round structure of Section 2.1:
 process the *current* worklist, collect the *next* worklist from label
-changes, repeat until empty.  All of them are thin wrappers over
-``balancer.relax`` so every application automatically benefits from
+changes, repeat until empty.  All of them are thin wrappers over the
+balancer round so every application automatically benefits from
 whichever load-balancing strategy is configured — the compiler-level
 reuse the paper gets from IrGL.
+
+``mode`` selects the round implementation (DESIGN.md section 3):
+
+* ``"host"`` — ``balancer.relax``: per-round host decisions + bucketed
+  jit shapes (the single-device wall-clock configuration);
+* ``"spmd"`` — ``balancer.relax_spmd``: the fully-jit static-capacity
+  round used inside ``shard_map`` by the distributed runtime, here run
+  on one device so its behaviour (including the jit-safe RoundStats)
+  can be measured and tested against the host round.
 """
 from __future__ import annotations
 
@@ -19,7 +28,7 @@ import numpy as np
 
 from ..graph import Graph, INF, reverse_graph
 from ..frontier import full_frontier, single_source
-from ..balancer import BalancerConfig, RoundStats, relax
+from ..balancer import BalancerConfig, RoundStats, relax, relax_spmd
 from .. import operators as ops
 
 
@@ -31,17 +40,33 @@ class AppResult:
     stats: Optional[List[RoundStats]] = None
 
 
+def _round(g, values, labels, frontier, cfg, op, collect_stats, mode):
+    """One balancer round in the selected execution mode; always returns
+    (labels, RoundStats|None) with host-side stats."""
+    if mode == "host":
+        return relax(g, values, labels, frontier, cfg, op,
+                     collect_stats=collect_stats)
+    if mode != "spmd":
+        raise ValueError(f"unknown mode {mode!r} (host|spmd)")
+    out = relax_spmd(g, values, labels, frontier, cfg, op,
+                     collect_stats=collect_stats)
+    if collect_stats:
+        labels, st = out
+        return labels, RoundStats.from_device(st)
+    return out, None
+
+
 def _loop(g: Graph, values_of, labels, frontier, cfg, op,
           max_rounds: int, collect_stats: bool,
-          next_frontier, post_round=None):
+          next_frontier, post_round=None, mode: str = "host"):
     """Generic data-driven loop with explicit current/next worklists."""
     stats = [] if collect_stats else None
     t0 = time.perf_counter()
     rounds = 0
     while rounds < max_rounds and bool(jnp.any(frontier)):
         old = labels
-        labels, st = relax(g, values_of(labels), labels, frontier, cfg, op,
-                           collect_stats=collect_stats)
+        labels, st = _round(g, values_of(labels), labels, frontier, cfg,
+                            op, collect_stats, mode)
         if post_round is not None:
             labels = post_round(labels)
         frontier = next_frontier(old, labels, frontier)
@@ -55,28 +80,33 @@ def _loop(g: Graph, values_of, labels, frontier, cfg, op,
 # ---------------------------------------------------------------------------
 
 def sssp(g: Graph, source: int, cfg: BalancerConfig = BalancerConfig(),
-         max_rounds: int = 10_000, collect_stats: bool = False) -> AppResult:
+         max_rounds: int = 10_000, collect_stats: bool = False,
+         mode: str = "host") -> AppResult:
     """Bellman-Ford style data-driven SSSP (push relaxation)."""
     dist = jnp.full((g.num_vertices,), INF, dtype=jnp.int32).at[source].set(0)
     frontier = single_source(g.num_vertices, source)
     labels, rounds, secs, stats = _loop(
         g, lambda l: l, dist, frontier, cfg, ops.SSSP_RELAX, max_rounds,
-        collect_stats, next_frontier=lambda old, new, f: new < old)
+        collect_stats, next_frontier=lambda old, new, f: new < old,
+        mode=mode)
     return AppResult(labels, rounds, secs, stats)
 
 
 def bfs(g: Graph, source: int, cfg: BalancerConfig = BalancerConfig(),
-        max_rounds: int = 10_000, collect_stats: bool = False) -> AppResult:
+        max_rounds: int = 10_000, collect_stats: bool = False,
+        mode: str = "host") -> AppResult:
     level = jnp.full((g.num_vertices,), INF, dtype=jnp.int32).at[source].set(0)
     frontier = single_source(g.num_vertices, source)
     labels, rounds, secs, stats = _loop(
         g, lambda l: l, level, frontier, cfg, ops.BFS_HOP, max_rounds,
-        collect_stats, next_frontier=lambda old, new, f: new < old)
+        collect_stats, next_frontier=lambda old, new, f: new < old,
+        mode=mode)
     return AppResult(labels, rounds, secs, stats)
 
 
 def cc(g: Graph, cfg: BalancerConfig = BalancerConfig(),
-       max_rounds: int = 10_000, collect_stats: bool = False) -> AppResult:
+       max_rounds: int = 10_000, collect_stats: bool = False,
+       mode: str = "host") -> AppResult:
     """Connected components by min-label propagation.
 
     Computes weakly-connected components when ``g`` is symmetrized
@@ -86,12 +116,14 @@ def cc(g: Graph, cfg: BalancerConfig = BalancerConfig(),
     frontier = full_frontier(g.num_vertices)
     labels, rounds, secs, stats = _loop(
         g, lambda l: l, comp, frontier, cfg, ops.CC_MIN, max_rounds,
-        collect_stats, next_frontier=lambda old, new, f: new < old)
+        collect_stats, next_frontier=lambda old, new, f: new < old,
+        mode=mode)
     return AppResult(labels, rounds, secs, stats)
 
 
 def kcore(g: Graph, k: int, cfg: BalancerConfig = BalancerConfig(),
-          max_rounds: int = 10_000, collect_stats: bool = False) -> AppResult:
+          max_rounds: int = 10_000, collect_stats: bool = False,
+          mode: str = "host") -> AppResult:
     """k-core decomposition: labels[v] = 1 if v is in the k-core.
 
     Push formulation: when a vertex dies its neighbours lose one degree
@@ -106,8 +138,8 @@ def kcore(g: Graph, k: int, cfg: BalancerConfig = BalancerConfig(),
     t0 = time.perf_counter()
     rounds = 0
     while rounds < max_rounds and bool(jnp.any(frontier)):
-        deg, st = relax(g, deg, deg, frontier, cfg, ops.KCORE_DEC,
-                        collect_stats=collect_stats)
+        deg, st = _round(g, deg, deg, frontier, cfg, ops.KCORE_DEC,
+                         collect_stats, mode)
         newly_dead = (deg < k) & ~dead_acc
         dead_acc = dead_acc | newly_dead
         frontier = newly_dead
@@ -122,7 +154,7 @@ def kcore(g: Graph, k: int, cfg: BalancerConfig = BalancerConfig(),
 def pagerank(g: Graph, damping: float = 0.85, tol: float = 1e-6,
              cfg: BalancerConfig = BalancerConfig(),
              max_rounds: int = 1000, collect_stats: bool = False,
-             rg: Graph | None = None) -> AppResult:
+             rg: Graph | None = None, mode: str = "host") -> AppResult:
     """Pull-style topology-driven PageRank (residual tolerance)."""
     n = g.num_vertices
     if rg is None:
@@ -138,8 +170,8 @@ def pagerank(g: Graph, damping: float = 0.85, tol: float = 1e-6,
         contrib = rank * inv_out
         acc = jnp.zeros((n,), jnp.float32)
         # pull: gather contrib at in-neighbours, scatter-add at anchor
-        acc, st = relax(rg, contrib, acc, frontier, cfg, ops.PR_PULL,
-                        collect_stats=collect_stats)
+        acc, st = _round(rg, contrib, acc, frontier, cfg, ops.PR_PULL,
+                         collect_stats, mode)
         new_rank = (1.0 - damping) / n + damping * acc
         delta = float(jnp.max(jnp.abs(new_rank - rank)))
         rank = new_rank

@@ -20,19 +20,33 @@ tiles; warps/threads -> VPU lanes; atomicMin -> XLA scatter-min;
 the inspector -> a vector reduction + host/`lax.cond` dispatch; cyclic
 vs blocked edge deal -> lane-major contiguous vs strided edge-id order.
 
-Two execution modes:
+Architecture (DESIGN.md section 3): a strategy is *planned* once —
+``make_plan`` turns a :class:`BalancerConfig` into a :class:`RoundPlan`
+of degree bins plus an LB mode — and *executed* by one of two
+interchangeable executor pairs from the registry:
 
-* host-driven (``relax``): per-round host decisions + bucketed jit
-  functions — mirrors per-round GPU kernel launches; used for the
-  single-device wall-clock benchmarks.
-* fully-jit (``relax_spmd``): static capacities + ``lax.cond`` — used
+* ``xla``    — pure jnp building blocks (``_bin_pass`` / ``_lb_pass``),
+* ``pallas`` — the mapping kernels in ``repro.kernels`` (selected by
+  ``BalancerConfig.use_pallas``), registered lazily.
+
+Each :class:`ExecutorPair` exposes every path twice:
+
+* host entries (``bin_host`` / ``lb_host``): per-round host decisions +
+  bucketed jit shapes — mirrors per-round GPU kernel launches; used by
+  ``relax`` for the single-device wall-clock benchmarks.
+* fully-jit entries (``bin_jit`` / ``lb_jit``): static capacities,
+  traced chunk index, ``lax.cond`` inspector — used by ``relax_spmd``
   inside ``shard_map`` for the distributed (Gluon-analog) runtime.
+
+Both rounds therefore run the *same* planner and the *same* executor
+implementations; ``use_pallas=True`` routes the hot mapping loops
+through the Pallas kernels in either mode.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -59,9 +73,126 @@ class BalancerConfig:
         assert self.strategy in ("vertex", "twc", "edge_lb", "alb")
         assert self.distribution in ("cyclic", "blocked")
 
+    @property
+    def executor(self) -> str:
+        return "pallas" if self.use_pallas else "xla"
+
+
+# ---------------------------------------------------------------------------
+# round planner — the ONE place a strategy is defined (both round modes
+# consume the same plan)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BinSpec:
+    """One degree bin of the vertex-binned (TWC-analog) path.
+
+    A frontier vertex lands in the bin when ``lo < deg`` and (if ``hi``
+    is set) ``deg <= hi``.  ``cap`` is a static upper bound on the
+    degree of any member (used by the fully-jit round to fix the pass
+    count); ``cap=None`` marks a genuinely unbounded bin, driven by a
+    data-dependent number of width-``width`` passes.
+    """
+    name: str
+    width: int
+    lo: int
+    hi: Optional[int] = None
+    cap: Optional[int] = None
+
+    def mask(self, deg: jax.Array, valid: jax.Array) -> jax.Array:
+        m = valid & (deg > self.lo)
+        if self.hi is not None:
+            m = m & (deg <= self.hi)
+        return m
+
+    def static_passes(self) -> Optional[int]:
+        """Pass count for the fully-jit round; None = data-dependent."""
+        if self.cap is None:
+            return None
+        return max(1, -(-self.cap // self.width))
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """Bins + LB mode for one strategy.
+
+    ``lb``: ``"none"`` (no edge-balanced path), ``"all"`` (every
+    frontier edge goes through LB — the non-adaptive Gunrock analog) or
+    ``"huge"`` (only vertices with ``deg >= threshold`` — the paper's
+    inspector-guarded adaptive path).
+    """
+    bins: tuple
+    lb: str
+
+    def lb_mask(self, deg, valid, cfg: BalancerConfig):
+        if self.lb == "all":
+            return valid & (deg > 0)
+        if self.lb == "huge":
+            return valid & (deg >= cfg.threshold)
+        raise ValueError(self.lb)
+
+
+def make_plan(cfg: BalancerConfig) -> RoundPlan:
+    s, sw, mw, lw, th = (cfg.strategy, cfg.small_width, cfg.medium_width,
+                         cfg.large_width, cfg.threshold)
+    if s == "vertex":
+        # one unit of work per vertex, inner width = whole adjacency
+        return RoundPlan((BinSpec("vertex", lw, 0),), "none")
+    if s == "twc":
+        return RoundPlan((BinSpec("small", sw, 0, sw, sw),
+                          BinSpec("medium", mw, sw, mw, mw),
+                          # CTA bin: UNBOUNDED — the paper's culprit
+                          BinSpec("large", lw, mw)), "none")
+    if s == "edge_lb":
+        return RoundPlan((), "all")           # everything, non-adaptive
+    # alb: bins must be DISJOINT with the huge bin or add-combine
+    # operators double-count (min-combine would mask the bug)
+    return RoundPlan((BinSpec("small", sw, 0, min(sw, th - 1), sw),
+                      BinSpec("medium", mw, sw, min(mw, th - 1), mw),
+                      BinSpec("large", lw, mw, th - 1, th)), "huge")
+
+
+# ---------------------------------------------------------------------------
+# executor registry: XLA and Pallas implementations of the two paths,
+# each with a host-driven and a fully-jit entry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExecutorPair:
+    """One backend's implementations of the bin + LB paths.
+
+    bin entries: (g, values, labels, bvidx, bdeg, brow, width, op,
+                  chunk) -> labels, ``chunk`` a Python int (host) or a
+                  traced int32 scalar (jit).
+    lb entries:  (g, values, labels, hvidx, hdeg, hrow, total, ecap,
+                  op, distribution, num_tiles, tile_edges) -> labels.
+    """
+    name: str
+    bin_host: Callable
+    bin_jit: Callable
+    lb_host: Callable
+    lb_jit: Callable
+
+
+_REGISTRY: dict = {}
+
+
+def register_executor(pair: ExecutorPair) -> None:
+    _REGISTRY[pair.name] = pair
+
+
+def get_executor(name: str) -> ExecutorPair:
+    if name not in _REGISTRY and name == "pallas":
+        from repro.kernels import ops as kops   # lazy: pallas import cost
+        register_executor(ExecutorPair(
+            "pallas",
+            bin_host=kops.twc_bin_apply, bin_jit=kops.twc_bin_apply_static,
+            lb_host=kops.edge_lb_apply, lb_jit=kops.edge_lb_apply_static))
+    return _REGISTRY[name]
+
 
 class RoundStats(NamedTuple):
-    """Instrumentation for Fig 1/5-style plots."""
+    """Instrumentation for Fig 1/5-style plots (host values)."""
     frontier_size: int
     edges_twc: int          # edges processed by the vertex-binned path
     edges_lb: int           # edges processed by the edge-balanced path
@@ -69,9 +200,32 @@ class RoundStats(NamedTuple):
     tile_loads_twc: np.ndarray   # per-tile edge counts, TWC path
     tile_loads_lb: np.ndarray    # per-tile edge counts, LB path
 
+    @classmethod
+    def from_device(cls, s: "RoundStatsDev") -> "RoundStats":
+        return cls(frontier_size=int(s.frontier_size),
+                   edges_twc=int(s.edges_twc),
+                   edges_lb=int(s.edges_lb),
+                   lb_invoked=bool(s.lb_invoked),
+                   tile_loads_twc=np.asarray(s.tile_loads_twc,
+                                             dtype=np.int64),
+                   tile_loads_lb=np.asarray(s.tile_loads_lb,
+                                            dtype=np.int64))
+
+
+class RoundStatsDev(NamedTuple):
+    """jit-safe RoundStats: every field is a device array, so the
+    structure can cross ``jit`` / ``shard_map`` boundaries (the SPMD
+    realization of the Fig 1/5 instrumentation)."""
+    frontier_size: jax.Array     # int32 scalar
+    edges_twc: jax.Array         # int32 scalar
+    edges_lb: jax.Array          # int32 scalar
+    lb_invoked: jax.Array        # bool scalar
+    tile_loads_twc: jax.Array    # int32[num_tiles]
+    tile_loads_lb: jax.Array     # int32[num_tiles]
+
 
 # ---------------------------------------------------------------------------
-# jitted building blocks (cached per static shape bucket)
+# XLA building blocks (the "xla" executor; cached per static shape bucket)
 # ---------------------------------------------------------------------------
 
 @jax.jit
@@ -97,16 +251,16 @@ def _apply(labels, target, cand, mask, combine):
     raise ValueError(combine)
 
 
-@partial(jax.jit, static_argnames=("width", "op", "chunk"))
-def _bin_pass(g: Graph, values, labels, vidx, deg, row_start,
-              width: int, op: Operator, chunk: int = 0):
+def _bin_pass_impl(g: Graph, values, labels, vidx, deg, row_start,
+                   width: int, op: Operator, chunk):
     """Process one degree bin: each vertex in ``vidx`` contributes its
     edges [chunk*width, chunk*width + width) — the uniform-trip-count
-    vertex-tiled path (TWC small/medium/large analog).
+    vertex-tiled path (TWC small/medium/large analog).  ``chunk`` may be
+    a Python int or a traced int32 scalar.
 
     Shapes: vidx/deg/row_start: [B];  produces a [B, width] edge tile.
     """
-    base = chunk * width
+    base = jnp.asarray(chunk, jnp.int32) * width
     off = base + jnp.arange(width, dtype=jnp.int32)[None, :]      # [1,W]
     emask = off < deg[:, None]                                     # [B,W]
     graph_e = jnp.where(emask, row_start[:, None] + off, 0)
@@ -125,10 +279,12 @@ def _bin_pass(g: Graph, values, labels, vidx, deg, row_start,
     return new
 
 
-@partial(jax.jit, static_argnames=("ecap", "op", "distribution", "num_tiles"))
-def _lb_pass(g: Graph, values, labels, hidx, hdeg, hrow_start,
-             total_edges, ecap: int, op: Operator,
-             distribution: str, num_tiles: int):
+_bin_pass = partial(jax.jit, static_argnames=("width", "op"))(_bin_pass_impl)
+
+
+def _lb_pass_impl(g: Graph, values, labels, hidx, hdeg, hrow_start,
+                  total_edges, ecap: int, op: Operator,
+                  distribution: str, num_tiles: int, tile_edges: int = 0):
     """The LB executor (Figure 3, SSSP_LB): edge-balanced renumbering.
 
     Edges of the huge vertices get global ids 0..total_edges-1 via an
@@ -137,6 +293,8 @@ def _lb_pass(g: Graph, values, labels, hidx, hdeg, hrow_start,
     array — the paper's CSR-preserving trick.  ``distribution`` controls
     the edge-id -> lane order (cyclic = consecutive lanes process
     consecutive edges; blocked = strided) — Section 4.1 / Figure 4.
+    ``tile_edges`` is unused here (XLA has no grid); kept for executor
+    signature parity with the Pallas pair.
     """
     start_e = jnp.cumsum(hdeg) - hdeg                  # exclusive prefix
     # enumerate a multiple of num_tiles so the blocked permutation below
@@ -166,6 +324,15 @@ def _lb_pass(g: Graph, values, labels, hidx, hdeg, hrow_start,
         return _apply(labels, src, cand, emask, op.combine)
 
 
+_lb_pass = partial(jax.jit, static_argnames=(
+    "ecap", "op", "distribution", "num_tiles", "tile_edges"))(_lb_pass_impl)
+
+
+register_executor(ExecutorPair("xla",
+                               bin_host=_bin_pass, bin_jit=_bin_pass_impl,
+                               lb_host=_lb_pass, lb_jit=_lb_pass_impl))
+
+
 @partial(jax.jit, static_argnames=("num_tiles",))
 def _tile_loads(deg, valid, num_tiles: int):
     """Per-tile edge counts when frontier vertices are dealt to tiles in
@@ -174,6 +341,14 @@ def _tile_loads(deg, valid, num_tiles: int):
     tile = (jnp.arange(f, dtype=jnp.int32) * num_tiles) // max(f, 1)
     return jnp.zeros((num_tiles,), jnp.int32).at[tile].add(
         jnp.where(valid, deg, 0).astype(jnp.int32))
+
+
+def _lb_tile_loads(total, num_tiles: int):
+    """Edge-balanced deal: per-tile loads differ by at most one edge."""
+    total = jnp.asarray(total, jnp.int32)
+    return (total // num_tiles
+            + (jnp.arange(num_tiles, dtype=jnp.int32)
+               < total % num_tiles).astype(jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -196,149 +371,153 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
     fidx = compact(frontier, fcap)
     deg, row_start, valid = _frontier_meta(g, fidx)
 
-    use_pallas = cfg.use_pallas
+    ex = get_executor(cfg.executor)
+    plan = make_plan(cfg)
     stats = dict(frontier_size=nf, edges_twc=0, edges_lb=0,
                  lb_invoked=False,
                  tile_loads_twc=np.zeros(cfg.num_tiles, np.int64),
                  tile_loads_lb=np.zeros(cfg.num_tiles, np.int64))
 
-    def run_bin(labels, mask, width, unbounded=False):
-        n = int(jnp.sum(mask))
-        if n == 0:
-            return labels
-        cap = next_bucket(n)
+    def gather_bin(mask, cap):
+        """Compact a bin mask into (vidx, deg, row) at capacity ``cap``
+        (slots past the bin size become out-of-range sentinels)."""
         sel = compact(mask, cap)                       # slots into fidx
         sel_safe = jnp.where(sel < fcap, sel, 0)
-        bvidx = jnp.where(sel < fcap, fidx[sel_safe], labels.shape[0])
-        bdeg = jnp.where(sel < fcap, deg[sel_safe], 0)
-        brow = jnp.where(sel < fcap, row_start[sel_safe], 0)
+        take = sel < fcap
+        return (jnp.where(take, fidx[sel_safe], labels.shape[0]),
+                jnp.where(take, deg[sel_safe], 0),
+                jnp.where(take, row_start[sel_safe], 0))
+
+    for spec in plan.bins:
+        mask = spec.mask(deg, valid)
+        n = int(jnp.sum(mask))
+        if n == 0:
+            continue
+        bvidx, bdeg, brow = gather_bin(mask, next_bucket(n))
         max_d = int(jnp.max(bdeg))
-        passes = 1 if not unbounded else -(-max_d // width)
+        passes = max(1, -(-max_d // spec.width))
         for c in range(passes):
-            labels = _bin_run(g, values, labels, bvidx, bdeg, brow,
-                              width, op, c, use_pallas)
+            labels = ex.bin_host(g, values, labels, bvidx, bdeg, brow,
+                                 spec.width, op, c)
         if collect_stats:
             stats["edges_twc"] += int(jnp.sum(bdeg))
             stats["tile_loads_twc"] += np.asarray(
                 _tile_loads(bdeg, bvidx < labels.shape[0], cfg.num_tiles))
-        return labels
 
-    s = cfg.strategy
-    if s == "vertex":
-        # one unit of work per vertex, inner width = whole adjacency
-        labels = run_bin(labels, valid, cfg.large_width, unbounded=True)
-    elif s == "twc":
-        labels = run_bin(labels, valid & (deg <= cfg.small_width),
-                         cfg.small_width)
-        labels = run_bin(labels, valid & (deg > cfg.small_width)
-                         & (deg <= cfg.medium_width), cfg.medium_width)
-        # CTA bin: UNBOUNDED degree — the paper's imbalance culprit
-        labels = run_bin(labels, valid & (deg > cfg.medium_width),
-                         cfg.large_width, unbounded=True)
-    elif s in ("edge_lb", "alb"):
-        if s == "edge_lb":
-            huge = valid & (deg > 0)              # everything, non-adaptive
-        else:
-            # bins must be DISJOINT with the huge bin or add-combine
-            # operators double-count (min-combine would mask the bug)
-            huge = valid & (deg >= cfg.threshold)  # the new `huge` bin
-            below = valid & (deg < cfg.threshold)
-            labels = run_bin(labels, below & (deg <= cfg.small_width)
-                             & (deg > 0), cfg.small_width)
-            labels = run_bin(labels, below & (deg > cfg.small_width)
-                             & (deg <= cfg.medium_width), cfg.medium_width)
-            labels = run_bin(labels, below & (deg > cfg.medium_width),
-                             cfg.large_width, unbounded=True)
+    if plan.lb != "none":
+        hmask = plan.lb_mask(deg, valid, cfg)
         # ---- inspector (Section 4.1): is the huge bin non-empty? ----
-        n_huge = int(jnp.sum(huge))
+        n_huge = int(jnp.sum(hmask))
         if n_huge > 0:
-            hcap = next_bucket(n_huge)
-            sel = compact(huge, hcap)
-            sel_safe = jnp.where(sel < fcap, sel, 0)
-            hvidx = jnp.where(sel < fcap, fidx[sel_safe], labels.shape[0])
-            hdeg = jnp.where(sel < fcap, deg[sel_safe], 0)
-            hrow = jnp.where(sel < fcap, row_start[sel_safe], 0)
+            hvidx, hdeg, hrow = gather_bin(hmask, next_bucket(n_huge))
             total = int(jnp.sum(hdeg))
             if total > 0:
                 ecap = next_bucket(total, minimum=cfg.lb_tile_edges)
-                labels = _lb_run(g, values, labels, hvidx, hdeg, hrow,
-                                 jnp.int32(total), ecap, op,
-                                 cfg.distribution, cfg.num_tiles,
-                                 use_pallas, cfg.lb_tile_edges)
+                labels = ex.lb_host(g, values, labels, hvidx, hdeg, hrow,
+                                    jnp.int32(total), ecap, op,
+                                    cfg.distribution, cfg.num_tiles,
+                                    cfg.lb_tile_edges)
                 if collect_stats:
                     stats["edges_lb"] = total
                     stats["lb_invoked"] = True
-                    per = np.full(cfg.num_tiles,
-                                  total // cfg.num_tiles, np.int64)
-                    per[: total % cfg.num_tiles] += 1
-                    stats["tile_loads_lb"] = per
+                    stats["tile_loads_lb"] = np.asarray(
+                        _lb_tile_loads(total, cfg.num_tiles),
+                        dtype=np.int64)
     return labels, (RoundStats(**stats) if collect_stats else None)
-
-
-def _bin_run(g, values, labels, bvidx, bdeg, brow, width, op, chunk,
-             use_pallas):
-    if use_pallas:
-        from repro.kernels import ops as kops
-        return kops.twc_bin_apply(g, values, labels, bvidx, bdeg, brow,
-                                  width, op, chunk)
-    return _bin_pass(g, values, labels, bvidx, bdeg, brow, width, op, chunk)
-
-
-def _lb_run(g, values, labels, hvidx, hdeg, hrow, total, ecap, op,
-            distribution, num_tiles, use_pallas, tile_edges):
-    if use_pallas:
-        from repro.kernels import ops as kops
-        return kops.edge_lb_apply(g, values, labels, hvidx, hdeg, hrow,
-                                  total, ecap, op, distribution, tile_edges)
-    return _lb_pass(g, values, labels, hvidx, hdeg, hrow, total, ecap, op,
-                    distribution, num_tiles)
 
 
 # ---------------------------------------------------------------------------
 # fully-jit SPMD round (for shard_map / distributed execution)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cfg", "op"))
+@partial(jax.jit, static_argnames=("cfg", "op", "collect_stats"))
 def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
-               frontier: jax.Array, cfg: BalancerConfig, op: Operator):
+               frontier: jax.Array, cfg: BalancerConfig, op: Operator,
+               collect_stats: bool = False):
     """Static-shape ALB round: capacities fixed at V/E, LB path guarded
-    by ``lax.cond`` so balanced rounds skip its cost at runtime (the
-    SPMD realization of the inspector-executor split)."""
+    by ``lax.cond``, unbounded bins driven by ``lax.while_loop`` — the
+    SPMD realization of the inspector-executor split.  Runs the same
+    :func:`make_plan` output through the registry's fully-jit executor
+    entries, so all four strategies (and both the XLA and Pallas
+    backends) are available inside ``shard_map``.
+
+    Returns ``labels`` or, with ``collect_stats=True``,
+    ``(labels, RoundStatsDev)`` where the stats are device arrays.
+    ``tile_loads_twc`` reflects this mode's actual deal — bin members
+    spread over tiles in static capacity-V slot order — so it is
+    comparable across rounds/devices but not bit-identical to the
+    host round's bucketed-compacted deal; the LB-path loads use the
+    same balanced formula in both modes.
+    """
     v = labels.shape[0]
     fidx = compact(frontier, v)
     deg, row_start, valid = _frontier_meta(g, fidx)
-    huge = valid & (deg >= cfg.threshold)
 
-    # TWC bins at full capacity
-    def bin_apply(labels, mask, width, passes):
+    ex = get_executor(cfg.executor)
+    plan = make_plan(cfg)
+    edges_twc = jnp.int32(0)
+    tl_twc = jnp.zeros((cfg.num_tiles,), jnp.int32)
+
+    for spec in plan.bins:
+        mask = spec.mask(deg, valid)
         bvidx = jnp.where(mask, fidx, v)
         bdeg = jnp.where(mask, deg, 0)
         brow = jnp.where(mask, row_start, 0)
-        for c in range(passes):
-            labels = _bin_pass(g, values, labels, bvidx, bdeg, brow,
-                               width, op, c)
-        return labels
+        passes = spec.static_passes()
+        if passes is not None:
+            for c in range(passes):
+                labels = ex.bin_jit(g, values, labels, bvidx, bdeg, brow,
+                                    spec.width, op, jnp.int32(c))
+        else:
+            # unbounded bin: data-dependent pass count (0 when empty)
+            max_d = jnp.max(bdeg)
 
-    below = valid & (deg < cfg.threshold)        # disjoint from huge bin
-    labels = bin_apply(labels, below & (deg <= cfg.small_width) & (deg > 0),
-                       cfg.small_width, 1)
-    labels = bin_apply(labels, below & (deg > cfg.small_width)
-                       & (deg <= cfg.medium_width), cfg.medium_width, 1)
-    # large bin is bounded by threshold in ALB
-    n_large_passes = -(-cfg.threshold // cfg.large_width)
-    labels = bin_apply(labels, below & (deg > cfg.medium_width),
-                       cfg.large_width, n_large_passes)
+            def cond(carry, _w=spec.width, _m=max_d):
+                c, _ = carry
+                return c * _w < _m
 
-    n_huge = jnp.sum(huge.astype(jnp.int32))
-    ecap = g.col_idx.shape[0]
+            def body(carry, _s=spec, _b=(bvidx, bdeg, brow)):
+                c, lab = carry
+                lab = ex.bin_jit(g, values, lab, *_b, _s.width, op, c)
+                return c + 1, lab
 
-    def lb_branch(labels):
-        hvidx = jnp.where(huge, fidx, v)
-        hdeg = jnp.where(huge, deg, 0)
-        hrow = jnp.where(huge, row_start, 0)
+            _, labels = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), labels))
+        if collect_stats:
+            edges_twc = edges_twc + jnp.sum(bdeg).astype(jnp.int32)
+            tl_twc = tl_twc + _tile_loads(bdeg, mask, cfg.num_tiles)
+
+    edges_lb = jnp.int32(0)
+    lb_invoked = jnp.asarray(False)
+    tl_lb = jnp.zeros((cfg.num_tiles,), jnp.int32)
+    if plan.lb != "none":
+        hmask = plan.lb_mask(deg, valid, cfg)
+        n_huge = jnp.sum(hmask.astype(jnp.int32))
+        ecap = g.col_idx.shape[0]
+        hvidx = jnp.where(hmask, fidx, v)
+        hdeg = jnp.where(hmask, deg, 0)
+        hrow = jnp.where(hmask, row_start, 0)
         total = jnp.sum(hdeg)
-        return _lb_pass(g, values, labels, hvidx, hdeg, hrow, total,
-                        ecap, op, cfg.distribution, cfg.num_tiles)
 
-    labels = jax.lax.cond(n_huge > 0, lb_branch, lambda l: l, labels)
+        def lb_branch(labels):
+            new = ex.lb_jit(g, values, labels, hvidx, hdeg, hrow, total,
+                            ecap, op, cfg.distribution, cfg.num_tiles,
+                            cfg.lb_tile_edges)
+            return new, total.astype(jnp.int32), \
+                _lb_tile_loads(total, cfg.num_tiles)
+
+        def skip_branch(labels):
+            return labels, jnp.int32(0), \
+                jnp.zeros((cfg.num_tiles,), jnp.int32)
+
+        labels, edges_lb, tl_lb = jax.lax.cond(
+            n_huge > 0, lb_branch, skip_branch, labels)
+        lb_invoked = n_huge > 0
+
+    if collect_stats:
+        return labels, RoundStatsDev(
+            frontier_size=jnp.sum(frontier.astype(jnp.int32)),
+            edges_twc=edges_twc, edges_lb=edges_lb,
+            lb_invoked=lb_invoked,
+            tile_loads_twc=tl_twc, tile_loads_lb=tl_lb)
     return labels

@@ -1,9 +1,10 @@
 """Gluon-analog distributed BSP runtime over shard_map.
 
-Execution model (paper Section 2.1 / 5): each device computes a round
-on its local partition with the full ALB machinery, then participates
-in a global synchronization that reconciles vertex labels with the
-operator's combiner (min for bfs/sssp/cc, add for pr/kcore deltas).
+Execution model (paper Section 2.1 / 5, DESIGN.md section 4): each
+device computes a round on its local partition with the full ALB
+machinery, then participates in a global synchronization that
+reconciles vertex labels with the operator's combiner (min for
+bfs/sssp/cc, add for pr/kcore deltas).
 
 Labels are replicated (every vertex mirrored everywhere, see
 partition.py); sync is a single ``pmin``/``psum`` over the ``dev`` mesh
@@ -13,7 +14,12 @@ synchronous reduce-broadcast pair.
 The per-device round is the fully-jit ``relax_spmd`` variant, whose
 ``lax.cond`` inspector skips the LB executor's work on devices whose
 local partition has no huge frontier vertex this round — the paper's
-adaptivity, per device.
+adaptivity, per device.  ``relax_spmd`` dispatches through the executor
+registry (DESIGN.md section 3), so ``BalancerConfig.use_pallas=True``
+runs the Pallas LB/TWC mapping kernels *inside* ``shard_map``, and
+``collect_stats=True`` threads jit-safe per-device ``RoundStatsDev``
+through the same ``shard_map`` boundary (stacked along the ``dev``
+axis).
 """
 from __future__ import annotations
 
@@ -27,7 +33,7 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .graph import Graph, INF
-from .balancer import BalancerConfig, relax_spmd
+from .balancer import BalancerConfig, RoundStats, RoundStatsDev, relax_spmd
 from .operators import Operator
 from . import operators as ops
 
@@ -46,12 +52,16 @@ def _sync(labels, combine: str):
 
 
 def make_round_fn(mesh, cfg: BalancerConfig, op: Operator,
-                  sync_delta: bool = False):
+                  sync_delta: bool = False, collect_stats: bool = False):
     """Build the jitted one-BSP-round function.
 
     sync_delta: for ``add``-combine operators the per-device scatter
     accumulates into a zero-initialized delta that is psum'd, then added
     to the replicated base — avoids double counting the base.
+
+    collect_stats: the round function additionally returns a
+    ``RoundStatsDev`` whose leaves carry a leading ``dev`` axis — one
+    instrumentation record per device per round (Fig 1/5 in SPMD mode).
     """
     def round_fn(stacked_g: Graph, values, labels, frontier):
         # shard_map hands each device a [1, ...] block: squeeze to local
@@ -61,20 +71,38 @@ def make_round_fn(mesh, cfg: BalancerConfig, op: Operator,
         # per-device local compute
         if sync_delta:
             delta = jnp.zeros_like(labels)
-            delta = relax_spmd(stacked_g, values, delta, frontier, cfg, op)
+            out = relax_spmd(stacked_g, values, delta, frontier, cfg, op,
+                             collect_stats=collect_stats)
+            delta, st = out if collect_stats else (out, None)
             delta = _sync(delta, "add")
             new = labels + delta
         else:
-            new = relax_spmd(stacked_g, values, labels, frontier, cfg, op)
+            out = relax_spmd(stacked_g, values, labels, frontier, cfg, op,
+                             collect_stats=collect_stats)
+            new, st = out if collect_stats else (out, None)
             new = _sync(new, op.combine)
+        if collect_stats:
+            # leading axis of size 1 -> stacked to [D, ...] by out_specs
+            return new, jax.tree_util.tree_map(lambda x: x[None], st)
         return new
 
     gspec = Graph(row_ptr=P("dev"), col_idx=P("dev"), edge_w=P("dev"))
+    out_specs = P()
+    if collect_stats:
+        out_specs = (P(), RoundStatsDev(*([P("dev")] * 6)))
     fn = shard_map(round_fn, mesh=mesh,
                    in_specs=(gspec, P(), P(), P()),
-                   out_specs=P(),
+                   out_specs=out_specs,
                    check_rep=False)
     return jax.jit(fn)
+
+
+def stats_per_device(st: RoundStatsDev) -> list[RoundStats]:
+    """Split a dev-stacked RoundStatsDev into one host RoundStats per
+    device."""
+    ndev = st.frontier_size.shape[0]
+    return [RoundStats.from_device(
+        jax.tree_util.tree_map(lambda x: x[d], st)) for d in range(ndev)]
 
 
 def run_distributed(stacked_g: Graph, mesh, op: Operator,
@@ -83,21 +111,33 @@ def run_distributed(stacked_g: Graph, mesh, op: Operator,
                     values_of=lambda l: l,
                     next_frontier=lambda old, new, f: new < old,
                     sync_delta: bool = False,
-                    max_rounds: int = 10_000):
+                    max_rounds: int = 10_000,
+                    collect_stats: bool = False):
     """Generic distributed data-driven loop. Returns (labels, rounds,
-    total_seconds, compute_seconds) — the compute/comm split feeds the
-    Fig 7/11 breakdown."""
-    round_fn = make_round_fn(mesh, cfg, op, sync_delta=sync_delta)
+    total_seconds) — or, with ``collect_stats=True``, (labels, rounds,
+    total_seconds, stats) where ``stats[round][device]`` is a host
+    :class:`RoundStats` — the compute/comm split feeds the Fig 7/11
+    breakdown and the per-device load plots."""
+    round_fn = make_round_fn(mesh, cfg, op, sync_delta=sync_delta,
+                             collect_stats=collect_stats)
     labels, frontier = init_labels, init_frontier
     rounds = 0
+    stats = [] if collect_stats else None
     t0 = time.perf_counter()
     while rounds < max_rounds and bool(jnp.any(frontier)):
         old = labels
-        labels = round_fn(stacked_g, values_of(labels), labels, frontier)
+        out = round_fn(stacked_g, values_of(labels), labels, frontier)
+        if collect_stats:
+            labels, st = out
+            stats.append(stats_per_device(st))
+        else:
+            labels = out
         jax.block_until_ready(labels)
         frontier = next_frontier(old, labels, frontier)
         rounds += 1
     total = time.perf_counter() - t0
+    if collect_stats:
+        return labels, rounds, total, stats
     return labels, rounds, total
 
 
@@ -105,55 +145,72 @@ def run_distributed(stacked_g: Graph, mesh, op: Operator,
 
 def sssp_distributed(stacked_g: Graph, mesh, source: int,
                      cfg: BalancerConfig = BalancerConfig(),
-                     max_rounds: int = 10_000):
+                     max_rounds: int = 10_000,
+                     collect_stats: bool = False):
     v = stacked_g.row_ptr.shape[-1] - 1
     dist = jnp.full((v,), INF, jnp.int32).at[source].set(0)
     frontier = jnp.zeros((v,), bool).at[source].set(True)
     return run_distributed(stacked_g, mesh, ops.SSSP_RELAX, dist, frontier,
-                           cfg, max_rounds=max_rounds)
+                           cfg, max_rounds=max_rounds,
+                           collect_stats=collect_stats)
 
 
 def bfs_distributed(stacked_g: Graph, mesh, source: int,
                     cfg: BalancerConfig = BalancerConfig(),
-                    max_rounds: int = 10_000):
+                    max_rounds: int = 10_000,
+                    collect_stats: bool = False):
     v = stacked_g.row_ptr.shape[-1] - 1
     lvl = jnp.full((v,), INF, jnp.int32).at[source].set(0)
     frontier = jnp.zeros((v,), bool).at[source].set(True)
     return run_distributed(stacked_g, mesh, ops.BFS_HOP, lvl, frontier,
-                           cfg, max_rounds=max_rounds)
+                           cfg, max_rounds=max_rounds,
+                           collect_stats=collect_stats)
 
 
 def cc_distributed(stacked_g: Graph, mesh,
                    cfg: BalancerConfig = BalancerConfig(),
-                   max_rounds: int = 10_000):
+                   max_rounds: int = 10_000,
+                   collect_stats: bool = False):
     v = stacked_g.row_ptr.shape[-1] - 1
     comp = jnp.arange(v, dtype=jnp.int32)
     frontier = jnp.ones((v,), bool)
     return run_distributed(stacked_g, mesh, ops.CC_MIN, comp, frontier,
-                           cfg, max_rounds=max_rounds)
+                           cfg, max_rounds=max_rounds,
+                           collect_stats=collect_stats)
 
 
 def pagerank_distributed(stacked_rg: Graph, mesh, out_degrees,
                          damping: float = 0.85, tol: float = 1e-6,
                          cfg: BalancerConfig = BalancerConfig(),
-                         max_rounds: int = 1000):
+                         max_rounds: int = 1000,
+                         collect_stats: bool = False):
     """stacked_rg: partitioned *reverse* graph (pull traverses in-edges)."""
     v = stacked_rg.row_ptr.shape[-1] - 1
     outdeg = out_degrees.astype(jnp.float32)
     inv_out = jnp.where(outdeg > 0, 1.0 / jnp.maximum(outdeg, 1.0), 0.0)
     rank = jnp.full((v,), 1.0 / v, jnp.float32)
     frontier = jnp.ones((v,), bool)
-    round_fn = make_round_fn(mesh, cfg, ops.PR_PULL, sync_delta=True)
+    round_fn = make_round_fn(mesh, cfg, ops.PR_PULL, sync_delta=True,
+                             collect_stats=collect_stats)
     rounds = 0
+    stats = [] if collect_stats else None
     t0 = time.perf_counter()
     while rounds < max_rounds:
         contrib = rank * inv_out
-        acc = round_fn(stacked_rg, contrib, jnp.zeros((v,), jnp.float32),
+        out = round_fn(stacked_rg, contrib, jnp.zeros((v,), jnp.float32),
                        frontier)
+        if collect_stats:
+            acc, st = out
+            stats.append(stats_per_device(st))
+        else:
+            acc = out
         new_rank = (1.0 - damping) / v + damping * acc
         delta = float(jnp.max(jnp.abs(new_rank - rank)))
         rank = new_rank
         rounds += 1
         if delta < tol:
             break
-    return rank, rounds, time.perf_counter() - t0
+    total = time.perf_counter() - t0
+    if collect_stats:
+        return rank, rounds, total, stats
+    return rank, rounds, total

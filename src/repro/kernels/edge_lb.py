@@ -17,6 +17,15 @@ VMEM line of ``start_e`` per step) and the subsequent ``col_idx``
 gathers are coalesced.  ``blocked`` strides lane ids by ``w_per``,
 destroying both properties — the paper's Figure 4/8 comparison.
 
+Edge-id enumeration contract (shared with the XLA ``_lb_pass`` in
+core/balancer.py): ``w_per = ceil(ecap / num_tiles)`` and the blocked
+permutation is a bijection of exactly ``span = w_per * num_tiles`` ids.
+The kernel grid covers ``span`` rounded up to the tile size; positions
+past ``span`` are masked out *before* the permutation is applied, so
+blocked mode can neither miss nor double-process an edge regardless of
+how ``num_tiles`` divides the padded extent (double-processing would
+corrupt add-combine operators).
+
 The prefix/row/value arrays of the huge bin are small (a few thousand
 entries at most: huge vertices are rare by definition), so each grid
 step keeps them whole in VMEM — the TPU realization of the paper's
@@ -39,19 +48,20 @@ from jax.experimental import pallas as pl
 def _kernel(start_ref, row_ref, val_ref, total_ref,
             ge_ref, src_ref, val_out_ref, msk_ref,
             *, tile_r: int, distribution: str, w_per: int,
-            num_tiles: int, h: int):
+            num_tiles: int, span: int, h: int):
     i = pl.program_id(0)
     tile = tile_r * 128
     # ---- edge ids for this tile -------------------------------------
     lin = (jax.lax.broadcasted_iota(jnp.int32, (tile_r, 128), 0) * 128
            + jax.lax.broadcasted_iota(jnp.int32, (tile_r, 128), 1))
     eid0 = i * tile + lin
+    enum_ok = eid0 < span          # bijection domain of the permutation
     if distribution == "blocked":
         eid = (eid0 % num_tiles) * w_per + eid0 // num_tiles
     else:  # cyclic: contiguous ids per tile (lane-major)
         eid = eid0
     total = total_ref[0, 0]
-    emask = eid < total
+    emask = enum_ok & (eid < total)
     eid_c = jnp.where(emask, eid, 0)
 
     start_e = start_ref[0, :]                      # [H] whole, in VMEM
@@ -92,17 +102,19 @@ def edge_lb_map(start_e: jax.Array, row_start: jax.Array, hval: jax.Array,
     """Run the LB mapping kernel over ``n_enum`` edge ids.
 
     Returns (graph_e, slot_j, src_val, mask) flat arrays of length
-    n_enum (= len span padded to the tile size).
+    ``ceil(w_per * num_tiles / tile_edges) * tile_edges`` where
+    ``w_per = ceil(n_enum / num_tiles)`` — the enumeration span padded
+    to the kernel tile size.
     """
     h = start_e.shape[0]
     if n_enum is None:
         n_enum = h  # caller really should pass the edge span
     tile_r = tile_edges // 128
     assert tile_edges % 128 == 0
-    n_enum = -(-n_enum // tile_edges) * tile_edges
-    grid = n_enum // tile_edges
-    w_per = n_enum // num_tiles if n_enum % num_tiles == 0 \
-        else -(-n_enum // num_tiles)
+    w_per = -(-n_enum // num_tiles)
+    span = w_per * num_tiles          # exact bijection domain
+    n_pad = -(-span // tile_edges) * tile_edges
+    grid = n_pad // tile_edges
 
     out_shape = [
         jax.ShapeDtypeStruct((grid * tile_r, 128), jnp.int32),  # graph_e
@@ -112,7 +124,7 @@ def edge_lb_map(start_e: jax.Array, row_start: jax.Array, hval: jax.Array,
     ]
     kern = functools.partial(_kernel, tile_r=tile_r,
                              distribution=distribution, w_per=w_per,
-                             num_tiles=num_tiles, h=h)
+                             num_tiles=num_tiles, span=span, h=h)
     full = pl.BlockSpec((1, h), lambda i: (0, 0))
     outs = pl.pallas_call(
         kern,

@@ -5,6 +5,18 @@ in core/balancer.py.  The mapping (searchsorted / tile expansion) runs
 in the Pallas kernel; the irregular HBM traffic (col_idx gather,
 scatter-combine into labels) runs in XLA, which lowers it to native TPU
 gather/scatter — see edge_lb.py for the design rationale.
+
+Each path ships two entries, registered with the executor registry in
+core/balancer.py (DESIGN.md section 3):
+
+* ``twc_bin_apply`` / ``edge_lb_apply`` — host-driven entries: top-level
+  jitted, shapes are the per-round *bucketed* capacities chosen by
+  ``relax``; one compilation per bucket.
+* ``twc_bin_apply_static`` / ``edge_lb_apply_static`` — fully-jit
+  entries for ``relax_spmd``: plain functions meant to be traced inside
+  an enclosing ``jit``/``shard_map``; capacities are static (V for the
+  bins, E for the LB span), the chunk index is a traced scalar so a
+  ``lax.while_loop`` can drive unbounded bins.
 """
 from __future__ import annotations
 
@@ -26,29 +38,50 @@ def _apply(labels, target, cand, mask, combine):
         jnp.where(mask, cand, 0).astype(labels.dtype), mode="drop")
 
 
-@partial(jax.jit,
-         static_argnames=("ecap", "op", "distribution", "tile_edges"))
-def edge_lb_apply(g, values, labels, hvidx, hdeg, hrow, total, ecap: int,
-                  op, distribution: str, tile_edges: int):
+# ---------------------------------------------------------------------------
+# LB executor (edge-balanced renumbering)
+# ---------------------------------------------------------------------------
+
+def edge_lb_apply_static(g, values, labels, hvidx, hdeg, hrow, total,
+                         ecap: int, op, distribution: str,
+                         num_tiles: int, tile_edges: int):
+    """Fully-jit LB entry: trace-safe body (no own jit wrapper)."""
     start_e = jnp.cumsum(hdeg) - hdeg
     vsafe = jnp.where(hvidx < values.shape[0], hvidx, 0)
     hval = values[vsafe]
     ge, j, val, mask = _edge_lb.edge_lb_map(
         start_e, hrow, hval, total, ecap,
-        tile_edges=tile_edges, distribution=distribution)
+        tile_edges=tile_edges, distribution=distribution,
+        num_tiles=num_tiles)
     dst = g.col_idx[ge]
     w = g.edge_w[ge]
     if op.direction == "push":
         cand = op.msg(val, w)
         return _apply(labels, dst, cand, mask, op.combine)
-    src = jnp.where(hvidx.shape[0] > 0, hvidx[jnp.clip(j, 0, hvidx.shape[0] - 1)], 0)
+    src = jnp.where(hvidx.shape[0] > 0,
+                    hvidx[jnp.clip(j, 0, hvidx.shape[0] - 1)], 0)
     cand = op.msg(values[dst], w)
     return _apply(labels, src, cand, mask, op.combine)
 
 
-@partial(jax.jit, static_argnames=("width", "op", "chunk"))
-def twc_bin_apply(g, values, labels, bvidx, bdeg, brow, width: int, op,
-                  chunk: int):
+@partial(jax.jit,
+         static_argnames=("ecap", "op", "distribution", "num_tiles",
+                          "tile_edges"))
+def edge_lb_apply(g, values, labels, hvidx, hdeg, hrow, total, ecap: int,
+                  op, distribution: str, num_tiles: int, tile_edges: int):
+    """Host-driven LB entry: jitted per (ecap, op, ...) bucket."""
+    return edge_lb_apply_static(g, values, labels, hvidx, hdeg, hrow,
+                                total, ecap, op, distribution, num_tiles,
+                                tile_edges)
+
+
+# ---------------------------------------------------------------------------
+# Bin executor (vertex-binned TWC-analog passes)
+# ---------------------------------------------------------------------------
+
+def twc_bin_apply_static(g, values, labels, bvidx, bdeg, brow, width: int,
+                         op, chunk):
+    """Fully-jit bin entry: ``chunk`` may be a traced int32 scalar."""
     sentinel = labels.shape[0]
     vsafe = jnp.where(bvidx < values.shape[0], bvidx, 0)
     bval = values[vsafe]
@@ -62,3 +95,11 @@ def twc_bin_apply(g, values, labels, bvidx, bdeg, brow, width: int, op,
         return _apply(labels, dst, cand, mask, op.combine)
     cand = op.msg(values[dst], w)
     return _apply(labels, anchor, cand, mask, op.combine)
+
+
+@partial(jax.jit, static_argnames=("width", "op"))
+def twc_bin_apply(g, values, labels, bvidx, bdeg, brow, width: int, op,
+                  chunk):
+    """Host-driven bin entry: jitted per (width, op) bucket."""
+    return twc_bin_apply_static(g, values, labels, bvidx, bdeg, brow,
+                                width, op, chunk)

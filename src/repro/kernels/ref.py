@@ -9,12 +9,15 @@ def edge_lb_map_ref(start_e, row_start, hval, total_edges, n_enum,
                     *, tile_edges: int = 2048, distribution: str = "cyclic",
                     num_tiles: int = 64):
     """Oracle for edge_lb.edge_lb_map (same output contract)."""
-    n_enum = -(-n_enum // tile_edges) * tile_edges
     w_per = -(-n_enum // num_tiles)
-    eid = jnp.arange(n_enum, dtype=jnp.int32)
+    span = w_per * num_tiles            # exact bijection domain
+    n_pad = -(-span // tile_edges) * tile_edges
+    eid0 = jnp.arange(n_pad, dtype=jnp.int32)
     if distribution == "blocked":
-        eid = (eid % num_tiles) * w_per + eid // num_tiles
-    emask = eid < total_edges
+        eid = (eid0 % num_tiles) * w_per + eid0 // num_tiles
+    else:
+        eid = eid0
+    emask = (eid0 < span) & (eid < total_edges)
     eid_c = jnp.where(emask, eid, 0)
     j = jnp.searchsorted(start_e, eid_c, side="right") - 1
     j = jnp.clip(j, 0, start_e.shape[0] - 1)

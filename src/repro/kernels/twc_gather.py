@@ -6,6 +6,14 @@ inner trip count is identical across lanes (the TPU analogue of the
 warp-uniform execution TWC buys on GPUs).  Emits (graph_e, anchor, val,
 mask) tiles; gather/scatter is applied outside by XLA (see edge_lb.py
 for the rationale).
+
+``chunk`` — the pass index for unbounded bins (each pass covers edges
+[chunk*W, (chunk+1)*W) of every vertex) — is a *runtime scalar operand*
+fed through a (1, 1) block, not a compile-time constant: the fully-jit
+SPMD round (balancer.relax_spmd) iterates chunks with a
+``lax.while_loop`` whose trip count is data-dependent, so the kernel
+must accept a traced chunk.  The host-driven round passes Python ints,
+which trace to the same single compiled kernel.
 """
 from __future__ import annotations
 
@@ -16,13 +24,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(vidx_ref, deg_ref, row_ref, val_ref,
+def _kernel(chunk_ref, vidx_ref, deg_ref, row_ref, val_ref,
             ge_ref, anchor_ref, val_out_ref, msk_ref,
-            *, width: int, chunk: int, sentinel: int):
+            *, width: int, sentinel: int):
     deg = deg_ref[0, :]                        # [tile_v]
     row = row_ref[0, :]
     vid = vidx_ref[0, :]
     val = val_ref[0, :]
+    chunk = chunk_ref[0, 0]
     off = (chunk * width
            + jax.lax.broadcasted_iota(jnp.int32, (deg.shape[0], width), 1))
     emask = (off < deg[:, None]) & (vid[:, None] < sentinel)
@@ -34,9 +43,10 @@ def _kernel(vidx_ref, deg_ref, row_ref, val_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("width", "chunk", "tile_v", "sentinel", "interpret"))
+    static_argnames=("width", "tile_v", "sentinel", "interpret"))
 def twc_bin_map(vidx: jax.Array, deg: jax.Array, row_start: jax.Array,
-                val: jax.Array, *, width: int, chunk: int = 0,
+                val: jax.Array, *, width: int,
+                chunk: jax.Array | int = 0,
                 tile_v: int = 8, sentinel: int = 1 << 30,
                 interpret: bool = True):
     """Expand one degree bin into (graph_e, anchor, val, mask) tiles."""
@@ -52,8 +62,9 @@ def twc_bin_map(vidx: jax.Array, deg: jax.Array, row_start: jax.Array,
     # lane dim must be 128-aligned for the MXU/VPU; widths are powers of
     # two >= 8 in our configs, pad up when narrow.
     wp = max(width, 128) if width % 128 else width
-    kern = functools.partial(_kernel, width=wp, chunk=chunk,
-                             sentinel=sentinel)
+    kern = functools.partial(_kernel, width=wp, sentinel=sentinel)
+    chunk = jnp.asarray(chunk, jnp.int32).reshape(1, 1)
+    scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
     vec = pl.BlockSpec((1, tile_v), lambda i: (0, i))
     out_shape = [
         jax.ShapeDtypeStruct((bp, wp), jnp.int32),
@@ -64,11 +75,11 @@ def twc_bin_map(vidx: jax.Array, deg: jax.Array, row_start: jax.Array,
     outs = pl.pallas_call(
         kern,
         grid=(grid,),
-        in_specs=[vec, vec, vec, vec],
+        in_specs=[scalar, vec, vec, vec, vec],
         out_specs=[pl.BlockSpec((tile_v, wp), lambda i: (i, 0))] * 4,
         out_shape=out_shape,
         interpret=interpret,
-    )(vidx[None, :], deg[None, :], row_start[None, :], val[None, :])
+    )(chunk, vidx[None, :], deg[None, :], row_start[None, :], val[None, :])
     ge, anchor, v, msk = outs
     if wp != width:
         # only the first `width` lanes are real when width < 128

@@ -3,6 +3,10 @@ load-balancing strategy computes the identical fixpoint on ANY graph
 (the balancer only changes the work schedule, never the semantics)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import graph as G
