@@ -20,12 +20,7 @@ def bench_graphs(scale: int = 14, seed: int = 1):
 
 
 def symmetrized(g):
-    rp = np.asarray(g.row_ptr).astype(np.int64)
-    ci = np.asarray(g.col_idx).astype(np.int64)
-    src = np.repeat(np.arange(g.num_vertices, dtype=np.int64),
-                    rp[1:] - rp[:-1])
-    return G.from_edge_list(np.concatenate([src, ci]),
-                            np.concatenate([ci, src]), g.num_vertices)
+    return G.symmetrized(g)
 
 
 def timed(fn, repeats: int = 3):

@@ -1,5 +1,12 @@
 """Fig 6/10 analogue: multi-device scaling of D-IrGL(TWC) vs
-D-IrGL(ALB) — BSP rounds over partitioned graphs, 1..8 devices.
+D-IrGL(ALB) — BSP rounds over partitioned graphs, 1..8 devices, under
+both sync substrates (``replicated`` all-reduce vs ``mirror``
+boundary exchange, DESIGN.md section 6).
+
+Besides the CSV rows, writes ``benchmarks/out/fig6_scaling.json`` with
+per-round communication volume (``bytes_synced``, summed over devices)
+so the perf trajectory tracks what actually crosses the interconnect,
+not just wall clock.
 
 Re-execs itself with a forced host device count so the multi-device
 run never contaminates the parent process's single-device state.
@@ -11,6 +18,8 @@ import subprocess
 import sys
 
 MAX_DEV = 8
+OUT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "out", "fig6_scaling.json")
 
 
 def run():
@@ -30,9 +39,8 @@ def run():
 
 
 def inner():
+    import json
     import time
-    import jax
-    import numpy as np
     from repro.core import graph as G
     from repro.core.partition import partition
     from repro.core import gluon
@@ -41,19 +49,48 @@ def inner():
 
     g = G.rmat(13, 16, seed=1)
     src = G.highest_out_degree_vertex(g)
+    rows = []
     for ndev in [1, 2, 4, 8]:
         mesh = gluon.device_mesh(ndev)
-        sg = partition(g, ndev, "oec")
+        sg, meta = partition(g, ndev, "oec")
         for strat in ["twc", "alb"]:
             cfg = BalancerConfig(strategy=strat, threshold=1024)
-            # warmup (compile)
-            gluon.sssp_distributed(sg, mesh, src, cfg, max_rounds=200)
-            t0 = time.perf_counter()
-            labels, rounds, _ = gluon.sssp_distributed(
-                sg, mesh, src, cfg, max_rounds=200)
-            secs = time.perf_counter() - t0
-            emit(f"fig6/sssp/{strat}/gpus{ndev}", secs,
-                 f"rounds={rounds}")
+            for sync in ["replicated", "mirror"]:
+                # warmup (compile)
+                gluon.sssp_distributed(sg, mesh, src, cfg, max_rounds=200,
+                                       sync=sync, meta=meta)
+                t0 = time.perf_counter()
+                labels, rounds, _ = gluon.sssp_distributed(
+                    sg, mesh, src, cfg, max_rounds=200,
+                    sync=sync, meta=meta)
+                secs = time.perf_counter() - t0
+                # separate instrumented run: comm volume per round
+                _, _, _, stats = gluon.sssp_distributed(
+                    sg, mesh, src, cfg, max_rounds=200,
+                    collect_stats=True, sync=sync, meta=meta)
+                bytes_per_round = [
+                    int(sum(st.bytes_synced for st in per_round))
+                    for per_round in stats]
+                total_bytes = sum(bytes_per_round)
+                emit(f"fig6/sssp/{strat}/gpus{ndev}/{sync}", secs,
+                     f"rounds={rounds};bytes_total={total_bytes}")
+                rows.append(dict(
+                    app="sssp", strategy=strat, num_devices=ndev,
+                    sync=sync, seconds=secs, rounds=rounds,
+                    bytes_synced_per_round=bytes_per_round,
+                    bytes_synced_total=total_bytes,
+                    replication_factor=meta.replication_factor))
+    os.makedirs(os.path.dirname(OUT_JSON), exist_ok=True)
+    with open(OUT_JSON, "w") as f:
+        json.dump(dict(
+            figure="fig6_scaling",
+            graph=dict(kind="rmat", scale=13, edge_factor=16,
+                       num_vertices=g.num_vertices,
+                       num_edges=g.num_edges),
+            replicated_baseline_bytes_per_round={
+                str(d): g.num_vertices * 4 * d for d in [1, 2, 4, 8]},
+            rows=rows), f, indent=2)
+    print(f"# wrote {OUT_JSON}", flush=True)
 
 
 if __name__ == "__main__":

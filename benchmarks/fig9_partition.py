@@ -39,16 +39,20 @@ def inner():
     src = G.highest_out_degree_vertex(g)
     mesh = gluon.device_mesh(NDEV)
     for policy in ["oec", "iec", "cvc"]:
-        sg = partition(g, NDEV, policy)
-        st = partition_stats(sg)
+        sg, meta = partition(g, NDEV, policy)
+        st = partition_stats(sg, meta)
         for strat in ["twc", "alb"]:
             cfg = BalancerConfig(strategy=strat, threshold=1024)
-            gluon.sssp_distributed(sg, mesh, src, cfg, max_rounds=200)
-            t0 = time.perf_counter()
-            gluon.sssp_distributed(sg, mesh, src, cfg, max_rounds=200)
-            secs = time.perf_counter() - t0
-            emit(f"fig9/sssp/{policy}/{strat}", secs,
-                 f"edge_imbalance={st['imbalance']:.2f}")
+            for sync in ["replicated", "mirror"]:
+                gluon.sssp_distributed(sg, mesh, src, cfg, max_rounds=200,
+                                       sync=sync, meta=meta)
+                t0 = time.perf_counter()
+                gluon.sssp_distributed(sg, mesh, src, cfg, max_rounds=200,
+                                       sync=sync, meta=meta)
+                secs = time.perf_counter() - t0
+                emit(f"fig9/sssp/{policy}/{strat}/{sync}", secs,
+                     f"edge_imbalance={st['imbalance']:.2f};"
+                     f"replication={st['replication_factor']:.2f}")
 
 
 if __name__ == "__main__":

@@ -14,7 +14,9 @@ Selectors and what each script reproduces:
 * ``fig5``     (fig5_load_distribution.py) — Fig 1/5: per-tile edge
   loads round by round, TWC vs ALB, host and SPMD rounds.
 * ``fig6``     (fig6_scaling.py)        — Fig 6/10: 1..8-device BSP
-  scaling of the Gluon-analog runtime, TWC vs ALB.
+  scaling of the Gluon-analog runtime, TWC vs ALB, replicated vs
+  mirror sync; also writes benchmarks/out/fig6_scaling.json with
+  per-round comm volume (bytes_synced).
 * ``fig8``     (fig8_cyclic_blocked.py) — Fig 8: cyclic vs blocked edge
   deal inside the LB executor (XLA and Pallas paths) + the Fig 4
   structural locality metric.

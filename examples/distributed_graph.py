@@ -34,12 +34,18 @@ ref = sssp(g, src, BalancerConfig(strategy="alb", threshold=1024))
 
 mesh = gluon.device_mesh(4)
 for policy in ["oec", "iec", "cvc"]:
-    sg = partition(g, 4, policy)
-    st = partition_stats(sg)
+    sg, meta = partition(g, 4, policy)
+    st = partition_stats(sg, meta)
     for strat in ["twc", "alb"]:
         cfg = BalancerConfig(strategy=strat, threshold=1024)
-        labels, rounds, secs = gluon.sssp_distributed(sg, mesh, src, cfg)
-        ok = np.array_equal(np.asarray(labels), np.asarray(ref.labels))
-        print(f"{policy}/{strat:4s}: {secs * 1e3:7.1f} ms  "
-              f"rounds={rounds} edge-imbalance={st['imbalance']:.2f} "
-              f"correct={ok}")
+        for sync in ["replicated", "mirror"]:
+            labels, rounds, secs, stats = gluon.sssp_distributed(
+                sg, mesh, src, cfg, collect_stats=True,
+                sync=sync, meta=meta)
+            ok = np.array_equal(np.asarray(labels), np.asarray(ref.labels))
+            comm = sum(st.bytes_synced
+                       for per_round in stats for st in per_round)
+            print(f"{policy}/{strat:4s}/{sync:10s}: {secs * 1e3:7.1f} ms  "
+                  f"rounds={rounds} edge-imbalance={st['imbalance']:.2f} "
+                  f"replication={st['replication_factor']:.2f} "
+                  f"synced={comm / 1024:.1f}KiB correct={ok}")

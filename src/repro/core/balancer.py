@@ -53,7 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .graph import Graph
-from .frontier import next_bucket, compact
+from .frontier import next_bucket, compact, count, dirty_mask
 from .operators import Operator
 
 
@@ -199,6 +199,9 @@ class RoundStats(NamedTuple):
     lb_invoked: bool        # did the inspector fire the LB executor?
     tile_loads_twc: np.ndarray   # per-tile edge counts, TWC path
     tile_loads_lb: np.ndarray    # per-tile edge counts, LB path
+    mirrors_synced: int = 0  # label entries exchanged by the BSP sync
+    bytes_synced: int = 0    # ... in bytes (0 outside the distributed
+    #                          runtime; see gluon.py / DESIGN.md section 6)
 
     @classmethod
     def from_device(cls, s: "RoundStatsDev") -> "RoundStats":
@@ -209,7 +212,9 @@ class RoundStats(NamedTuple):
                    tile_loads_twc=np.asarray(s.tile_loads_twc,
                                              dtype=np.int64),
                    tile_loads_lb=np.asarray(s.tile_loads_lb,
-                                            dtype=np.int64))
+                                            dtype=np.int64),
+                   mirrors_synced=int(s.mirrors_synced),
+                   bytes_synced=int(s.bytes_synced))
 
 
 class RoundStatsDev(NamedTuple):
@@ -222,6 +227,8 @@ class RoundStatsDev(NamedTuple):
     lb_invoked: jax.Array        # bool scalar
     tile_loads_twc: jax.Array    # int32[num_tiles]
     tile_loads_lb: jax.Array     # int32[num_tiles]
+    mirrors_synced: jax.Array    # int32 scalar (filled in by gluon.py)
+    bytes_synced: jax.Array      # int32 scalar (filled in by gluon.py)
 
 
 # ---------------------------------------------------------------------------
@@ -355,6 +362,31 @@ def _lb_tile_loads(total, num_tiles: int):
 # host-driven round (per-round "kernel launches", bucketed jit)
 # ---------------------------------------------------------------------------
 
+@partial(jax.jit, static_argnames=("cfg",))
+def _host_round_counts(g: Graph, frontier: jax.Array, cfg: BalancerConfig):
+    """Every host-side decision scalar of one round, fused into a single
+    int32 vector so ``relax`` pays ONE device->host transfer per round
+    (instead of one blocking ``int(jnp.sum(...))`` per bin plus the
+    frontier count and inspector sums).
+
+    Layout: ``[frontier_count,
+               (bin_count, bin_max_deg, bin_edge_sum) per plan bin...,
+               huge_count, huge_edge_sum (when the plan has an LB path)]``
+    """
+    deg = g.row_ptr[1:] - g.row_ptr[:-1]
+    plan = make_plan(cfg)
+    vals = [count(frontier)]
+    for spec in plan.bins:
+        m = spec.mask(deg, frontier)
+        md = jnp.where(m, deg, 0)
+        vals += [jnp.sum(m.astype(jnp.int32)), jnp.max(md), jnp.sum(md)]
+    if plan.lb != "none":
+        hm = plan.lb_mask(deg, frontier, cfg)
+        vals += [jnp.sum(hm.astype(jnp.int32)),
+                 jnp.sum(jnp.where(hm, deg, 0))]
+    return jnp.stack([jnp.asarray(v, jnp.int32) for v in vals])
+
+
 def relax(g: Graph, values: jax.Array, labels: jax.Array,
           frontier: jax.Array, cfg: BalancerConfig, op: Operator,
           collect_stats: bool = False):
@@ -364,7 +396,9 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
     quantity being propagated (may alias ``labels``); ``labels`` is the
     array updated by scatter-combine.
     """
-    nf = int(jnp.sum(frontier))
+    plan = make_plan(cfg)
+    cnt = np.asarray(_host_round_counts(g, frontier, cfg))
+    nf = int(cnt[0])
     if nf == 0:
         return labels, None
     fcap = next_bucket(nf)
@@ -372,7 +406,6 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
     deg, row_start, valid = _frontier_meta(g, fidx)
 
     ex = get_executor(cfg.executor)
-    plan = make_plan(cfg)
     stats = dict(frontier_size=nf, edges_twc=0, edges_lb=0,
                  lb_invoked=False,
                  tile_loads_twc=np.zeros(cfg.num_tiles, np.int64),
@@ -388,29 +421,29 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
                 jnp.where(take, deg[sel_safe], 0),
                 jnp.where(take, row_start[sel_safe], 0))
 
+    k = 1
     for spec in plan.bins:
-        mask = spec.mask(deg, valid)
-        n = int(jnp.sum(mask))
+        n, max_d, edge_sum = int(cnt[k]), int(cnt[k + 1]), int(cnt[k + 2])
+        k += 3
         if n == 0:
             continue
+        mask = spec.mask(deg, valid)
         bvidx, bdeg, brow = gather_bin(mask, next_bucket(n))
-        max_d = int(jnp.max(bdeg))
         passes = max(1, -(-max_d // spec.width))
         for c in range(passes):
             labels = ex.bin_host(g, values, labels, bvidx, bdeg, brow,
                                  spec.width, op, c)
         if collect_stats:
-            stats["edges_twc"] += int(jnp.sum(bdeg))
+            stats["edges_twc"] += edge_sum
             stats["tile_loads_twc"] += np.asarray(
                 _tile_loads(bdeg, bvidx < labels.shape[0], cfg.num_tiles))
 
     if plan.lb != "none":
-        hmask = plan.lb_mask(deg, valid, cfg)
         # ---- inspector (Section 4.1): is the huge bin non-empty? ----
-        n_huge = int(jnp.sum(hmask))
+        n_huge, total = int(cnt[k]), int(cnt[k + 1])
         if n_huge > 0:
+            hmask = plan.lb_mask(deg, valid, cfg)
             hvidx, hdeg, hrow = gather_bin(hmask, next_bucket(n_huge))
-            total = int(jnp.sum(hdeg))
             if total > 0:
                 ecap = next_bucket(total, minimum=cfg.lb_tile_edges)
                 labels = ex.lb_host(g, values, labels, hvidx, hdeg, hrow,
@@ -430,10 +463,11 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
 # fully-jit SPMD round (for shard_map / distributed execution)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cfg", "op", "collect_stats"))
+@partial(jax.jit, static_argnames=("cfg", "op", "collect_stats",
+                                   "return_dirty"))
 def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
                frontier: jax.Array, cfg: BalancerConfig, op: Operator,
-               collect_stats: bool = False):
+               collect_stats: bool = False, return_dirty: bool = False):
     """Static-shape ALB round: capacities fixed at V/E, LB path guarded
     by ``lax.cond``, unbounded bins driven by ``lax.while_loop`` — the
     SPMD realization of the inspector-executor split.  Runs the same
@@ -441,14 +475,17 @@ def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
     entries, so all four strategies (and both the XLA and Pallas
     backends) are available inside ``shard_map``.
 
-    Returns ``labels`` or, with ``collect_stats=True``,
-    ``(labels, RoundStatsDev)`` where the stats are device arrays.
-    ``tile_loads_twc`` reflects this mode's actual deal — bin members
-    spread over tiles in static capacity-V slot order — so it is
-    comparable across rounds/devices but not bit-identical to the
+    Returns ``labels``, extended to ``(labels, RoundStatsDev)`` with
+    ``collect_stats=True`` and/or ``(..., dirty)`` with
+    ``return_dirty=True`` — ``dirty`` is the jit-safe changed-label
+    bitvector the master/mirror sync exchanges over (DESIGN.md
+    section 6).  ``tile_loads_twc`` reflects this mode's actual deal —
+    bin members spread over tiles in static capacity-V slot order — so
+    it is comparable across rounds/devices but not bit-identical to the
     host round's bucketed-compacted deal; the LB-path loads use the
     same balanced formula in both modes.
     """
+    labels_in = labels
     v = labels.shape[0]
     fidx = compact(frontier, v)
     deg, row_start, valid = _frontier_meta(g, fidx)
@@ -514,10 +551,14 @@ def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
             n_huge > 0, lb_branch, skip_branch, labels)
         lb_invoked = n_huge > 0
 
+    outs = (labels,)
     if collect_stats:
-        return labels, RoundStatsDev(
+        outs += (RoundStatsDev(
             frontier_size=jnp.sum(frontier.astype(jnp.int32)),
             edges_twc=edges_twc, edges_lb=edges_lb,
             lb_invoked=lb_invoked,
-            tile_loads_twc=tl_twc, tile_loads_lb=tl_lb)
-    return labels
+            tile_loads_twc=tl_twc, tile_loads_lb=tl_lb,
+            mirrors_synced=jnp.int32(0), bytes_synced=jnp.int32(0)),)
+    if return_dirty:
+        outs += (dirty_mask(labels_in, labels),)
+    return outs[0] if len(outs) == 1 else outs

@@ -36,6 +36,14 @@ def count(mask: jax.Array) -> jax.Array:
     return jnp.sum(mask.astype(jnp.int32))
 
 
+@jax.jit
+def dirty_mask(old: jax.Array, new: jax.Array) -> jax.Array:
+    """Per-vertex "label touched this round" bitvector (Gluon's dirty
+    set): the master/mirror sync only exchanges vertices set here
+    (DESIGN.md section 6)."""
+    return new != old
+
+
 def full_frontier(num_vertices: int) -> jax.Array:
     return jnp.ones((num_vertices,), dtype=bool)
 

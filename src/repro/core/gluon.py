@@ -6,10 +6,21 @@ machinery, then participates in a global synchronization that
 reconciles vertex labels with the operator's combiner (min for
 bfs/sssp/cc, add for pr/kcore deltas).
 
-Labels are replicated (every vertex mirrored everywhere, see
-partition.py); sync is a single ``pmin``/``psum`` over the ``dev`` mesh
-axis — one fused all-reduce per round, matching Gluon's bulk
-synchronous reduce-broadcast pair.
+Two sync substrates are available (``sync=`` on every driver):
+
+* ``"replicated"`` — every vertex mirrored everywhere; sync is a single
+  ``pmin``/``psum`` over the ``dev`` mesh axis — one fused all-reduce
+  per round.  Communication-heaviest but simplest; kept as the parity
+  baseline.
+* ``"mirror"`` — the master/mirror substrate (DESIGN.md section 6):
+  labels live per device, every vertex has one master
+  (``PartitionMeta.master_bounds``), and each round runs Gluon's
+  reduce-broadcast pair over the *boundary only* — a dirty-masked
+  reduce-to-master followed by a broadcast-to-mirrors, both built from
+  gathers over the padded mirror index lists plus ``lax.ppermute``
+  rings over the ``dev`` axis.  Only labels touched this round (the
+  jit-safe dirty bitvector out of ``relax_spmd``) carry payload;
+  ``RoundStatsDev.bytes_synced`` / ``mirrors_synced`` count them.
 
 The per-device round is the fully-jit ``relax_spmd`` variant, whose
 ``lax.cond`` inspector skips the LB executor's work on devices whose
@@ -35,6 +46,7 @@ from jax.experimental.shard_map import shard_map
 from .graph import Graph, INF
 from .balancer import BalancerConfig, RoundStats, RoundStatsDev, relax_spmd
 from .operators import Operator
+from .partition import PartitionMeta
 from . import operators as ops
 
 
@@ -51,9 +63,19 @@ def _sync(labels, combine: str):
     return jax.lax.psum(labels, "dev")
 
 
+def _neutral(combine: str, dtype):
+    """Identity element of the combiner — what a non-dirty mirror slot
+    carries so skipping it is exact."""
+    if combine == "min":
+        if jnp.issubdtype(dtype, jnp.floating):
+            return jnp.asarray(jnp.inf, dtype)
+        return jnp.asarray(INF, dtype)
+    return jnp.asarray(0, dtype)
+
+
 def make_round_fn(mesh, cfg: BalancerConfig, op: Operator,
                   sync_delta: bool = False, collect_stats: bool = False):
-    """Build the jitted one-BSP-round function.
+    """Build the jitted one-BSP-round function (replicated sync).
 
     sync_delta: for ``add``-combine operators the per-device scatter
     accumulates into a zero-initialized delta that is psum'd, then added
@@ -62,6 +84,9 @@ def make_round_fn(mesh, cfg: BalancerConfig, op: Operator,
     collect_stats: the round function additionally returns a
     ``RoundStatsDev`` whose leaves carry a leading ``dev`` axis — one
     instrumentation record per device per round (Fig 1/5 in SPMD mode).
+    ``bytes_synced`` reports the all-reduce's per-device volume —
+    ``V * itemsize`` every round, the baseline the mirror substrate
+    undercuts.
     """
     def round_fn(stacked_g: Graph, values, labels, frontier):
         # shard_map hands each device a [1, ...] block: squeeze to local
@@ -82,6 +107,10 @@ def make_round_fn(mesh, cfg: BalancerConfig, op: Operator,
             new, st = out if collect_stats else (out, None)
             new = _sync(new, op.combine)
         if collect_stats:
+            v = labels.shape[0]
+            st = st._replace(
+                mirrors_synced=jnp.int32(v),
+                bytes_synced=jnp.int32(v * labels.dtype.itemsize))
             # leading axis of size 1 -> stacked to [D, ...] by out_specs
             return new, jax.tree_util.tree_map(lambda x: x[None], st)
         return new
@@ -89,12 +118,149 @@ def make_round_fn(mesh, cfg: BalancerConfig, op: Operator,
     gspec = Graph(row_ptr=P("dev"), col_idx=P("dev"), edge_w=P("dev"))
     out_specs = P()
     if collect_stats:
-        out_specs = (P(), RoundStatsDev(*([P("dev")] * 6)))
+        out_specs = (P(), RoundStatsDev(*([P("dev")] * 8)))
     fn = shard_map(round_fn, mesh=mesh,
                    in_specs=(gspec, P(), P(), P()),
                    out_specs=out_specs,
                    check_rep=False)
     return jax.jit(fn)
+
+
+# ---- master/mirror substrate (DESIGN.md section 6) -------------------------
+
+def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
+                         meta: PartitionMeta,
+                         sync_delta: bool = False,
+                         collect_stats: bool = False,
+                         values_of=lambda l: l,
+                         next_frontier=lambda old, new, f: new < old,
+                         post_sync=None):
+    """One BSP round over owned state: local ALB round, then Gluon's
+    reduce-to-master -> broadcast-to-mirrors pair over the padded mirror
+    lists.
+
+    Per-device label/frontier state is carried across rounds as a
+    ``[D, V]`` array sharded over ``dev``.  The invariant maintained:
+    after the round, a device's copy is globally correct for every
+    vertex it masters or mirrors (= every endpoint of a local edge, the
+    only entries the next local round can read or write); other entries
+    may be stale, and the final labels are assembled owner-by-owner.
+
+    ``values_of`` / ``next_frontier`` / ``post_sync`` are traced inside
+    ``shard_map`` so frontier and value derivation stay device-local —
+    only a scalar activity count (and a residual, for convergence-driven
+    drivers) crosses to the host each round.
+    """
+    ndev = meta.num_devices
+    v = meta.num_vertices
+    if post_sync is None:
+        post_sync = ((lambda lab, acc: lab + acc) if sync_delta
+                     else (lambda lab, acc: acc))
+
+    def round_fn(stacked_g: Graph, mirror_t, incoming_t, lo_t, hi_t,
+                 labels, frontier):
+        g = Graph(row_ptr=stacked_g.row_ptr[0],
+                  col_idx=stacked_g.col_idx[0],
+                  edge_w=stacked_g.edge_w[0])
+        mirror_t = mirror_t[0]        # [D, L]: rows indexed by owner
+        incoming_t = incoming_t[0]    # [D, L]: rows indexed by toucher
+        lo, hi = lo_t[0], hi_t[0]     # my owned range
+        labels, frontier = labels[0], frontier[0]
+        me = jax.lax.axis_index("dev")
+
+        values = values_of(labels)
+        base = jnp.zeros_like(labels) if sync_delta else labels
+        out = relax_spmd(g, values, base, frontier, cfg, op,
+                         collect_stats=collect_stats, return_dirty=True)
+        if collect_stats:
+            new, st, dirty = out
+        else:
+            (new, dirty), st = out, None
+        neutral = _neutral(op.combine, new.dtype)
+
+        perm_fwd = [[(i, (i + s) % ndev) for i in range(ndev)]
+                    for s in range(ndev)]
+        perm_bwd = [[(i, (i - s) % ndev) for i in range(ndev)]
+                    for s in range(ndev)]
+
+        # ---- reduce-to-master: each ring step s ships my dirty values
+        # for vertices mastered s hops ahead; the sentinel-V padding is
+        # dropped by the scatter, non-dirty slots carry the neutral.
+        acc = new
+        n_exch = jnp.int32(0)
+        for s in range(1, ndev):
+            out_idx = mirror_t[(me + s) % ndev]
+            safe = jnp.where(out_idx < v, out_idx, 0)
+            live = (out_idx < v) & dirty[safe]
+            payload = jnp.where(live, new[safe], neutral)
+            n_exch += jnp.sum(live.astype(jnp.int32))
+            recv = jax.lax.ppermute(payload, "dev", perm_fwd[s])
+            in_idx = incoming_t[(me - s) % ndev]
+            if op.combine == "min":
+                acc = acc.at[in_idx].min(recv, mode="drop")
+            else:
+                acc = acc.at[in_idx].add(recv, mode="drop")
+
+        final = post_sync(labels, acc)
+
+        # ---- broadcast-to-mirrors: masters push the reduced values
+        # back along the reverse ring; mirrors overwrite their copies.
+        gdirty = final != labels
+        for s in range(1, ndev):
+            out_idx = incoming_t[(me - s) % ndev]
+            safe = jnp.where(out_idx < v, out_idx, 0)
+            live = (out_idx < v) & gdirty[safe]
+            payload = final[safe]
+            n_exch += jnp.sum(live.astype(jnp.int32))
+            recv = jax.lax.ppermute(payload, "dev", perm_bwd[s])
+            in_idx = mirror_t[(me + s) % ndev]
+            final = final.at[in_idx].set(recv, mode="drop")
+
+        new_frontier = next_frontier(labels, final, frontier)
+        active = jax.lax.psum(
+            jnp.sum(new_frontier.astype(jnp.int32)), "dev")
+        vids = jnp.arange(v, dtype=jnp.int32)
+        owned = (vids >= lo) & (vids < hi)
+        resid = jax.lax.pmax(jnp.max(jnp.where(
+            owned,
+            jnp.abs(final.astype(jnp.float32) - labels.astype(jnp.float32)),
+            0.0)), "dev")
+
+        outs = (final[None], new_frontier[None], active, resid)
+        if collect_stats:
+            st = st._replace(
+                mirrors_synced=n_exch,
+                bytes_synced=n_exch * jnp.int32(new.dtype.itemsize))
+            outs += (jax.tree_util.tree_map(lambda x: x[None], st),)
+        return outs
+
+    gspec = Graph(row_ptr=P("dev"), col_idx=P("dev"), edge_w=P("dev"))
+    out_specs = (P("dev"), P("dev"), P(), P())
+    if collect_stats:
+        out_specs += (RoundStatsDev(*([P("dev")] * 8)),)
+    fn = shard_map(round_fn, mesh=mesh,
+                   in_specs=(gspec, P("dev"), P("dev"), P("dev"), P("dev"),
+                             P("dev"), P("dev")),
+                   out_specs=out_specs,
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def _mirror_tables(meta: PartitionMeta):
+    """Device-resident sync metadata: the padded mirror lists in both
+    orientations plus the owned ranges."""
+    mirror_t = jnp.asarray(meta.mirror_idx)                       # [D,D,L]
+    incoming_t = jnp.asarray(meta.mirror_idx.transpose(1, 0, 2))  # [o,d,L]
+    lo = jnp.asarray(meta.master_bounds[:-1], jnp.int32)
+    hi = jnp.asarray(meta.master_bounds[1:], jnp.int32)
+    return mirror_t, incoming_t, lo, hi
+
+
+def assemble_owned(labels_dev, meta: PartitionMeta):
+    """Gather each vertex's label from its master's copy — the only
+    copies guaranteed globally correct under the mirror substrate."""
+    arr = np.asarray(labels_dev)
+    return jnp.asarray(arr[meta.owner, np.arange(meta.num_vertices)])
 
 
 def stats_per_device(st: RoundStatsDev) -> list[RoundStats]:
@@ -105,6 +271,14 @@ def stats_per_device(st: RoundStatsDev) -> list[RoundStats]:
         jax.tree_util.tree_map(lambda x: x[d], st)) for d in range(ndev)]
 
 
+def _require_meta(meta, sync):
+    if sync not in ("replicated", "mirror"):
+        raise ValueError(f"unknown sync {sync!r} (replicated|mirror)")
+    if sync == "mirror" and meta is None:
+        raise ValueError("sync='mirror' needs the PartitionMeta returned "
+                         "by partition()")
+
+
 def run_distributed(stacked_g: Graph, mesh, op: Operator,
                     init_labels, init_frontier,
                     cfg: BalancerConfig = BalancerConfig(),
@@ -112,12 +286,25 @@ def run_distributed(stacked_g: Graph, mesh, op: Operator,
                     next_frontier=lambda old, new, f: new < old,
                     sync_delta: bool = False,
                     max_rounds: int = 10_000,
-                    collect_stats: bool = False):
+                    collect_stats: bool = False,
+                    sync: str = "replicated",
+                    meta: PartitionMeta | None = None):
     """Generic distributed data-driven loop. Returns (labels, rounds,
     total_seconds) — or, with ``collect_stats=True``, (labels, rounds,
     total_seconds, stats) where ``stats[round][device]`` is a host
     :class:`RoundStats` — the compute/comm split feeds the Fig 7/11
-    breakdown and the per-device load plots."""
+    breakdown and the per-device load plots.
+
+    ``sync="mirror"`` (requires ``meta``) swaps the whole-array
+    all-reduce for the dirty-tracked boundary exchange; labels and
+    frontier stay per-device inside the loop and only a scalar activity
+    count comes back to the host each round.
+    """
+    _require_meta(meta, sync)
+    if sync == "mirror":
+        return _run_mirror(stacked_g, mesh, op, init_labels, init_frontier,
+                           cfg, values_of, next_frontier, sync_delta,
+                           max_rounds, collect_stats, meta)
     round_fn = make_round_fn(mesh, cfg, op, sync_delta=sync_delta,
                              collect_stats=collect_stats)
     labels, frontier = init_labels, init_frontier
@@ -141,55 +328,142 @@ def run_distributed(stacked_g: Graph, mesh, op: Operator,
     return labels, rounds, total
 
 
+def _run_mirror(stacked_g, mesh, op, init_labels, init_frontier, cfg,
+                values_of, next_frontier, sync_delta, max_rounds,
+                collect_stats, meta: PartitionMeta, post_sync=None,
+                tol: float | None = None):
+    """Owned-state loop shared by the data-driven drivers and the
+    convergence-driven ones: stops when the frontier empties, the round
+    budget runs out, or (``tol`` set) the owned-entry residual drops
+    below it."""
+    round_fn = make_mirror_round_fn(
+        mesh, cfg, op, meta, sync_delta=sync_delta,
+        collect_stats=collect_stats, values_of=values_of,
+        next_frontier=next_frontier, post_sync=post_sync)
+    mirror_t, incoming_t, lo, hi = _mirror_tables(meta)
+    ndev = meta.num_devices
+    labels_dev = jnp.tile(init_labels[None], (ndev, 1))
+    frontier_dev = jnp.tile(init_frontier[None], (ndev, 1))
+    active = int(jnp.sum(init_frontier))
+    rounds = 0
+    stats = [] if collect_stats else None
+    t0 = time.perf_counter()
+    while rounds < max_rounds and active > 0:
+        out = round_fn(stacked_g, mirror_t, incoming_t, lo, hi,
+                       labels_dev, frontier_dev)
+        if collect_stats:
+            labels_dev, frontier_dev, active_a, resid, st = out
+            stats.append(stats_per_device(st))
+        else:
+            labels_dev, frontier_dev, active_a, resid = out
+        active = int(active_a)
+        rounds += 1
+        if tol is not None and float(resid) < tol:
+            break
+    labels = assemble_owned(labels_dev, meta)
+    total = time.perf_counter() - t0
+    if collect_stats:
+        return labels, rounds, total, stats
+    return labels, rounds, total
+
+
 # ---- distributed application drivers --------------------------------------
 
 def sssp_distributed(stacked_g: Graph, mesh, source: int,
                      cfg: BalancerConfig = BalancerConfig(),
                      max_rounds: int = 10_000,
-                     collect_stats: bool = False):
+                     collect_stats: bool = False,
+                     sync: str = "replicated",
+                     meta: PartitionMeta | None = None):
     v = stacked_g.row_ptr.shape[-1] - 1
     dist = jnp.full((v,), INF, jnp.int32).at[source].set(0)
     frontier = jnp.zeros((v,), bool).at[source].set(True)
     return run_distributed(stacked_g, mesh, ops.SSSP_RELAX, dist, frontier,
                            cfg, max_rounds=max_rounds,
-                           collect_stats=collect_stats)
+                           collect_stats=collect_stats, sync=sync, meta=meta)
 
 
 def bfs_distributed(stacked_g: Graph, mesh, source: int,
                     cfg: BalancerConfig = BalancerConfig(),
                     max_rounds: int = 10_000,
-                    collect_stats: bool = False):
+                    collect_stats: bool = False,
+                    sync: str = "replicated",
+                    meta: PartitionMeta | None = None):
     v = stacked_g.row_ptr.shape[-1] - 1
     lvl = jnp.full((v,), INF, jnp.int32).at[source].set(0)
     frontier = jnp.zeros((v,), bool).at[source].set(True)
     return run_distributed(stacked_g, mesh, ops.BFS_HOP, lvl, frontier,
                            cfg, max_rounds=max_rounds,
-                           collect_stats=collect_stats)
+                           collect_stats=collect_stats, sync=sync, meta=meta)
 
 
 def cc_distributed(stacked_g: Graph, mesh,
                    cfg: BalancerConfig = BalancerConfig(),
                    max_rounds: int = 10_000,
-                   collect_stats: bool = False):
+                   collect_stats: bool = False,
+                   sync: str = "replicated",
+                   meta: PartitionMeta | None = None):
     v = stacked_g.row_ptr.shape[-1] - 1
     comp = jnp.arange(v, dtype=jnp.int32)
     frontier = jnp.ones((v,), bool)
     return run_distributed(stacked_g, mesh, ops.CC_MIN, comp, frontier,
                            cfg, max_rounds=max_rounds,
-                           collect_stats=collect_stats)
+                           collect_stats=collect_stats, sync=sync, meta=meta)
+
+
+def kcore_distributed(stacked_g: Graph, mesh, k: int,
+                      cfg: BalancerConfig = BalancerConfig(),
+                      max_rounds: int = 10_000,
+                      collect_stats: bool = False,
+                      sync: str = "replicated",
+                      meta: PartitionMeta | None = None):
+    """Distributed k-core over a partitioned *symmetrized* graph.
+
+    Degrees only decrease, so "dead" (< k) is monotone and the
+    data-driven loop is exactly :func:`run_distributed` with the
+    newly-crossed-the-threshold frontier rule; each dead vertex pushes
+    its -1 decrements once, through the delta sync (add combiner).
+    Returns in_core labels (1 = in the k-core), like the single-device
+    driver.
+    """
+    rp = stacked_g.row_ptr
+    deg = jnp.sum(rp[:, 1:] - rp[:, :-1], axis=0).astype(jnp.int32)
+    frontier = (deg < k) & (deg > 0)
+    out = run_distributed(
+        stacked_g, mesh, ops.KCORE_DEC, deg, frontier, cfg,
+        next_frontier=lambda old, new, f: (new < k) & (old >= k),
+        sync_delta=True, max_rounds=max_rounds,
+        collect_stats=collect_stats, sync=sync, meta=meta)
+    labels, rest = out[0], out[1:]
+    in_core = (labels >= k).astype(jnp.int32)
+    return (in_core,) + rest
 
 
 def pagerank_distributed(stacked_rg: Graph, mesh, out_degrees,
                          damping: float = 0.85, tol: float = 1e-6,
                          cfg: BalancerConfig = BalancerConfig(),
                          max_rounds: int = 1000,
-                         collect_stats: bool = False):
+                         collect_stats: bool = False,
+                         sync: str = "replicated",
+                         meta: PartitionMeta | None = None):
     """stacked_rg: partitioned *reverse* graph (pull traverses in-edges)."""
+    _require_meta(meta, sync)
     v = stacked_rg.row_ptr.shape[-1] - 1
     outdeg = out_degrees.astype(jnp.float32)
     inv_out = jnp.where(outdeg > 0, 1.0 / jnp.maximum(outdeg, 1.0), 0.0)
     rank = jnp.full((v,), 1.0 / v, jnp.float32)
     frontier = jnp.ones((v,), bool)
+    if sync == "mirror":
+        # topology-driven: full frontier every round, per-round rank
+        # update as post_sync, convergence via the owned-entry residual
+        return _run_mirror(
+            stacked_rg, mesh, ops.PR_PULL, rank, frontier, cfg,
+            values_of=lambda r: r * inv_out,
+            next_frontier=lambda old, new, f: f,
+            sync_delta=True, max_rounds=max_rounds,
+            collect_stats=collect_stats, meta=meta,
+            post_sync=lambda lab, acc: (1.0 - damping) / v + damping * acc,
+            tol=tol)
     round_fn = make_round_fn(mesh, cfg, ops.PR_PULL, sync_delta=True,
                              collect_stats=collect_stats)
     rounds = 0

@@ -152,16 +152,34 @@ def uniform_random(num_vertices: int, avg_degree: int = 8, seed: int = 0,
     return from_edge_list(src, dst, num_vertices, weights=w)
 
 
+def to_coo(g: Graph) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side COO expansion ``(src, dst, weight)`` of a CSR graph.
+
+    The one place the ``row_ptr``-to-source expansion lives; the
+    partitioner (which slices edges by owner), ``reverse_graph`` and the
+    benchmark symmetrizer all consume it.
+    """
+    row_ptr = np.asarray(g.row_ptr).astype(np.int64)
+    dst = np.asarray(g.col_idx).astype(np.int64)
+    w = np.asarray(g.edge_w)
+    src = np.repeat(np.arange(g.num_vertices, dtype=np.int64),
+                    row_ptr[1:] - row_ptr[:-1])
+    return src, dst, w
+
+
 def reverse_graph(g: Graph) -> Graph:
     """CSC view (incoming edges) as a CSR graph — used by pull operators."""
-    row_ptr = np.asarray(g.row_ptr)
-    col = np.asarray(g.col_idx)
-    w = np.asarray(g.edge_w)
-    n = g.num_vertices
-    src = np.repeat(np.arange(n, dtype=np.int64),
-                    (row_ptr[1:] - row_ptr[:-1]).astype(np.int64))
-    return from_edge_list(col.astype(np.int64), src, n, weights=w,
+    src, dst, w = to_coo(g)
+    return from_edge_list(dst, src, g.num_vertices, weights=w,
                           dedup=False)
+
+
+def symmetrized(g: Graph) -> Graph:
+    """Undirected view: every edge plus its reverse (deduplicated) —
+    what cc and kcore expect."""
+    src, dst, _ = to_coo(g)
+    return from_edge_list(np.concatenate([src, dst]),
+                          np.concatenate([dst, src]), g.num_vertices)
 
 
 def highest_out_degree_vertex(g: Graph) -> int:

@@ -2,13 +2,21 @@
 
 Produces, for D devices, D edge-disjoint local CSR graphs over the
 *global* vertex id space, stacked into one [D, ...] pytree suitable for
-``shard_map``.  Labels are kept replicated per device (every vertex is
-a mirror everywhere); the Gluon-analog sync (gluon.py) reduces them
-with the operator's combiner after each BSP round.  This is the
-"communication-heaviest but simplest" point in Gluon's design space and
-is sufficient to reproduce the paper's BSP behaviour; the partition
-policy controls *which edges* (and hence which compute) land on each
-device, exactly the role OEC/IEC/CVC play in the paper's Figure 9.
+``shard_map``, plus a :class:`PartitionMeta` describing the
+master/mirror structure the Gluon-analog sync (gluon.py, DESIGN.md
+section 6) exchanges over:
+
+* every vertex has exactly one **master** device (contiguous
+  ``master_bounds`` ranges — the owner of its canonical label);
+* a device **mirrors** every vertex that is an endpoint of one of its
+  local edges but is owned elsewhere; the padded per-(device, owner)
+  mirror index lists drive the reduce-to-master / broadcast-to-mirrors
+  ``ppermute`` pair, replacing the whole-array all-reduce (the
+  "communication-heaviest but simplest" starting point).
+
+The partition policy controls *which edges* (and hence which compute)
+land on each device, exactly the role OEC/IEC/CVC play in the paper's
+Figure 9:
 
 * OEC: vertices -> D contiguous ranges balanced by out-degree; a device
   owns all out-edges of its vertices.
@@ -16,15 +24,23 @@ device, exactly the role OEC/IEC/CVC play in the paper's Figure 9.
   its vertex range (edges are assigned by destination).
 * CVC: cartesian vertex cut; edge (u,v) -> device grid cell
   (row(u), col(v)) with a near-square device grid.
+
+Master assignment follows the policy's vertex ranges (OEC: the
+out-degree bounds, IEC: the in-degree bounds, CVC: the (row, col) cell
+of the vertex's own ranges, which is monotone in vertex id), so owned
+ranges are always contiguous and the final labels can be assembled by
+gathering each vertex from its owner's copy.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
+from typing import NamedTuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from .graph import Graph
+from .graph import Graph, to_coo
 
 
 def _ranges_balanced(weights: np.ndarray, parts: int) -> np.ndarray:
@@ -55,22 +71,96 @@ def _stack_local_graphs(edge_lists, num_vertices: int) -> Graph:
                  edge_w=jnp.asarray(np.stack(ws)))
 
 
-def partition(g: Graph, num_devices: int, policy: str = "oec") -> Graph:
-    """Partition ``g``; returns a stacked Graph with leading dim D."""
-    rp = np.asarray(g.row_ptr).astype(np.int64)
-    ci = np.asarray(g.col_idx).astype(np.int64)
-    w = np.asarray(g.edge_w)
+@dataclasses.dataclass(frozen=True)
+class PartitionMeta:
+    """Master/mirror structure of a partition (DESIGN.md section 6).
+
+    num_devices / num_vertices : partition dimensions
+    master_bounds : int64[D+1]  contiguous owned vertex ranges; device d
+                    masters vertices [master_bounds[d], master_bounds[d+1])
+    owner         : int32[V]    master device of each vertex
+    mirror_idx    : int32[D, D, L]  ``mirror_idx[d, o]`` lists the
+                    vertices device d mirrors whose master is o (o != d),
+                    padded with the sentinel V; L is the max list length
+                    over all (d, o) pairs so one ``ppermute`` payload
+                    shape serves every ring step
+    mirror_counts : int64[D, D] true (un-padded) list lengths
+    """
+    num_devices: int
+    num_vertices: int
+    master_bounds: np.ndarray
+    owner: np.ndarray
+    mirror_idx: np.ndarray
+    mirror_counts: np.ndarray
+
+    @property
+    def total_mirrors(self) -> int:
+        return int(self.mirror_counts.sum())
+
+    @property
+    def replication_factor(self) -> float:
+        """Average proxies per vertex: 1 master each + all mirrors."""
+        return (self.num_vertices + self.total_mirrors) / self.num_vertices
+
+
+class Partitioned(NamedTuple):
+    """``partition()`` result: the stacked local CSRs + sync metadata."""
+    graph: Graph
+    meta: PartitionMeta
+
+
+def _build_meta(num_devices: int, num_vertices: int, owner_v: np.ndarray,
+                edge_lists) -> PartitionMeta:
+    """Mirror lists from per-device edge endpoints and the owner map."""
+    bounds = np.searchsorted(owner_v, np.arange(num_devices + 1),
+                             side="left").astype(np.int64)
+    per_pair: list[list[np.ndarray]] = []
+    lmax = 1
+    for d in range(num_devices):
+        s, t, _ = edge_lists[d]
+        ends = np.unique(np.concatenate([s, t])) if len(s) else \
+            np.zeros(0, np.int64)
+        mirrors = ends[owner_v[ends] != d]
+        row = []
+        for o in range(num_devices):
+            lst = mirrors[owner_v[mirrors] == o]
+            lmax = max(lmax, len(lst))
+            row.append(lst)
+        per_pair.append(row)
+    mirror_idx = np.full((num_devices, num_devices, lmax), num_vertices,
+                         dtype=np.int32)
+    counts = np.zeros((num_devices, num_devices), dtype=np.int64)
+    for d in range(num_devices):
+        for o in range(num_devices):
+            lst = per_pair[d][o]
+            mirror_idx[d, o, :len(lst)] = lst
+            counts[d, o] = len(lst)
+    return PartitionMeta(num_devices=num_devices,
+                         num_vertices=num_vertices,
+                         master_bounds=bounds,
+                         owner=owner_v.astype(np.int32),
+                         mirror_idx=mirror_idx,
+                         mirror_counts=counts)
+
+
+def partition(g: Graph, num_devices: int,
+              policy: str = "oec") -> Partitioned:
+    """Partition ``g``; returns ``(stacked Graph with leading dim D,
+    PartitionMeta)``."""
+    src, ci, w = to_coo(g)
     n = g.num_vertices
-    src = np.repeat(np.arange(n, dtype=np.int64), rp[1:] - rp[:-1])
+    rp = np.asarray(g.row_ptr).astype(np.int64)
     outdeg = rp[1:] - rp[:-1]
 
     if policy == "oec":
         bounds = _ranges_balanced(outdeg, num_devices)
         owner = np.searchsorted(bounds, src, side="right") - 1
+        owner_v = np.searchsorted(bounds, np.arange(n), side="right") - 1
     elif policy == "iec":
         indeg = np.bincount(ci, minlength=n)
         bounds = _ranges_balanced(indeg, num_devices)
         owner = np.searchsorted(bounds, ci, side="right") - 1
+        owner_v = np.searchsorted(bounds, np.arange(n), side="right") - 1
     elif policy == "cvc":
         pr = int(math.sqrt(num_devices))
         while num_devices % pr:
@@ -81,6 +171,11 @@ def partition(g: Graph, num_devices: int, policy: str = "oec") -> Graph:
         r = np.searchsorted(rb, src, side="right") - 1
         c = np.searchsorted(cb, ci, side="right") - 1
         owner = r * pc + c
+        # vertex master = its own (row, col) cell; monotone in vid since
+        # both range lookups are, so owned ranges stay contiguous
+        rv = np.searchsorted(rb, np.arange(n), side="right") - 1
+        cv = np.searchsorted(cb, np.arange(n), side="right") - 1
+        owner_v = rv * pc + cv
     else:
         raise ValueError(policy)
 
@@ -88,12 +183,18 @@ def partition(g: Graph, num_devices: int, policy: str = "oec") -> Graph:
     for d in range(num_devices):
         sel = owner == d
         edge_lists.append((src[sel], ci[sel], w[sel]))
-    return _stack_local_graphs(edge_lists, n)
+    stacked = _stack_local_graphs(edge_lists, n)
+    meta = _build_meta(num_devices, n, owner_v.astype(np.int64), edge_lists)
+    return Partitioned(stacked, meta)
 
 
-def partition_stats(stacked: Graph) -> dict:
+def partition_stats(stacked: Graph, meta: PartitionMeta | None = None) -> dict:
     rp = np.asarray(stacked.row_ptr)
     local_edges = rp[:, -1]
-    return dict(edges_per_device=local_edges.tolist(),
-                imbalance=float(local_edges.max()
-                                / max(local_edges.mean(), 1.0)))
+    st = dict(edges_per_device=local_edges.tolist(),
+              imbalance=float(local_edges.max()
+                              / max(local_edges.mean(), 1.0)))
+    if meta is not None:
+        st["replication_factor"] = meta.replication_factor
+        st["mirrors_per_device"] = meta.mirror_counts.sum(axis=1).tolist()
+    return st

@@ -23,19 +23,26 @@ src = G.highest_out_degree_vertex(g)
 ref = sssp(g, src, BalancerConfig(strategy="alb", threshold=64))
 mesh = gluon.device_mesh(4)
 for policy in ["oec", "iec", "cvc"]:
-    sg = partition(g, 4, policy)
-    labels, rounds, secs = gluon.sssp_distributed(
-        sg, mesh, src, BalancerConfig(strategy="alb", threshold=64))
-    assert np.array_equal(np.asarray(labels), np.asarray(ref.labels)), policy
-    st = partition_stats(sg)
+    sg, meta = partition(g, 4, policy)
+    for sync in ["replicated", "mirror"]:
+        labels, rounds, secs = gluon.sssp_distributed(
+            sg, mesh, src, BalancerConfig(strategy="alb", threshold=64),
+            sync=sync, meta=meta)
+        assert np.array_equal(np.asarray(labels), np.asarray(ref.labels)), \
+            (policy, sync)
+    st = partition_stats(sg, meta)
     assert st["imbalance"] < 2.0, (policy, st)
+    assert st["replication_factor"] >= 1.0, (policy, st)
 
 rg = G.reverse_graph(g)
-srg = partition(rg, 4, "oec")
-rank, rounds, secs = gluon.pagerank_distributed(
-    srg, mesh, g.out_degrees(), max_rounds=30, tol=0.0)
+srg, rmeta = partition(rg, 4, "oec")
 pref = pagerank(g, max_rounds=30, tol=0.0)
-assert np.allclose(np.asarray(rank), np.asarray(pref.labels), atol=1e-6)
+for sync in ["replicated", "mirror"]:
+    rank, rounds, secs = gluon.pagerank_distributed(
+        srg, mesh, g.out_degrees(), max_rounds=30, tol=0.0,
+        sync=sync, meta=rmeta)
+    assert np.allclose(np.asarray(rank), np.asarray(pref.labels),
+                       atol=1e-6), sync
 print("DISTRIBUTED_OK")
 """
 

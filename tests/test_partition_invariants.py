@@ -1,0 +1,101 @@
+"""Partitioner invariants (CuSP-analog, DESIGN.md section 6).
+
+For every policy and device count the partition must be an exact
+edge decomposition — per-device edge lists pairwise disjoint, union
+reconstructing the input multigraph — and the PartitionMeta must
+describe a consistent master/mirror structure: one contiguous owned
+range per device covering all vertices, and mirror lists that contain
+exactly the non-owned endpoints of each device's local edges.
+"""
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core.partition import partition, partition_stats
+
+POLICIES = ["oec", "iec", "cvc"]
+DEVICE_COUNTS = [1, 2, 3, 4]
+
+
+@pytest.fixture(scope="module", params=["rmat", "road"])
+def graph(request):
+    if request.param == "rmat":
+        return G.rmat(8, 8, seed=7)
+    return G.road_grid(12, seed=7)
+
+
+def _device_coo(stacked, d):
+    """Un-pad device d's local CSR back to a COO triple."""
+    rp = np.asarray(stacked.row_ptr[d]).astype(np.int64)
+    ne = int(rp[-1])
+    src = np.repeat(np.arange(len(rp) - 1, dtype=np.int64), rp[1:] - rp[:-1])
+    dst = np.asarray(stacked.col_idx[d]).astype(np.int64)[:ne]
+    w = np.asarray(stacked.edge_w[d]).astype(np.int64)[:ne]
+    return src, dst, w
+
+
+def _sorted_triples(src, dst, w):
+    order = np.lexsort((w, dst, src))
+    return np.stack([src[order], dst[order], w[order]], axis=1)
+
+
+@pytest.mark.parametrize("ndev", DEVICE_COUNTS)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_partition_is_exact_edge_decomposition(graph, policy, ndev):
+    stacked, meta = partition(graph, ndev, policy)
+    srcs, dsts, ws = [], [], []
+    for d in range(ndev):
+        s, t, w = _device_coo(stacked, d)
+        srcs.append(s)
+        dsts.append(t)
+        ws.append(w)
+    union = _sorted_triples(np.concatenate(srcs), np.concatenate(dsts),
+                            np.concatenate(ws))
+    gs, gd, gw = G.to_coo(graph)
+    ref = _sorted_triples(gs, gd, gw.astype(np.int64))
+    # disjoint + complete: multiset equality of (src, dst, w) triples
+    assert union.shape == ref.shape
+    np.testing.assert_array_equal(union, ref)
+    # edge counts add up exactly (no edge on two devices)
+    assert sum(len(s) for s in srcs) == graph.num_edges
+
+
+@pytest.mark.parametrize("ndev", DEVICE_COUNTS)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_partition_meta_masters_and_mirrors(graph, policy, ndev):
+    stacked, meta = partition(graph, ndev, policy)
+    v = graph.num_vertices
+    # contiguous owned ranges covering [0, V), consistent with owner map
+    b = meta.master_bounds
+    assert b[0] == 0 and b[-1] == v
+    assert np.all(np.diff(b) >= 0)
+    for d in range(ndev):
+        assert np.all(meta.owner[b[d]:b[d + 1]] == d)
+    # mirror lists: exactly the non-owned endpoints of local edges
+    for d in range(ndev):
+        s, t, _ = _device_coo(stacked, d)
+        ends = np.unique(np.concatenate([s, t]))
+        expected = set(ends[meta.owner[ends] != d].tolist())
+        listed = set()
+        for o in range(ndev):
+            n = int(meta.mirror_counts[d, o])
+            lst = meta.mirror_idx[d, o, :n]
+            assert np.all(meta.owner[lst] == o)
+            assert len(np.unique(lst)) == n
+            assert np.all(meta.mirror_idx[d, o, n:] == v)   # padding
+            listed |= set(lst.tolist())
+        assert listed == expected
+        assert not (set(range(b[d], b[d + 1])) & listed)    # never own+mirror
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_partition_stats_reports_replication_factor(graph, policy):
+    stacked, meta = partition(graph, 4, policy)
+    st = partition_stats(stacked, meta)
+    assert st["replication_factor"] == pytest.approx(
+        (graph.num_vertices + meta.total_mirrors) / graph.num_vertices)
+    assert st["replication_factor"] >= 1.0
+    assert len(st["mirrors_per_device"]) == 4
+    # stats without meta still work (backwards-compatible shape)
+    st2 = partition_stats(stacked)
+    assert "replication_factor" not in st2

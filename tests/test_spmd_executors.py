@@ -138,7 +138,7 @@ def test_gluon_runtime_runs_both_backends(graph, use_pallas):
     Pallas kernels dispatched inside shard_map."""
     src = G.highest_out_degree_vertex(graph)
     mesh = gluon.device_mesh(1)
-    sg = partition(graph, 1, "oec")
+    sg, _ = partition(graph, 1, "oec")
     cfg = BalancerConfig(strategy="alb", threshold=64,
                          use_pallas=use_pallas)
     ref = sssp(graph, src, BalancerConfig(strategy="alb", threshold=64))
@@ -151,7 +151,7 @@ def test_gluon_runtime_runs_both_backends(graph, use_pallas):
                                   np.asarray(bref.labels))
 
     rg = G.reverse_graph(graph)
-    srg = partition(rg, 1, "oec")
+    srg, _ = partition(rg, 1, "oec")
     pref = pagerank(graph, max_rounds=10, tol=0.0)
     rank, _, _ = gluon.pagerank_distributed(srg, mesh, graph.out_degrees(),
                                             cfg=cfg, max_rounds=10, tol=0.0)
@@ -163,15 +163,50 @@ def test_gluon_collect_stats_through_shard_map():
     g = G.rmat(9, 8, seed=3)
     src = G.highest_out_degree_vertex(g)
     mesh = gluon.device_mesh(1)
-    sg = partition(g, 1, "oec")
+    sg, _ = partition(g, 1, "oec")
     cfg = BalancerConfig(strategy="alb", threshold=64)
     labels, rounds, _, stats = gluon.sssp_distributed(
         sg, mesh, src, cfg, collect_stats=True)
     assert len(stats) == rounds
     assert all(len(per_round) == 1 for per_round in stats)     # 1 device
     assert any(st.lb_invoked for per_round in stats for st in per_round)
+    # replicated sync reports the all-reduce baseline volume per round
+    v = g.num_vertices
+    assert all(st.bytes_synced == v * 4
+               for per_round in stats for st in per_round)
     ref = sssp(g, src, cfg)
     np.testing.assert_array_equal(np.asarray(labels), np.asarray(ref.labels))
+
+
+def test_gluon_mirror_sync_single_device_parity():
+    """sync='mirror' on a 1-device mesh: the ring is empty, but the
+    owned-state loop, dirty mask, and master assembly all run."""
+    g = G.rmat(9, 8, seed=3)
+    src = G.highest_out_degree_vertex(g)
+    mesh = gluon.device_mesh(1)
+    sg, meta = partition(g, 1, "oec")
+    cfg = BalancerConfig(strategy="alb", threshold=64)
+    ref = sssp(g, src, cfg)
+    labels, rounds, _, stats = gluon.sssp_distributed(
+        sg, mesh, src, cfg, collect_stats=True, sync="mirror", meta=meta)
+    np.testing.assert_array_equal(np.asarray(labels), np.asarray(ref.labels))
+    # no peers -> no mirror traffic at all
+    assert all(st.bytes_synced == 0
+               for per_round in stats for st in per_round)
+
+
+def test_gluon_kcore_distributed_single_device():
+    from repro.core.apps import kcore
+    g = G.symmetrized(G.rmat(9, 8, seed=3))
+    mesh = gluon.device_mesh(1)
+    sg, meta = partition(g, 1, "oec")
+    cfg = BalancerConfig(strategy="alb", threshold=64)
+    ref = kcore(g, 8, cfg)
+    for sync in ["replicated", "mirror"]:
+        labels, rounds, _ = gluon.kcore_distributed(
+            sg, mesh, 8, cfg, sync=sync, meta=meta)
+        np.testing.assert_array_equal(np.asarray(labels),
+                                      np.asarray(ref.labels))
 
 
 # ---------------- multi-device (subprocess, slow) -------------------------
@@ -188,7 +223,7 @@ assert len(jax.devices()) == 4, jax.devices()
 g = G.rmat(9, 8, seed=5)
 src = G.highest_out_degree_vertex(g)
 mesh = gluon.device_mesh(4)
-sg = partition(g, 4, "oec")
+sg, meta = partition(g, 4, "oec")
 cfg = BalancerConfig(strategy="alb", threshold=64, use_pallas=True)
 ref = sssp(g, src, BalancerConfig(strategy="alb", threshold=64))
 labels, rounds, secs, stats = gluon.sssp_distributed(
@@ -201,8 +236,12 @@ assert all(len(per_round) == 4 for per_round in stats)
 for per_round in stats:
     for st in per_round:
         assert st.edges_lb == st.tile_loads_lb.sum()
+# pallas kernels inside shard_map under the mirror substrate too
+mlabels, _, _ = gluon.sssp_distributed(sg, mesh, src, cfg,
+                                       sync="mirror", meta=meta)
+assert np.array_equal(np.asarray(mlabels), np.asarray(ref.labels))
 rg = G.reverse_graph(g)
-srg = partition(rg, 4, "oec")
+srg, rmeta = partition(rg, 4, "oec")
 rank, _, _ = gluon.pagerank_distributed(
     srg, mesh, g.out_degrees(), cfg=cfg, max_rounds=10, tol=0.0)
 pref = pagerank(g, max_rounds=10, tol=0.0)
@@ -222,6 +261,33 @@ def test_multidevice_pallas_matches_single_device():
                          capture_output=True, text=True, timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "SPMD_PALLAS_OK" in out.stdout
+
+
+# ---------------- fused host-round decision transfer ----------------------
+
+def test_host_round_counts_layout():
+    """relax's per-round host decisions come from ONE fused int32 vector
+    (one device->host transfer) whose entries match the individual
+    reductions it replaced."""
+    from repro.core.balancer import _host_round_counts
+    g = G.rmat(9, 8, seed=3)
+    dist, frontier = _sssp_round_inputs(g)
+    cfg = BalancerConfig(strategy="alb", threshold=64)
+    cnt = np.asarray(_host_round_counts(g, frontier, cfg))
+    plan = make_plan(cfg)
+    assert cnt.shape == (1 + 3 * len(plan.bins) + 2,)
+    deg = np.asarray(g.row_ptr[1:]) - np.asarray(g.row_ptr[:-1])
+    f = np.asarray(frontier)
+    assert cnt[0] == f.sum()
+    k = 1
+    for spec in plan.bins:
+        m = np.asarray(spec.mask(jnp.asarray(deg), jnp.asarray(f)))
+        assert cnt[k] == m.sum()
+        assert cnt[k + 1] == (deg * m).max(initial=0)
+        assert cnt[k + 2] == (deg * m).sum()
+        k += 3
+    hm = f & (deg >= cfg.threshold)
+    assert cnt[k] == hm.sum() and cnt[k + 1] == (deg * hm).sum()
 
 
 # ---------------- planner unit coverage -----------------------------------
