@@ -1,0 +1,113 @@
+"""Batched query throughput: queries/sec vs batch size (DESIGN.md
+section 7).
+
+The paper's ALB amortizes a load-balancing decision across one
+frontier; the batched engine amortizes it across B *queries* — bins,
+the huge-bin inspector, and the LB prefix-sum deal run once over the
+union frontier.  This harness measures the payoff as queries/sec of
+``bfs_batch`` / ``sssp_batch`` on the power-law (rmat) input.
+
+The workload is FIXED — the same 8 sources every time — and the batch
+size varies: batch size B serves it as 8/B batches (B=1 is exactly 8
+sequential single-source runs, the pre-batching baseline).  Holding
+the work constant makes the comparison honest and the win structural:
+a bigger B shares more per-round fixed work (host sync, compaction,
+kernel launches) across the same queries, so queries/sec rises with B
+(per-query heterogeneity cannot penalize a batch size the way a
+varying workload would — a batch's round count is the max over its
+members either way).
+
+Rows: ``qps_<app>_<mode>_b<B>,us_per_workload,qps=<queries/sec>``.
+
+Run directly (also wired as the ``qps`` selector of benchmarks.run):
+
+    PYTHONPATH=src python -m benchmarks.fig_qps            # host rounds
+    PYTHONPATH=src python -m benchmarks.fig_qps --spmd     # + spmd rounds
+    PYTHONPATH=src python -m benchmarks.fig_qps --smoke    # CI smoke
+
+``--smoke`` shrinks the input, runs one app/mode, and exits non-zero
+if batching fails to pay: qps at the largest batch must beat qps at
+B=1 — the cheap always-true core of the monotonicity claim (full
+monotonicity is reported but not asserted; CI boxes are noisy timers).
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.apps import bfs_batch, sssp_batch
+from repro.core.balancer import BalancerConfig
+
+from .common import timed, emit
+
+
+def _sources(g, n: int, seed: int = 0) -> list[int]:
+    """n distinct sources with out-degree > 0: the highest-degree hub
+    (the paper's source pick) plus random reachable starts — the mixed
+    traffic a query-serving deployment sees."""
+    deg = np.asarray(g.out_degrees())
+    cand = np.flatnonzero(deg > 0)
+    rng = np.random.default_rng(seed)
+    picks = [int(np.argmax(deg))]
+    for v in rng.permutation(cand):
+        if len(picks) == n:
+            break
+        if int(v) not in picks:
+            picks.append(int(v))
+    return picks
+
+
+def run(smoke: bool = False, spmd: bool = False) -> dict:
+    scale = 10 if smoke else 12
+    g = G.rmat(scale, 8 if smoke else 16, seed=1)
+    cfg = BalancerConfig(strategy="alb", threshold=64)
+    batch_sizes = [1, 2, 4, 8]
+    apps = {"bfs": bfs_batch} if smoke else {"bfs": bfs_batch,
+                                             "sssp": sssp_batch}
+    # the fully-jit round is the distributed building block; on CPU CI
+    # boxes it is slow enough that it is opt-in here
+    modes = ["host"] + (["spmd"] if spmd and not smoke else [])
+    n_queries = max(batch_sizes)
+    sources = _sources(g, n_queries)
+    results: dict = {}
+    for app_name, driver in apps.items():
+        for mode in modes:
+            qps_curve = []
+            for b in batch_sizes:
+                chunks = [sources[i:i + b]
+                          for i in range(0, n_queries, b)]
+
+                def serve(_chunks=chunks):
+                    for chunk in _chunks:
+                        driver(g, chunk, cfg, mode=mode)
+
+                secs = timed(serve, repeats=3)
+                qps = n_queries / secs
+                qps_curve.append(qps)
+                emit(f"qps_{app_name}_{mode}_b{b}", secs,
+                     f"qps={qps:.1f}")
+            results[(app_name, mode)] = qps_curve
+            mono = all(a <= b_ for a, b_ in zip(qps_curve, qps_curve[1:]))
+            emit(f"qps_{app_name}_{mode}_monotone", 0.0,
+                 f"monotone={mono}")
+    return results
+
+
+def main() -> int:
+    smoke = "--smoke" in sys.argv[1:]
+    results = run(smoke=smoke, spmd="--spmd" in sys.argv[1:])
+    if smoke:
+        for key, curve in results.items():
+            if curve[-1] <= curve[0]:
+                print(f"FAIL: {key}: qps at the largest batch "
+                      f"({curve[-1]:.1f}) <= qps at B=1 ({curve[0]:.1f})",
+                      file=sys.stderr)
+                return 1
+        print("smoke OK: batching increases queries/sec")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

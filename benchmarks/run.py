@@ -22,6 +22,9 @@ Selectors and what each script reproduces:
   structural locality metric.
 * ``fig9``     (fig9_partition.py)      — Fig 9: OEC/IEC/CVC partition
   policies (edge balance, mirrors, round counts).
+* ``qps``      (fig_qps.py)             — batched multi-source query
+  throughput: queries/sec of bfs_batch/sssp_batch vs batch size on the
+  power-law input (DESIGN.md section 7); ``--smoke`` variant gates CI.
 * ``roofline`` (roofline.py)            — kernel roofline estimates
   from dry-run artifacts (skipped when artifacts are absent).
 
@@ -35,7 +38,7 @@ import sys
 
 def main() -> None:
     which = set(sys.argv[1:]) or {"table2", "table2sim", "fig5", "fig6",
-                                  "fig8", "fig9", "roofline"}
+                                  "fig8", "fig9", "qps", "roofline"}
     print("name,us_per_call,derived")
     if "table2" in which:
         from . import table2_strategies
@@ -55,6 +58,9 @@ def main() -> None:
     if "fig9" in which:
         from . import fig9_partition
         fig9_partition.run()
+    if "qps" in which:
+        from . import fig_qps
+        fig_qps.run()
     if "roofline" in which:
         from . import roofline
         try:

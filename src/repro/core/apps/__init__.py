@@ -1,3 +1,5 @@
-from .drivers import bfs, sssp, cc, pagerank, kcore, AppResult
+from .drivers import (bfs, sssp, cc, pagerank, kcore, bfs_batch,
+                      sssp_batch, AppResult)
 
-__all__ = ["bfs", "sssp", "cc", "pagerank", "kcore", "AppResult"]
+__all__ = ["bfs", "sssp", "cc", "pagerank", "kcore", "bfs_batch",
+           "sssp_batch", "AppResult"]

@@ -15,6 +15,15 @@ reuse the paper gets from IrGL.
   round used inside ``shard_map`` by the distributed runtime, here run
   on one device so its behaviour (including the jit-safe RoundStats)
   can be measured and tested against the host round.
+
+``bfs_batch`` / ``sssp_batch`` serve B independent sources from ONE
+shared convergence loop (DESIGN.md section 7): labels and frontier
+carry a ``[B, V]`` batch axis, every balancer round plans over the
+union frontier, and a finished query retires itself — its frontier row
+empties, so it stops contributing vertices to the union while the loop
+drains the remaining queries.  The loop ends when the union is empty,
+and each query's labels are bitwise what its own single-source run
+would have produced.
 """
 from __future__ import annotations
 
@@ -27,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph import Graph, INF, reverse_graph
-from ..frontier import full_frontier, single_source
+from ..frontier import full_frontier, single_source, multi_source_state
 from ..balancer import BalancerConfig, RoundStats, relax, relax_spmd
 from .. import operators as ops
 
@@ -102,6 +111,42 @@ def bfs(g: Graph, source: int, cfg: BalancerConfig = BalancerConfig(),
         collect_stats, next_frontier=lambda old, new, f: new < old,
         mode=mode)
     return AppResult(labels, rounds, secs, stats)
+
+
+# ---- batched multi-source queries (DESIGN.md section 7) -------------------
+
+def _batch_loop(g: Graph, labels, frontier, cfg, op, max_rounds,
+                collect_stats, mode) -> AppResult:
+    """The shared multi-query convergence loop: identical round
+    structure to :func:`_loop`, but over ``[B, V]`` state — each round
+    is ONE balancer invocation serving the whole batch, and queries
+    whose frontier row has emptied are retired implicitly (they no
+    longer contribute to the union the round plans over)."""
+    labels, rounds, secs, stats = _loop(
+        g, lambda l: l, labels, frontier, cfg, op, max_rounds,
+        collect_stats, next_frontier=lambda old, new, f: new < old,
+        mode=mode)
+    return AppResult(labels, rounds, secs, stats)
+
+
+def sssp_batch(g: Graph, sources, cfg: BalancerConfig = BalancerConfig(),
+               max_rounds: int = 10_000, collect_stats: bool = False,
+               mode: str = "host") -> AppResult:
+    """Batched multi-source SSSP: ``labels[b]`` equals (bitwise) the
+    single-source :func:`sssp` labels for ``sources[b]``, computed by
+    one union-frontier round loop for all B sources."""
+    labels, frontier = multi_source_state(g.num_vertices, sources, INF)
+    return _batch_loop(g, labels, frontier, cfg, ops.SSSP_RELAX,
+                       max_rounds, collect_stats, mode)
+
+
+def bfs_batch(g: Graph, sources, cfg: BalancerConfig = BalancerConfig(),
+              max_rounds: int = 10_000, collect_stats: bool = False,
+              mode: str = "host") -> AppResult:
+    """Batched multi-source BFS (see :func:`sssp_batch`)."""
+    labels, frontier = multi_source_state(g.num_vertices, sources, INF)
+    return _batch_loop(g, labels, frontier, cfg, ops.BFS_HOP,
+                       max_rounds, collect_stats, mode)
 
 
 def cc(g: Graph, cfg: BalancerConfig = BalancerConfig(),

@@ -41,6 +41,16 @@ Each :class:`ExecutorPair` exposes every path twice:
 Both rounds therefore run the *same* planner and the *same* executor
 implementations; ``use_pallas=True`` routes the hot mapping loops
 through the Pallas kernels in either mode.
+
+Batched multi-source queries (DESIGN.md section 7): ``relax`` and
+``relax_spmd`` also accept ``labels[B, V]`` / ``values[B, V]`` /
+``frontier[B, V]`` — B independent queries over the shared CSR.  Bin
+selection, the huge-bin inspector, and the LB prefix-sum deal all run
+once over the **union** frontier; per-query activity is recovered by
+gathering the ``[B, V]`` frontier mask at each enumerated edge's
+anchor vertex, and candidates of inactive (vertex, query) pairs carry
+the combiner's identity so skipping them is exact.  One kernel launch
+therefore serves B queries instead of B launches serving one.
 """
 from __future__ import annotations
 
@@ -53,7 +63,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .graph import Graph
-from .frontier import next_bucket, compact, count, dirty_mask
+from .frontier import (next_bucket, compact, count, dirty_mask,
+                       union_frontier)
 from .operators import Operator
 
 
@@ -161,11 +172,20 @@ def make_plan(cfg: BalancerConfig) -> RoundPlan:
 class ExecutorPair:
     """One backend's implementations of the bin + LB paths.
 
-    bin entries: (g, values, labels, bvidx, bdeg, brow, width, op,
-                  chunk) -> labels, ``chunk`` a Python int (host) or a
-                  traced int32 scalar (jit).
-    lb entries:  (g, values, labels, hvidx, hdeg, hrow, total, ecap,
-                  op, distribution, num_tiles, tile_edges) -> labels.
+    Every entry is **batched**: ``values`` / ``labels`` are ``[B, V]``
+    and ``fmask`` is the ``[B, V]`` per-query frontier (the batch axis
+    is always present; the round entry points add it for un-batched
+    callers).  The vertex/edge enumeration arguments are batch-shared —
+    they come from the union frontier — and per-query activity is
+    recovered inside the entry by gathering ``fmask`` at each edge's
+    anchor vertex.
+
+    bin entries: (g, values, labels, fmask, bvidx, bdeg, brow, width,
+                  op, chunk) -> labels, ``chunk`` a Python int (host)
+                  or a traced int32 scalar (jit).
+    lb entries:  (g, values, labels, fmask, hvidx, hdeg, hrow, total,
+                  ecap, op, distribution, num_tiles, tile_edges)
+                  -> labels.
     """
     name: str
     bin_host: Callable
@@ -192,7 +212,14 @@ def get_executor(name: str) -> ExecutorPair:
 
 
 class RoundStats(NamedTuple):
-    """Instrumentation for Fig 1/5-style plots (host values)."""
+    """Instrumentation for Fig 1/5-style plots (host values).
+
+    With a batched round (DESIGN.md section 7) ``frontier_size`` is the
+    **union** frontier size (what drives the work done) and
+    ``frontier_per_query`` holds the B per-query frontier sizes; the
+    edge counts are union counts — each enumerated edge is processed
+    once for the whole batch.
+    """
     frontier_size: int
     edges_twc: int          # edges processed by the vertex-binned path
     edges_lb: int           # edges processed by the edge-balanced path
@@ -202,6 +229,7 @@ class RoundStats(NamedTuple):
     mirrors_synced: int = 0  # label entries exchanged by the BSP sync
     bytes_synced: int = 0    # ... in bytes (0 outside the distributed
     #                          runtime; see gluon.py / DESIGN.md section 6)
+    frontier_per_query: Optional[np.ndarray] = None  # int64[B]
 
     @classmethod
     def from_device(cls, s: "RoundStatsDev") -> "RoundStats":
@@ -214,14 +242,16 @@ class RoundStats(NamedTuple):
                    tile_loads_lb=np.asarray(s.tile_loads_lb,
                                             dtype=np.int64),
                    mirrors_synced=int(s.mirrors_synced),
-                   bytes_synced=int(s.bytes_synced))
+                   bytes_synced=int(s.bytes_synced),
+                   frontier_per_query=np.asarray(s.frontier_per_query,
+                                                 dtype=np.int64))
 
 
 class RoundStatsDev(NamedTuple):
     """jit-safe RoundStats: every field is a device array, so the
     structure can cross ``jit`` / ``shard_map`` boundaries (the SPMD
     realization of the Fig 1/5 instrumentation)."""
-    frontier_size: jax.Array     # int32 scalar
+    frontier_size: jax.Array     # int32 scalar (union size when batched)
     edges_twc: jax.Array         # int32 scalar
     edges_lb: jax.Array          # int32 scalar
     lb_invoked: jax.Array        # bool scalar
@@ -229,6 +259,7 @@ class RoundStatsDev(NamedTuple):
     tile_loads_lb: jax.Array     # int32[num_tiles]
     mirrors_synced: jax.Array    # int32 scalar (filled in by gluon.py)
     bytes_synced: jax.Array      # int32 scalar (filled in by gluon.py)
+    frontier_per_query: jax.Array = np.zeros((1,), np.int32)  # int32[B]
 
 
 # ---------------------------------------------------------------------------
@@ -246,50 +277,77 @@ def _frontier_meta(g: Graph, frontier_idx: jax.Array):
     return deg, row_start, valid
 
 
-def _apply(labels, target, cand, mask, combine):
-    """scatter-combine candidates into labels (atomicMin/atomicAdd analog)."""
-    v = labels.shape[0]
-    tgt = jnp.where(mask, target, v)          # out of range => dropped
+def combine_neutral(combine: str, dtype):
+    """Identity element of a combiner: a candidate that can never win a
+    ``min`` (dtype max / +inf) or change an ``add`` (0).  Per-query
+    masked slots of the batched scatter carry this value so skipping an
+    inactive (vertex, query) pair is exact."""
     if combine == "min":
-        return labels.at[tgt].min(cand.astype(labels.dtype), mode="drop")
+        if jnp.issubdtype(dtype, jnp.floating):
+            return jnp.asarray(jnp.inf, dtype)
+        return jnp.asarray(jnp.iinfo(dtype).max, dtype)
     if combine == "add":
-        return labels.at[tgt].add(
-            jnp.where(mask, cand, 0).astype(labels.dtype), mode="drop")
+        return jnp.asarray(0, dtype)
     raise ValueError(combine)
 
 
-def _bin_pass_impl(g: Graph, values, labels, vidx, deg, row_start,
+def _apply(labels, target, cand, emask, live, combine):
+    """Batched scatter-combine (atomicMin/atomicAdd analog).
+
+    labels : [B, V];  target/emask : batch-shared enumeration shape [S]
+    (slots with ``emask`` False are dropped via the out-of-range
+    sentinel); ``live`` : [B, *S-broadcastable] per-query activity —
+    slots live for some queries but not others keep the shared target
+    and carry the combiner's identity where inactive.
+    """
+    v = labels.shape[-1]
+    tgt = jnp.where(emask, target, v)          # out of range => dropped
+    full = live & emask[None]
+    cand = cand.astype(labels.dtype)
+    if combine == "min":
+        cand = jnp.where(full, cand, combine_neutral("min", labels.dtype))
+        return labels.at[:, tgt].min(cand, mode="drop")
+    if combine == "add":
+        return labels.at[:, tgt].add(jnp.where(full, cand, 0), mode="drop")
+    raise ValueError(combine)
+
+
+def _bin_pass_impl(g: Graph, values, labels, fmask, vidx, deg, row_start,
                    width: int, op: Operator, chunk):
     """Process one degree bin: each vertex in ``vidx`` contributes its
     edges [chunk*width, chunk*width + width) — the uniform-trip-count
     vertex-tiled path (TWC small/medium/large analog).  ``chunk`` may be
     a Python int or a traced int32 scalar.
 
-    Shapes: vidx/deg/row_start: [B];  produces a [B, width] edge tile.
+    Shapes: values/labels/fmask: [B, V];  vidx/deg/row_start: [N]
+    (union-frontier bin members);  produces an [N, width] edge tile
+    shared by the whole batch.
     """
+    v = labels.shape[-1]
     base = jnp.asarray(chunk, jnp.int32) * width
     off = base + jnp.arange(width, dtype=jnp.int32)[None, :]      # [1,W]
-    emask = off < deg[:, None]                                     # [B,W]
+    emask = off < deg[:, None]                                     # [N,W]
     graph_e = jnp.where(emask, row_start[:, None] + off, 0)
     dst = g.col_idx[graph_e]
     w = g.edge_w[graph_e]
+    vsafe = jnp.where(vidx < v, vidx, 0)
+    live = fmask[:, vsafe][:, :, None]                             # [B,N,1]
     if op.direction == "push":
-        vsafe = jnp.where(vidx < values.shape[0], vidx, 0)
-        val = values[vsafe][:, None]                               # [B,1]
-        cand = op.msg(jnp.broadcast_to(val, emask.shape), w)
-        new = _apply(labels, dst, cand, emask, op.combine)
+        val = values[:, vsafe][:, :, None]                         # [B,N,1]
+        cand = op.msg(val, w[None])
+        new = _apply(labels, dst, cand, emask, live, op.combine)
     else:  # pull: value gathered at the neighbour, scattered at anchor
-        val = values[dst]
-        cand = op.msg(val, w)
+        val = values[:, dst]                                       # [B,N,W]
+        cand = op.msg(val, w[None])
         anchor = jnp.broadcast_to(vidx[:, None], emask.shape)
-        new = _apply(labels, anchor, cand, emask, op.combine)
+        new = _apply(labels, anchor, cand, emask, live, op.combine)
     return new
 
 
 _bin_pass = partial(jax.jit, static_argnames=("width", "op"))(_bin_pass_impl)
 
 
-def _lb_pass_impl(g: Graph, values, labels, hidx, hdeg, hrow_start,
+def _lb_pass_impl(g: Graph, values, labels, fmask, hidx, hdeg, hrow_start,
                   total_edges, ecap: int, op: Operator,
                   distribution: str, num_tiles: int, tile_edges: int = 0):
     """The LB executor (Figure 3, SSSP_LB): edge-balanced renumbering.
@@ -302,7 +360,12 @@ def _lb_pass_impl(g: Graph, values, labels, hidx, hdeg, hrow_start,
     consecutive edges; blocked = strided) — Section 4.1 / Figure 4.
     ``tile_edges`` is unused here (XLA has no grid); kept for executor
     signature parity with the Pallas pair.
+
+    The prefix sum and the deal are computed once per round over the
+    union frontier's huge bin; ``fmask[:, src]`` recovers which queries
+    the edge's source is actually active in (DESIGN.md section 7).
     """
+    v = labels.shape[-1]
     start_e = jnp.cumsum(hdeg) - hdeg                  # exclusive prefix
     # enumerate a multiple of num_tiles so the blocked permutation below
     # is a bijection of [0, n_enum) and cannot miss edges
@@ -322,13 +385,14 @@ def _lb_pass_impl(g: Graph, values, labels, hidx, hdeg, hrow_start,
     src = hidx[j]
     dst = g.col_idx[graph_e]
     w = g.edge_w[graph_e]
+    ssafe = jnp.where(src < v, src, 0)
+    live = fmask[:, ssafe]                             # [B, n_enum]
     if op.direction == "push":
-        vsafe = jnp.where(src < values.shape[0], src, 0)
-        cand = op.msg(values[vsafe], w)
-        return _apply(labels, dst, cand, emask, op.combine)
+        cand = op.msg(values[:, ssafe], w[None])
+        return _apply(labels, dst, cand, emask, live, op.combine)
     else:
-        cand = op.msg(values[dst], w)
-        return _apply(labels, src, cand, emask, op.combine)
+        cand = op.msg(values[:, dst], w[None])
+        return _apply(labels, src, cand, emask, live, op.combine)
 
 
 _lb_pass = partial(jax.jit, static_argnames=(
@@ -369,22 +433,34 @@ def _host_round_counts(g: Graph, frontier: jax.Array, cfg: BalancerConfig):
     (instead of one blocking ``int(jnp.sum(...))`` per bin plus the
     frontier count and inspector sums).
 
-    Layout: ``[frontier_count,
+    Layout: ``[union_frontier_count,
                (bin_count, bin_max_deg, bin_edge_sum) per plan bin...,
-               huge_count, huge_edge_sum (when the plan has an LB path)]``
+               huge_count, huge_edge_sum (when the plan has an LB path),
+               per-query frontier counts (B entries, batched input only)]``
+
+    A batched ``[B, V]`` frontier is reduced to its union first — the
+    bins and the inspector see one frontier for the whole batch
+    (DESIGN.md section 7); the per-query counts ride along in the same
+    transfer for the instrumentation.  The union mask is returned
+    alongside so the caller's compaction reuses this one reduction.
     """
     deg = g.row_ptr[1:] - g.row_ptr[:-1]
+    union = union_frontier(frontier)
     plan = make_plan(cfg)
-    vals = [count(frontier)]
+    vals = [count(union)]
     for spec in plan.bins:
-        m = spec.mask(deg, frontier)
+        m = spec.mask(deg, union)
         md = jnp.where(m, deg, 0)
         vals += [jnp.sum(m.astype(jnp.int32)), jnp.max(md), jnp.sum(md)]
     if plan.lb != "none":
-        hm = plan.lb_mask(deg, frontier, cfg)
+        hm = plan.lb_mask(deg, union, cfg)
         vals += [jnp.sum(hm.astype(jnp.int32)),
                  jnp.sum(jnp.where(hm, deg, 0))]
-    return jnp.stack([jnp.asarray(v, jnp.int32) for v in vals])
+    head = jnp.stack([jnp.asarray(v, jnp.int32) for v in vals])
+    if frontier.ndim == 1:
+        return head, union
+    return jnp.concatenate(
+        [head, jnp.sum(frontier.astype(jnp.int32), axis=1)]), union
 
 
 def relax(g: Graph, values: jax.Array, labels: jax.Array,
@@ -395,21 +471,35 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
     Returns (new_labels, RoundStats|None).  ``values`` is the per-vertex
     quantity being propagated (may alias ``labels``); ``labels`` is the
     array updated by scatter-combine.
+
+    Batched form (DESIGN.md section 7): with ``labels``/``values``/
+    ``frontier`` of shape ``[B, V]`` the round serves B independent
+    queries from ONE set of launches — bins, inspector, and the LB deal
+    are planned on the union frontier and the executors recover
+    per-query activity from the ``[B, V]`` mask.  The returned labels
+    keep the batch axis.
     """
+    batched = labels.ndim == 2
+    if not batched:
+        values, labels, frontier = (values[None], labels[None],
+                                    frontier[None])
+    b, v = labels.shape
     plan = make_plan(cfg)
-    cnt = np.asarray(_host_round_counts(g, frontier, cfg))
-    nf = int(cnt[0])
+    cnt, union = _host_round_counts(g, frontier, cfg)
+    cnt = np.asarray(cnt)
+    nf = int(cnt[0])                                   # union size
     if nf == 0:
-        return labels, None
+        return (labels if batched else labels[0]), None
     fcap = next_bucket(nf)
-    fidx = compact(frontier, fcap)
+    fidx = compact(union, fcap)
     deg, row_start, valid = _frontier_meta(g, fidx)
 
     ex = get_executor(cfg.executor)
     stats = dict(frontier_size=nf, edges_twc=0, edges_lb=0,
                  lb_invoked=False,
                  tile_loads_twc=np.zeros(cfg.num_tiles, np.int64),
-                 tile_loads_lb=np.zeros(cfg.num_tiles, np.int64))
+                 tile_loads_lb=np.zeros(cfg.num_tiles, np.int64),
+                 frontier_per_query=cnt[-b:].astype(np.int64))
 
     def gather_bin(mask, cap):
         """Compact a bin mask into (vidx, deg, row) at capacity ``cap``
@@ -417,7 +507,7 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
         sel = compact(mask, cap)                       # slots into fidx
         sel_safe = jnp.where(sel < fcap, sel, 0)
         take = sel < fcap
-        return (jnp.where(take, fidx[sel_safe], labels.shape[0]),
+        return (jnp.where(take, fidx[sel_safe], v),
                 jnp.where(take, deg[sel_safe], 0),
                 jnp.where(take, row_start[sel_safe], 0))
 
@@ -431,12 +521,12 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
         bvidx, bdeg, brow = gather_bin(mask, next_bucket(n))
         passes = max(1, -(-max_d // spec.width))
         for c in range(passes):
-            labels = ex.bin_host(g, values, labels, bvidx, bdeg, brow,
-                                 spec.width, op, c)
+            labels = ex.bin_host(g, values, labels, frontier, bvidx,
+                                 bdeg, brow, spec.width, op, c)
         if collect_stats:
             stats["edges_twc"] += edge_sum
             stats["tile_loads_twc"] += np.asarray(
-                _tile_loads(bdeg, bvidx < labels.shape[0], cfg.num_tiles))
+                _tile_loads(bdeg, bvidx < v, cfg.num_tiles))
 
     if plan.lb != "none":
         # ---- inspector (Section 4.1): is the huge bin non-empty? ----
@@ -446,9 +536,9 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
             hvidx, hdeg, hrow = gather_bin(hmask, next_bucket(n_huge))
             if total > 0:
                 ecap = next_bucket(total, minimum=cfg.lb_tile_edges)
-                labels = ex.lb_host(g, values, labels, hvidx, hdeg, hrow,
-                                    jnp.int32(total), ecap, op,
-                                    cfg.distribution, cfg.num_tiles,
+                labels = ex.lb_host(g, values, labels, frontier, hvidx,
+                                    hdeg, hrow, jnp.int32(total), ecap,
+                                    op, cfg.distribution, cfg.num_tiles,
                                     cfg.lb_tile_edges)
                 if collect_stats:
                     stats["edges_lb"] = total
@@ -456,6 +546,7 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
                     stats["tile_loads_lb"] = np.asarray(
                         _lb_tile_loads(total, cfg.num_tiles),
                         dtype=np.int64)
+    labels = labels if batched else labels[0]
     return labels, (RoundStats(**stats) if collect_stats else None)
 
 
@@ -484,10 +575,21 @@ def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
     it is comparable across rounds/devices but not bit-identical to the
     host round's bucketed-compacted deal; the LB-path loads use the
     same balanced formula in both modes.
+
+    Like :func:`relax`, accepts batched ``[B, V]`` labels/values/
+    frontier (DESIGN.md section 7): the static-capacity enumeration,
+    the ``lax.while_loop`` chunk driver, and the ``lax.cond`` inspector
+    all run once on the union frontier for the whole batch; ``dirty``
+    and the returned labels keep the batch axis.
     """
+    batched = labels.ndim == 2
+    if not batched:
+        values, labels, frontier = (values[None], labels[None],
+                                    frontier[None])
     labels_in = labels
-    v = labels.shape[0]
-    fidx = compact(frontier, v)
+    v = labels.shape[-1]
+    union = union_frontier(frontier)
+    fidx = compact(union, v)
     deg, row_start, valid = _frontier_meta(g, fidx)
 
     ex = get_executor(cfg.executor)
@@ -503,8 +605,9 @@ def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
         passes = spec.static_passes()
         if passes is not None:
             for c in range(passes):
-                labels = ex.bin_jit(g, values, labels, bvidx, bdeg, brow,
-                                    spec.width, op, jnp.int32(c))
+                labels = ex.bin_jit(g, values, labels, frontier, bvidx,
+                                    bdeg, brow, spec.width, op,
+                                    jnp.int32(c))
         else:
             # unbounded bin: data-dependent pass count (0 when empty)
             max_d = jnp.max(bdeg)
@@ -515,7 +618,8 @@ def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
 
             def body(carry, _s=spec, _b=(bvidx, bdeg, brow)):
                 c, lab = carry
-                lab = ex.bin_jit(g, values, lab, *_b, _s.width, op, c)
+                lab = ex.bin_jit(g, values, lab, frontier, *_b,
+                                 _s.width, op, c)
                 return c + 1, lab
 
             _, labels = jax.lax.while_loop(
@@ -537,9 +641,9 @@ def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
         total = jnp.sum(hdeg)
 
         def lb_branch(labels):
-            new = ex.lb_jit(g, values, labels, hvidx, hdeg, hrow, total,
-                            ecap, op, cfg.distribution, cfg.num_tiles,
-                            cfg.lb_tile_edges)
+            new = ex.lb_jit(g, values, labels, frontier, hvidx, hdeg,
+                            hrow, total, ecap, op, cfg.distribution,
+                            cfg.num_tiles, cfg.lb_tile_edges)
             return new, total.astype(jnp.int32), \
                 _lb_tile_loads(total, cfg.num_tiles)
 
@@ -551,14 +655,17 @@ def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
             n_huge > 0, lb_branch, skip_branch, labels)
         lb_invoked = n_huge > 0
 
-    outs = (labels,)
+    outs = (labels if batched else labels[0],)
     if collect_stats:
         outs += (RoundStatsDev(
-            frontier_size=jnp.sum(frontier.astype(jnp.int32)),
+            frontier_size=jnp.sum(union.astype(jnp.int32)),
             edges_twc=edges_twc, edges_lb=edges_lb,
             lb_invoked=lb_invoked,
             tile_loads_twc=tl_twc, tile_loads_lb=tl_lb,
-            mirrors_synced=jnp.int32(0), bytes_synced=jnp.int32(0)),)
+            mirrors_synced=jnp.int32(0), bytes_synced=jnp.int32(0),
+            frontier_per_query=jnp.sum(frontier.astype(jnp.int32),
+                                       axis=1)),)
     if return_dirty:
-        outs += (dirty_mask(labels_in, labels),)
+        dirty = dirty_mask(labels_in, labels)
+        outs += (dirty if batched else dirty[0],)
     return outs[0] if len(outs) == 1 else outs

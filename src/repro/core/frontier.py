@@ -10,6 +10,14 @@ with runtime-sized geometry.  We mirror both:
   ``F`` is a *bucketed* capacity so the per-round jitted functions are
   reused across rounds (the CPU/GPU analogue of launching a kernel with
   runtime grid size).
+
+The batched query engine (DESIGN.md section 7) adds a third shape: a
+*batch* of dense frontiers ``bool[B, V]``, one row per independent
+query over the shared CSR.  The balancer round inspects the **union**
+frontier (``union_frontier``) — binning, the huge-bin inspector, and
+the LB prefix-sum deal run once for all B queries — while per-query
+activity is recovered by gathering the ``[B, V]`` mask at each
+enumerated edge's source vertex.
 """
 from __future__ import annotations
 
@@ -38,10 +46,29 @@ def count(mask: jax.Array) -> jax.Array:
 
 @jax.jit
 def dirty_mask(old: jax.Array, new: jax.Array) -> jax.Array:
-    """Per-vertex "label touched this round" bitvector (Gluon's dirty
-    set): the master/mirror sync only exchanges vertices set here
-    (DESIGN.md section 6)."""
+    """Per-label "touched this round" bitvector (Gluon's dirty set):
+    the master/mirror sync only exchanges vertices set here (DESIGN.md
+    section 6).  Elementwise, so a batched ``[B, V]`` label pair yields
+    a per-query dirty mask."""
     return new != old
+
+
+@jax.jit
+def dirty_vertices(old: jax.Array, new: jax.Array) -> jax.Array:
+    """Per-**vertex** dirty mask: a vertex is dirty when its label
+    changed in *any* query of the batch — the granularity the mirror
+    sync ships at, since each dirty vertex carries its whole ``[B]``
+    label vector (DESIGN.md section 7)."""
+    d = new != old
+    return d if d.ndim == 1 else jnp.any(d, axis=0)
+
+
+@jax.jit
+def union_frontier(frontier: jax.Array) -> jax.Array:
+    """Dense union of a batch of frontiers: ``[B, V] -> [V]`` (identity
+    on an un-batched ``[V]`` mask).  The balancer round plans bins and
+    the LB deal over this union so one launch serves every query."""
+    return frontier if frontier.ndim == 1 else jnp.any(frontier, axis=0)
 
 
 def full_frontier(num_vertices: int) -> jax.Array:
@@ -50,3 +77,26 @@ def full_frontier(num_vertices: int) -> jax.Array:
 
 def single_source(num_vertices: int, src: int) -> jax.Array:
     return jnp.zeros((num_vertices,), dtype=bool).at[src].set(True)
+
+
+def single_sources(num_vertices: int, sources) -> jax.Array:
+    """Batched one-hot frontiers ``bool[B, V]``: row b activates only
+    ``sources[b]`` — the initial worklists of a multi-source batch."""
+    srcs = jnp.asarray(sources, jnp.int32)
+    b = srcs.shape[0]
+    return jnp.zeros((b, num_vertices), dtype=bool) \
+        .at[jnp.arange(b), srcs].set(True)
+
+
+def multi_source_state(num_vertices: int, sources, fill,
+                       dtype=jnp.int32):
+    """Initial ``[B, V]`` state of a multi-source batch: labels filled
+    with ``fill`` except 0 at each query's own source, plus the one-hot
+    frontiers.  The single entry-point init shared by the single-device
+    and distributed batch drivers (so their label dtype/sentinel can
+    never diverge)."""
+    srcs = jnp.asarray(sources, jnp.int32)
+    b = srcs.shape[0]
+    labels = jnp.full((b, num_vertices), fill, dtype=dtype) \
+        .at[jnp.arange(b), srcs].set(0)
+    return labels, single_sources(num_vertices, srcs)

@@ -31,6 +31,15 @@ runs the Pallas LB/TWC mapping kernels *inside* ``shard_map``, and
 ``collect_stats=True`` threads jit-safe per-device ``RoundStatsDev``
 through the same ``shard_map`` boundary (stacked along the ``dev``
 axis).
+
+Both substrates accept **batched** label/frontier state (DESIGN.md
+section 7): ``relax_spmd`` plans each device's round over the union
+frontier of all B queries, the replicated all-reduce simply spans the
+``[B, V]`` array, and the mirror substrate ships one ``[B]`` label
+vector per dirty boundary vertex (``bytes_synced`` scales by B while
+``mirrors_synced`` keeps counting vertices).
+``sssp_batch_distributed`` / ``bfs_batch_distributed`` are the
+multi-source entry points.
 """
 from __future__ import annotations
 
@@ -44,7 +53,9 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .graph import Graph, INF
-from .balancer import BalancerConfig, RoundStats, RoundStatsDev, relax_spmd
+from .balancer import (BalancerConfig, RoundStats, RoundStatsDev,
+                       relax_spmd, combine_neutral)
+from .frontier import multi_source_state
 from .operators import Operator
 from .partition import PartitionMeta
 from . import operators as ops
@@ -61,16 +72,6 @@ def _sync(labels, combine: str):
     if combine == "min":
         return jax.lax.pmin(labels, "dev")
     return jax.lax.psum(labels, "dev")
-
-
-def _neutral(combine: str, dtype):
-    """Identity element of the combiner — what a non-dirty mirror slot
-    carries so skipping it is exact."""
-    if combine == "min":
-        if jnp.issubdtype(dtype, jnp.floating):
-            return jnp.asarray(jnp.inf, dtype)
-        return jnp.asarray(INF, dtype)
-    return jnp.asarray(0, dtype)
 
 
 def make_round_fn(mesh, cfg: BalancerConfig, op: Operator,
@@ -107,10 +108,12 @@ def make_round_fn(mesh, cfg: BalancerConfig, op: Operator,
             new, st = out if collect_stats else (out, None)
             new = _sync(new, op.combine)
         if collect_stats:
-            v = labels.shape[0]
+            # all-reduce volume spans every label entry: V vertices
+            # exchanged (same unit as the mirror substrate's count),
+            # each carrying a [B] vector -> bytes scale by the batch
             st = st._replace(
-                mirrors_synced=jnp.int32(v),
-                bytes_synced=jnp.int32(v * labels.dtype.itemsize))
+                mirrors_synced=jnp.int32(labels.shape[-1]),
+                bytes_synced=jnp.int32(labels.size * labels.dtype.itemsize))
             # leading axis of size 1 -> stacked to [D, ...] by out_specs
             return new, jax.tree_util.tree_map(lambda x: x[None], st)
         return new
@@ -118,7 +121,8 @@ def make_round_fn(mesh, cfg: BalancerConfig, op: Operator,
     gspec = Graph(row_ptr=P("dev"), col_idx=P("dev"), edge_w=P("dev"))
     out_specs = P()
     if collect_stats:
-        out_specs = (P(), RoundStatsDev(*([P("dev")] * 8)))
+        out_specs = (P(), RoundStatsDev(
+            *([P("dev")] * len(RoundStatsDev._fields))))
     fn = shard_map(round_fn, mesh=mesh,
                    in_specs=(gspec, P(), P(), P()),
                    out_specs=out_specs,
@@ -140,11 +144,18 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
     lists.
 
     Per-device label/frontier state is carried across rounds as a
-    ``[D, V]`` array sharded over ``dev``.  The invariant maintained:
-    after the round, a device's copy is globally correct for every
-    vertex it masters or mirrors (= every endpoint of a local edge, the
-    only entries the next local round can read or write); other entries
-    may be stale, and the final labels are assembled owner-by-owner.
+    ``[D, B, V]`` array sharded over ``dev`` (``B`` = query batch, 1
+    for single-query drivers — the loop canonicalizes).  The invariant
+    maintained: after the round, a device's copy is globally correct
+    for every vertex it masters or mirrors (= every endpoint of a local
+    edge, the only entries the next local round can read or write);
+    other entries may be stale, and the final labels are assembled
+    owner-by-owner.
+
+    Sync payloads are per-**vertex**: a boundary vertex is dirty when
+    any query touched it, and a dirty vertex ships its whole ``[B]``
+    label vector in one ring step (DESIGN.md section 7) —
+    ``mirrors_synced`` counts vertices, ``bytes_synced`` scales by B.
 
     ``values_of`` / ``next_frontier`` / ``post_sync`` are traced inside
     ``shard_map`` so frontier and value derivation stay device-local —
@@ -165,7 +176,8 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
         mirror_t = mirror_t[0]        # [D, L]: rows indexed by owner
         incoming_t = incoming_t[0]    # [D, L]: rows indexed by toucher
         lo, hi = lo_t[0], hi_t[0]     # my owned range
-        labels, frontier = labels[0], frontier[0]
+        labels, frontier = labels[0], frontier[0]      # [B, V]
+        b = labels.shape[0]
         me = jax.lax.axis_index("dev")
 
         values = values_of(labels)
@@ -176,7 +188,10 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
             new, st, dirty = out
         else:
             (new, dirty), st = out, None
-        neutral = _neutral(op.combine, new.dtype)
+        dirty_v = jnp.any(dirty, axis=0)               # [V] any-query
+        # non-dirty mirror slots carry the combiner's identity so
+        # skipping them is exact (same rule as the balancer's scatter)
+        neutral = combine_neutral(op.combine, new.dtype)
 
         perm_fwd = [[(i, (i + s) % ndev) for i in range(ndev)]
                     for s in range(ndev)]
@@ -191,30 +206,30 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
         for s in range(1, ndev):
             out_idx = mirror_t[(me + s) % ndev]
             safe = jnp.where(out_idx < v, out_idx, 0)
-            live = (out_idx < v) & dirty[safe]
-            payload = jnp.where(live, new[safe], neutral)
+            live = (out_idx < v) & dirty_v[safe]
+            payload = jnp.where(live[None], new[:, safe], neutral)
             n_exch += jnp.sum(live.astype(jnp.int32))
             recv = jax.lax.ppermute(payload, "dev", perm_fwd[s])
             in_idx = incoming_t[(me - s) % ndev]
             if op.combine == "min":
-                acc = acc.at[in_idx].min(recv, mode="drop")
+                acc = acc.at[:, in_idx].min(recv, mode="drop")
             else:
-                acc = acc.at[in_idx].add(recv, mode="drop")
+                acc = acc.at[:, in_idx].add(recv, mode="drop")
 
         final = post_sync(labels, acc)
 
         # ---- broadcast-to-mirrors: masters push the reduced values
         # back along the reverse ring; mirrors overwrite their copies.
-        gdirty = final != labels
+        gdirty = jnp.any(final != labels, axis=0)      # [V]
         for s in range(1, ndev):
             out_idx = incoming_t[(me - s) % ndev]
             safe = jnp.where(out_idx < v, out_idx, 0)
             live = (out_idx < v) & gdirty[safe]
-            payload = final[safe]
+            payload = final[:, safe]
             n_exch += jnp.sum(live.astype(jnp.int32))
             recv = jax.lax.ppermute(payload, "dev", perm_bwd[s])
             in_idx = mirror_t[(me + s) % ndev]
-            final = final.at[in_idx].set(recv, mode="drop")
+            final = final.at[:, in_idx].set(recv, mode="drop")
 
         new_frontier = next_frontier(labels, final, frontier)
         active = jax.lax.psum(
@@ -222,7 +237,7 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
         vids = jnp.arange(v, dtype=jnp.int32)
         owned = (vids >= lo) & (vids < hi)
         resid = jax.lax.pmax(jnp.max(jnp.where(
-            owned,
+            owned[None],
             jnp.abs(final.astype(jnp.float32) - labels.astype(jnp.float32)),
             0.0)), "dev")
 
@@ -230,14 +245,15 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
         if collect_stats:
             st = st._replace(
                 mirrors_synced=n_exch,
-                bytes_synced=n_exch * jnp.int32(new.dtype.itemsize))
+                bytes_synced=n_exch * jnp.int32(b * new.dtype.itemsize))
             outs += (jax.tree_util.tree_map(lambda x: x[None], st),)
         return outs
 
     gspec = Graph(row_ptr=P("dev"), col_idx=P("dev"), edge_w=P("dev"))
     out_specs = (P("dev"), P("dev"), P(), P())
     if collect_stats:
-        out_specs += (RoundStatsDev(*([P("dev")] * 8)),)
+        out_specs += (RoundStatsDev(
+            *([P("dev")] * len(RoundStatsDev._fields))),)
     fn = shard_map(round_fn, mesh=mesh,
                    in_specs=(gspec, P("dev"), P("dev"), P("dev"), P("dev"),
                              P("dev"), P("dev")),
@@ -258,9 +274,15 @@ def _mirror_tables(meta: PartitionMeta):
 
 def assemble_owned(labels_dev, meta: PartitionMeta):
     """Gather each vertex's label from its master's copy — the only
-    copies guaranteed globally correct under the mirror substrate."""
+    copies guaranteed globally correct under the mirror substrate.
+    Accepts ``[D, V]`` or batched ``[D, B, V]`` state (returns
+    ``[V]`` / ``[B, V]``)."""
     arr = np.asarray(labels_dev)
-    return jnp.asarray(arr[meta.owner, np.arange(meta.num_vertices)])
+    vsel = np.arange(meta.num_vertices)
+    if arr.ndim == 3:
+        # advanced indices around the batch slice land in front: [V, B]
+        return jnp.asarray(arr[meta.owner, :, vsel].T)
+    return jnp.asarray(arr[meta.owner, vsel])
 
 
 def stats_per_device(st: RoundStatsDev) -> list[RoundStats]:
@@ -335,15 +357,20 @@ def _run_mirror(stacked_g, mesh, op, init_labels, init_frontier, cfg,
     """Owned-state loop shared by the data-driven drivers and the
     convergence-driven ones: stops when the frontier empties, the round
     budget runs out, or (``tol`` set) the owned-entry residual drops
-    below it."""
+    below it.  State is carried batched (``[D, B, V]``); un-batched
+    callers get the query axis added here and squeezed on return."""
+    batched = init_labels.ndim == 2
+    if not batched:
+        init_labels = init_labels[None]
+        init_frontier = init_frontier[None]
     round_fn = make_mirror_round_fn(
         mesh, cfg, op, meta, sync_delta=sync_delta,
         collect_stats=collect_stats, values_of=values_of,
         next_frontier=next_frontier, post_sync=post_sync)
     mirror_t, incoming_t, lo, hi = _mirror_tables(meta)
     ndev = meta.num_devices
-    labels_dev = jnp.tile(init_labels[None], (ndev, 1))
-    frontier_dev = jnp.tile(init_frontier[None], (ndev, 1))
+    labels_dev = jnp.tile(init_labels[None], (ndev, 1, 1))
+    frontier_dev = jnp.tile(init_frontier[None], (ndev, 1, 1))
     active = int(jnp.sum(init_frontier))
     rounds = 0
     stats = [] if collect_stats else None
@@ -361,6 +388,8 @@ def _run_mirror(stacked_g, mesh, op, init_labels, init_frontier, cfg,
         if tol is not None and float(resid) < tol:
             break
     labels = assemble_owned(labels_dev, meta)
+    if not batched:
+        labels = labels[0]
     total = time.perf_counter() - t0
     if collect_stats:
         return labels, rounds, total, stats
@@ -392,6 +421,37 @@ def bfs_distributed(stacked_g: Graph, mesh, source: int,
     v = stacked_g.row_ptr.shape[-1] - 1
     lvl = jnp.full((v,), INF, jnp.int32).at[source].set(0)
     frontier = jnp.zeros((v,), bool).at[source].set(True)
+    return run_distributed(stacked_g, mesh, ops.BFS_HOP, lvl, frontier,
+                           cfg, max_rounds=max_rounds,
+                           collect_stats=collect_stats, sync=sync, meta=meta)
+
+
+def sssp_batch_distributed(stacked_g: Graph, mesh, sources,
+                           cfg: BalancerConfig = BalancerConfig(),
+                           max_rounds: int = 10_000,
+                           collect_stats: bool = False,
+                           sync: str = "replicated",
+                           meta: PartitionMeta | None = None):
+    """Batched multi-source SSSP on the distributed runtime: B queries
+    share every BSP round (union-frontier rounds per device) and, under
+    ``sync="mirror"``, every boundary exchange (one ``[B]`` vector per
+    dirty vertex — DESIGN.md section 7).  Returns ``labels[B, V]``."""
+    v = stacked_g.row_ptr.shape[-1] - 1
+    dist, frontier = multi_source_state(v, sources, INF)
+    return run_distributed(stacked_g, mesh, ops.SSSP_RELAX, dist, frontier,
+                           cfg, max_rounds=max_rounds,
+                           collect_stats=collect_stats, sync=sync, meta=meta)
+
+
+def bfs_batch_distributed(stacked_g: Graph, mesh, sources,
+                          cfg: BalancerConfig = BalancerConfig(),
+                          max_rounds: int = 10_000,
+                          collect_stats: bool = False,
+                          sync: str = "replicated",
+                          meta: PartitionMeta | None = None):
+    """Batched multi-source BFS (see :func:`sssp_batch_distributed`)."""
+    v = stacked_g.row_ptr.shape[-1] - 1
+    lvl, frontier = multi_source_state(v, sources, INF)
     return run_distributed(stacked_g, mesh, ops.BFS_HOP, lvl, frontier,
                            cfg, max_rounds=max_rounds,
                            collect_stats=collect_stats, sync=sync, meta=meta)

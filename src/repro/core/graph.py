@@ -69,15 +69,33 @@ class Graph:
 def from_edge_list(src: np.ndarray, dst: np.ndarray, num_vertices: int,
                    weights: np.ndarray | None = None,
                    dedup: bool = True) -> Graph:
-    """Build a CSR Graph from a COO edge list (host-side)."""
+    """Build a CSR Graph from a COO edge list (host-side).
+
+    ``dedup=True`` collapses parallel edges deterministically: each
+    (src, dst) pair keeps the **minimum** weight among its duplicates
+    (for unweighted input all duplicates are unit weight, so any
+    representative is equivalent).  Min is the right collapse for the
+    shortest-path family this repo propagates — a parallel edge bundle
+    relaxes exactly like its cheapest member — and, unlike the previous
+    keep-first-occurrence rule, does not depend on the input edge
+    order.
+    """
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
     if dedup and len(src):
         key = src * np.int64(num_vertices) + dst
-        _, keep = np.unique(key, return_index=True)
-        src, dst = src[keep], dst[keep]
-        if weights is not None:
-            weights = np.asarray(weights)[keep]
+        if weights is None:
+            _, keep = np.unique(key, return_index=True)
+            src, dst = src[keep], dst[keep]
+        else:
+            weights = np.asarray(weights)
+            # sort by (key, weight): the first edge of each key run is
+            # its minimum-weight duplicate
+            by_w = np.lexsort((weights, key))
+            key, src, dst, weights = (key[by_w], src[by_w], dst[by_w],
+                                      weights[by_w])
+            keep = np.concatenate([[True], key[1:] != key[:-1]])
+            src, dst, weights = src[keep], dst[keep], weights[keep]
     order = np.lexsort((dst, src))
     src, dst = src[order], dst[order]
     if weights is None:
@@ -176,10 +194,17 @@ def reverse_graph(g: Graph) -> Graph:
 
 def symmetrized(g: Graph) -> Graph:
     """Undirected view: every edge plus its reverse (deduplicated) —
-    what cc and kcore expect."""
-    src, dst, _ = to_coo(g)
+    what cc and kcore expect.
+
+    Weights are preserved on both directions; when the input already
+    has both (u, v) and (v, u) with different weights, dedup keeps the
+    minimum, so ``w(u, v) == w(v, u)`` holds in the result and weighted
+    SSSP over a symmetrized graph relaxes real edge weights (it used to
+    silently degrade to unit weights / BFS)."""
+    src, dst, w = to_coo(g)
     return from_edge_list(np.concatenate([src, dst]),
-                          np.concatenate([dst, src]), g.num_vertices)
+                          np.concatenate([dst, src]), g.num_vertices,
+                          weights=np.concatenate([w, w]))
 
 
 def highest_out_degree_vertex(g: Graph) -> int:
@@ -194,18 +219,26 @@ def highest_out_degree_vertex(g: Graph) -> int:
 def pad_graph(g: Graph, v_multiple: int = 8, e_multiple: int = 1024) -> Graph:
     """Pad V and E to multiples so Pallas BlockSpecs tile cleanly.
 
-    Padded vertices have degree 0; padded edges point at a padded vertex
-    with INF-ish weight so they can never win a relaxation.
+    Padded vertices have degree 0.  Padded edges must target a *padded*
+    vertex: the INF-ish weight only protects weight-respecting
+    operators, and an executor that enumerates edge ids over the padded
+    span would corrupt a real vertex's label under weight-ignoring
+    operators (cc, kcore) if padding aimed at one.  So whenever edge
+    padding exists, vertex padding is forced to exist too (``vp > v``)
+    and every padded edge points at the padded vertex ``vp - 1`` —
+    degree 0, label never read.
     """
     v, e = g.num_vertices, g.num_edges
     vp = -(-v // v_multiple) * v_multiple
     ep = -(-e // e_multiple) * e_multiple
+    if ep > e and vp == v:
+        vp = v + v_multiple           # guarantee a padded-edge target
     if vp == v and ep == e:
         return g
     row_ptr = jnp.concatenate(
         [g.row_ptr, jnp.full((vp - v,), g.row_ptr[-1], dtype=jnp.int32)])
     col_idx = jnp.concatenate(
-        [g.col_idx, jnp.full((ep - e,), max(vp - 1, 0), dtype=jnp.int32)])
+        [g.col_idx, jnp.full((ep - e,), vp - 1, dtype=jnp.int32)])
     edge_w = jnp.concatenate(
         [g.edge_w, jnp.full((ep - e,), INF, dtype=jnp.int32)])
     return Graph(row_ptr=row_ptr, col_idx=col_idx, edge_w=edge_w)

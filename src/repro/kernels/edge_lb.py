@@ -35,6 +35,13 @@ The heavy irregular traffic (col_idx[graph_e] gathers from HBM and the
 scatter-min into the label array) is left to XLA's native gather /
 scatter-min, which the TPU does well; the kernel produces the
 (graph_e, src, val) triples.  Validated with interpret=True vs ref.py.
+
+Batched queries (DESIGN.md section 7): the mapping is a pure function
+of the union frontier's huge bin — (graph_e, slot, mask) are shared by
+every query in a batch — so ``ops.edge_lb_apply*`` launch this kernel
+ONCE per round regardless of the batch size and re-gather per-query
+values in the XLA epilogue; the kernel's ``val`` output then carries a
+single query's view and is ignored there.
 """
 from __future__ import annotations
 

@@ -17,6 +17,15 @@ core/balancer.py (DESIGN.md section 3):
   an enclosing ``jit``/``shard_map``; capacities are static (V for the
   bins, E for the LB span), the chunk index is a traced scalar so a
   ``lax.while_loop`` can drive unbounded bins.
+
+All entries are **batched** (DESIGN.md section 7): ``values`` /
+``labels`` / ``fmask`` carry a leading query axis ``[B, V]`` while the
+vertex/edge enumeration stays batch-shared.  The mapping kernel
+therefore runs ONCE per round for the whole batch — it emits the
+(graph_edge, anchor/slot, mask) tiles of the union frontier — and the
+XLA epilogue re-gathers per-query values / activity from the ``[B, V]``
+arrays before the batched scatter-combine.  (The kernel's own value
+output is only a single query's view and is ignored here.)
 """
 from __future__ import annotations
 
@@ -25,81 +34,88 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+# balancer imports this module only lazily (get_executor), so sharing
+# its batched scatter-combine epilogue creates no import cycle — both
+# backends neutralize inactive (vertex, query) slots with the exact
+# same combiner-identity rule (balancer.combine_neutral)
+from repro.core.balancer import _apply
+
 from . import edge_lb as _edge_lb
 from . import twc_gather as _twc
-
-
-def _apply(labels, target, cand, mask, combine):
-    v = labels.shape[0]
-    tgt = jnp.where(mask, target, v)
-    if combine == "min":
-        return labels.at[tgt].min(cand.astype(labels.dtype), mode="drop")
-    return labels.at[tgt].add(
-        jnp.where(mask, cand, 0).astype(labels.dtype), mode="drop")
 
 
 # ---------------------------------------------------------------------------
 # LB executor (edge-balanced renumbering)
 # ---------------------------------------------------------------------------
 
-def edge_lb_apply_static(g, values, labels, hvidx, hdeg, hrow, total,
-                         ecap: int, op, distribution: str,
+def edge_lb_apply_static(g, values, labels, fmask, hvidx, hdeg, hrow,
+                         total, ecap: int, op, distribution: str,
                          num_tiles: int, tile_edges: int):
     """Fully-jit LB entry: trace-safe body (no own jit wrapper)."""
+    v = labels.shape[-1]
     start_e = jnp.cumsum(hdeg) - hdeg
-    vsafe = jnp.where(hvidx < values.shape[0], hvidx, 0)
-    hval = values[vsafe]
-    ge, j, val, mask = _edge_lb.edge_lb_map(
+    vsafe = jnp.where(hvidx < v, hvidx, 0)
+    hval = values[0, vsafe]            # kernel value plumbing: batch 0
+    ge, j, _, mask = _edge_lb.edge_lb_map(
         start_e, hrow, hval, total, ecap,
         tile_edges=tile_edges, distribution=distribution,
         num_tiles=num_tiles)
     dst = g.col_idx[ge]
     w = g.edge_w[ge]
+    j = jnp.clip(j, 0, hvidx.shape[0] - 1)
+    src = jnp.where(hvidx.shape[0] > 0, hvidx[j], 0)
+    ssafe = jnp.where(src < v, src, 0)
+    live = fmask[:, ssafe]                               # [B, n]
     if op.direction == "push":
-        cand = op.msg(val, w)
-        return _apply(labels, dst, cand, mask, op.combine)
-    src = jnp.where(hvidx.shape[0] > 0,
-                    hvidx[jnp.clip(j, 0, hvidx.shape[0] - 1)], 0)
-    cand = op.msg(values[dst], w)
-    return _apply(labels, src, cand, mask, op.combine)
+        cand = op.msg(values[:, ssafe], w[None])
+        return _apply(labels, dst, cand, mask, live, op.combine)
+    cand = op.msg(values[:, dst], w[None])
+    return _apply(labels, src, cand, mask, live, op.combine)
 
 
 @partial(jax.jit,
          static_argnames=("ecap", "op", "distribution", "num_tiles",
                           "tile_edges"))
-def edge_lb_apply(g, values, labels, hvidx, hdeg, hrow, total, ecap: int,
-                  op, distribution: str, num_tiles: int, tile_edges: int):
+def edge_lb_apply(g, values, labels, fmask, hvidx, hdeg, hrow, total,
+                  ecap: int, op, distribution: str, num_tiles: int,
+                  tile_edges: int):
     """Host-driven LB entry: jitted per (ecap, op, ...) bucket."""
-    return edge_lb_apply_static(g, values, labels, hvidx, hdeg, hrow,
-                                total, ecap, op, distribution, num_tiles,
-                                tile_edges)
+    return edge_lb_apply_static(g, values, labels, fmask, hvidx, hdeg,
+                                hrow, total, ecap, op, distribution,
+                                num_tiles, tile_edges)
 
 
 # ---------------------------------------------------------------------------
 # Bin executor (vertex-binned TWC-analog passes)
 # ---------------------------------------------------------------------------
 
-def twc_bin_apply_static(g, values, labels, bvidx, bdeg, brow, width: int,
-                         op, chunk):
+def twc_bin_apply_static(g, values, labels, fmask, bvidx, bdeg, brow,
+                         width: int, op, chunk):
     """Fully-jit bin entry: ``chunk`` may be a traced int32 scalar."""
-    sentinel = labels.shape[0]
-    vsafe = jnp.where(bvidx < values.shape[0], bvidx, 0)
-    bval = values[vsafe]
-    ge, anchor, val, mask = _twc.twc_bin_map(
+    v = labels.shape[-1]
+    vsafe = jnp.where(bvidx < v, bvidx, 0)
+    bval = values[0, vsafe]            # kernel value plumbing: batch 0
+    ge, anchor, _, mask = _twc.twc_bin_map(
         bvidx, bdeg, brow, bval, width=width, chunk=chunk,
-        sentinel=sentinel)
+        sentinel=v)
     dst = g.col_idx[ge]
     w = g.edge_w[ge]
+    # the kernel may pad the bin to its vertex-tile size: recover the
+    # per-row vertex ids from the anchor tiles (rows are constant)
+    row_vid = anchor[:, 0]                               # [N] (pad = v)
+    rsafe = jnp.where(row_vid < v, row_vid, 0)
+    live = fmask[:, rsafe][:, :, None]                   # [B, N, 1]
     if op.direction == "push":
-        cand = op.msg(val, w)
-        return _apply(labels, dst, cand, mask, op.combine)
-    cand = op.msg(values[dst], w)
-    return _apply(labels, anchor, cand, mask, op.combine)
+        val = values[:, rsafe][:, :, None]               # [B, N, 1]
+        cand = op.msg(val, w[None])
+        return _apply(labels, dst, cand, mask, live, op.combine)
+    cand = op.msg(values[:, dst], w[None])
+    return _apply(labels, anchor, cand, mask, live, op.combine)
 
 
 @partial(jax.jit, static_argnames=("width", "op"))
-def twc_bin_apply(g, values, labels, bvidx, bdeg, brow, width: int, op,
-                  chunk):
+def twc_bin_apply(g, values, labels, fmask, bvidx, bdeg, brow,
+                  width: int, op, chunk):
     """Host-driven bin entry: jitted per (width, op) bucket."""
-    return twc_bin_apply_static(g, values, labels, bvidx, bdeg, brow,
-                                width, op, chunk)
+    return twc_bin_apply_static(g, values, labels, fmask, bvidx, bdeg,
+                                brow, width, op, chunk)

@@ -14,6 +14,13 @@ SPMD round (balancer.relax_spmd) iterates chunks with a
 ``lax.while_loop`` whose trip count is data-dependent, so the kernel
 must accept a traced chunk.  The host-driven round passes Python ints,
 which trace to the same single compiled kernel.
+
+Batched queries (DESIGN.md section 7): the (graph_e, anchor, mask)
+tiles depend only on the union frontier's bin members, so
+``ops.twc_bin_apply*`` launch this kernel ONCE per round for the whole
+batch and re-gather per-query values/activity from the ``[B, V]``
+arrays in the XLA epilogue (the ``val`` output carries a single
+query's view and is ignored there).
 """
 from __future__ import annotations
 

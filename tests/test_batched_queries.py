@@ -1,0 +1,239 @@
+"""Batched multi-source query engine acceptance (DESIGN.md section 7).
+
+The contract: ``bfs_batch`` / ``sssp_batch`` over B sources return
+labels **bitwise equal** to B sequential single-source runs with the
+same configuration — for every load-balancing strategy, both round
+modes (host-driven and fully-jit SPMD), both executor backends (xla
+and pallas), and B in {1, 3, 8}.  The batched round plans bins, the
+huge-bin inspector, and the LB prefix-sum deal once over the union
+frontier, so equality here proves per-query activity masking is exact
+(an inactive (vertex, query) pair must contribute the combiner's
+identity, nothing else).
+
+The distributed runtime is covered too: replicated all-reduce and the
+master/mirror boundary exchange both accept the batch axis; the
+4-device cases run natively in the CI multidev job
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4``) and skip
+under the plain tier-1 run.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import graph as G
+from repro.core.balancer import BalancerConfig, RoundStats, relax, relax_spmd
+from repro.core.frontier import single_source, single_sources, union_frontier
+from repro.core import operators as ops
+from repro.core import gluon
+from repro.core.partition import partition
+from repro.core.apps import bfs, sssp, bfs_batch, sssp_batch
+
+STRATS = ["vertex", "twc", "edge_lb", "alb"]
+BATCHES = [1, 3, 8]
+NDEV = 4
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < NDEV,
+    reason=f"needs {NDEV} devices (CI sets "
+           f"XLA_FLAGS=--xla_force_host_platform_device_count={NDEV})")
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return G.rmat(8, 8, seed=7)        # power-law: the inspector fires
+
+
+@pytest.fixture(scope="module")
+def sources(graph):
+    """8 distinct sources: the top-degree hub plus spread-out picks, so
+    per-query frontiers overlap only partially (the interesting case
+    for union-frontier masking)."""
+    deg = np.asarray(graph.out_degrees())
+    picks, seen = [], set()
+    for v in np.argsort(-deg):
+        if deg[v] > 0 and int(v) not in seen:
+            picks.append(int(v))
+            seen.add(int(v))
+        if len(picks) == 8:
+            break
+    return picks
+
+
+def _cfg(strategy, use_pallas=False):
+    return BalancerConfig(strategy=strategy, threshold=64,
+                          use_pallas=use_pallas)
+
+
+@pytest.fixture(scope="module")
+def seq_cache(graph, sources):
+    """Sequential single-source references, computed once per
+    (app, strategy, backend, mode) and shared across the B sweep."""
+    cache = {}
+
+    def get(app, strategy, use_pallas, mode):
+        key = (app.__name__, strategy, use_pallas, mode)
+        if key not in cache:
+            cfg = _cfg(strategy, use_pallas)
+            cache[key] = np.stack([
+                np.asarray(app(graph, s, cfg, mode=mode).labels)
+                for s in sources])
+        return cache[key]
+
+    return get
+
+
+# ---------------- the acceptance sweep ------------------------------------
+
+@pytest.mark.parametrize("b", BATCHES)
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("mode", ["host", "spmd"])
+@pytest.mark.parametrize("strategy", STRATS)
+def test_sssp_batch_bitwise_parity(graph, sources, seq_cache, strategy,
+                                   mode, use_pallas, b):
+    cfg = _cfg(strategy, use_pallas)
+    out = sssp_batch(graph, sources[:b], cfg, mode=mode)
+    ref = seq_cache(sssp, strategy, use_pallas, mode)[:b]
+    assert out.labels.shape == (b, graph.num_vertices)
+    np.testing.assert_array_equal(np.asarray(out.labels), ref)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("mode", ["host", "spmd"])
+@pytest.mark.parametrize("strategy", STRATS)
+def test_bfs_batch_bitwise_parity_b8(graph, sources, seq_cache, strategy,
+                                     mode, use_pallas):
+    cfg = _cfg(strategy, use_pallas)
+    out = bfs_batch(graph, sources, cfg, mode=mode)
+    ref = seq_cache(bfs, strategy, use_pallas, mode)
+    np.testing.assert_array_equal(np.asarray(out.labels), ref)
+
+
+# ---------------- round-level invariants ----------------------------------
+
+def test_single_round_union_inspector(graph, sources):
+    """One batched round == B independent rounds, and the batched stats
+    report the union frontier + per-query sizes."""
+    v = graph.num_vertices
+    cfg = _cfg("alb")
+    b = 3
+    dist = jnp.full((b, v), G.INF, jnp.int32) \
+        .at[jnp.arange(b), jnp.asarray(sources[:b])].set(0)
+    fr = single_sources(v, sources[:b])
+    batched, st = relax(graph, dist, dist, fr, cfg, ops.SSSP_RELAX,
+                        collect_stats=True)
+    for q in range(b):
+        one, _ = relax(graph, dist[q], dist[q],
+                       single_source(v, sources[q]), cfg, ops.SSSP_RELAX)
+        np.testing.assert_array_equal(np.asarray(batched[q]),
+                                      np.asarray(one))
+    union = np.asarray(union_frontier(fr))
+    assert st.frontier_size == union.sum()
+    np.testing.assert_array_equal(st.frontier_per_query,
+                                  np.asarray(fr).sum(axis=1))
+
+
+def test_spmd_batched_stats_match_host(graph, sources):
+    v = graph.num_vertices
+    cfg = _cfg("alb")
+    b = 3
+    dist = jnp.full((b, v), G.INF, jnp.int32) \
+        .at[jnp.arange(b), jnp.asarray(sources[:b])].set(0)
+    fr = single_sources(v, sources[:b])
+    _, hst = relax(graph, dist, dist, fr, cfg, ops.SSSP_RELAX,
+                   collect_stats=True)
+    _, dst = relax_spmd(graph, dist, dist, fr, cfg, ops.SSSP_RELAX,
+                        collect_stats=True)
+    sst = RoundStats.from_device(dst)
+    assert sst.frontier_size == hst.frontier_size
+    assert sst.edges_twc == hst.edges_twc
+    assert sst.edges_lb == hst.edges_lb
+    np.testing.assert_array_equal(sst.frontier_per_query,
+                                  hst.frontier_per_query)
+
+
+def test_retired_queries_stop_contributing(graph, sources):
+    """A query whose frontier has emptied must not affect the rest of
+    the batch: batching a converged query with a live one equals the
+    live one's own run."""
+    cfg = _cfg("alb")
+    # near, quickly-converging query: the hub; far query: a low-degree pick
+    out = sssp_batch(graph, sources[:2], cfg)
+    solo0 = sssp(graph, sources[0], cfg)
+    solo1 = sssp(graph, sources[1], cfg)
+    np.testing.assert_array_equal(np.asarray(out.labels[0]),
+                                  np.asarray(solo0.labels))
+    np.testing.assert_array_equal(np.asarray(out.labels[1]),
+                                  np.asarray(solo1.labels))
+    assert out.rounds == max(solo0.rounds, solo1.rounds)
+
+
+def test_batch_of_identical_sources(graph, sources):
+    """Degenerate batch: B copies of one source — the union equals each
+    query's frontier every round, all rows must match the solo run."""
+    cfg = _cfg("alb")
+    out = bfs_batch(graph, [sources[0]] * 4, cfg)
+    ref = np.asarray(bfs(graph, sources[0], cfg).labels)
+    for q in range(4):
+        np.testing.assert_array_equal(np.asarray(out.labels[q]), ref)
+
+
+# ---------------- distributed runtime (4 devices, CI multidev job) --------
+
+@multidevice
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_batched_replicated_sync_4dev(use_pallas):
+    g = G.rmat(9, 8, seed=5)
+    deg = np.asarray(g.out_degrees())
+    srcs = [int(x) for x in np.argsort(-deg)[:4]]
+    cfg = _cfg("alb", use_pallas)
+    mesh = gluon.device_mesh(NDEV)
+    sg, _ = partition(g, NDEV, "oec")
+    ref = np.stack([np.asarray(sssp(g, s, _cfg("alb")).labels)
+                    for s in srcs])
+    labels, _, _ = gluon.sssp_batch_distributed(sg, mesh, srcs, cfg)
+    np.testing.assert_array_equal(np.asarray(labels), ref)
+
+
+@multidevice
+@pytest.mark.parametrize("policy", ["oec", "cvc"])
+def test_batched_mirror_sync_4dev(policy):
+    """The ISSUE's 4-host-device mirror-sync case: B queries share the
+    dirty-tracked boundary exchange — one [B] vector per dirty vertex —
+    and still land bitwise on the sequential references."""
+    g = G.rmat(9, 8, seed=5)
+    deg = np.asarray(g.out_degrees())
+    srcs = [int(x) for x in np.argsort(-deg)[:4]]
+    b = len(srcs)
+    cfg = _cfg("alb")
+    mesh = gluon.device_mesh(NDEV)
+    sg, meta = partition(g, NDEV, policy)
+    ref = np.stack([np.asarray(sssp(g, s, cfg).labels) for s in srcs])
+    labels, rounds, _, stats = gluon.sssp_batch_distributed(
+        sg, mesh, srcs, cfg, sync="mirror", meta=meta,
+        collect_stats=True)
+    np.testing.assert_array_equal(np.asarray(labels), ref)
+    # payload accounting: bytes = dirty vertices * B * itemsize, and the
+    # boundary exchange still undercuts the replicated all-reduce's
+    # B * V * itemsize * D baseline
+    for per_round in stats:
+        for st in per_round:
+            assert st.bytes_synced == st.mirrors_synced * b * 4
+    baseline = b * g.num_vertices * 4 * NDEV
+    per_round_bytes = [sum(st.bytes_synced for st in pr) for pr in stats]
+    assert len(per_round_bytes) == rounds
+    assert all(x < baseline for x in per_round_bytes)
+
+
+@multidevice
+def test_batched_bfs_distributed_4dev():
+    g = G.rmat(9, 8, seed=5)
+    deg = np.asarray(g.out_degrees())
+    srcs = [int(x) for x in np.argsort(-deg)[:3]]
+    cfg = _cfg("alb")
+    mesh = gluon.device_mesh(NDEV)
+    sg, meta = partition(g, NDEV, "oec")
+    ref = np.stack([np.asarray(bfs(g, s, cfg).labels) for s in srcs])
+    for sync in ["replicated", "mirror"]:
+        labels = gluon.bfs_batch_distributed(
+            sg, mesh, srcs, cfg, sync=sync, meta=meta)[0]
+        np.testing.assert_array_equal(np.asarray(labels), ref, err_msg=sync)

@@ -67,6 +67,84 @@ def test_pad_graph_alignment_and_semantics():
                                   np.asarray(g.row_ptr))
 
 
+def test_pad_graph_padded_edges_target_padded_vertex():
+    """Regression: with V already aligned but E padded, padded col_idx
+    entries used to point at the REAL vertex V-1 — a weight-ignoring
+    operator walking the padded edge span would corrupt its label.
+    Padded edges must target a padded (degree-0, never-read) vertex."""
+    g = G.rmat(7, 3, seed=2)          # V=128 is a multiple of 8
+    assert g.num_vertices % 8 == 0 and g.num_edges % 1024 != 0
+    gp = G.pad_graph(g, v_multiple=8, e_multiple=1024)
+    assert gp.num_vertices > g.num_vertices    # vp forced past V
+    padded_dst = np.asarray(gp.col_idx[g.num_edges:])
+    assert (padded_dst >= g.num_vertices).all()
+    assert (padded_dst < gp.num_vertices).all()
+
+
+def test_pad_graph_cc_edge_lb_unharmed():
+    """cc (weight-ignoring, min-combine) via the edge-balanced path on
+    an aligned-V / padded-E graph must leave real labels identical to
+    the unpadded run — the satellite regression for the padded-edge
+    target fix."""
+    from repro.core.apps import cc
+    from repro.core.balancer import BalancerConfig
+    g = G.symmetrized(G.rmat(7, 3, seed=2))
+    assert g.num_vertices % 8 == 0
+    gp = G.pad_graph(g, v_multiple=8, e_multiple=1024)
+    assert gp.num_edges > g.num_edges
+    cfg = BalancerConfig(strategy="edge_lb", threshold=64)
+    ref = cc(g, cfg)
+    for mode in ["host", "spmd"]:
+        out = cc(gp, cfg, mode=mode)
+        np.testing.assert_array_equal(
+            np.asarray(out.labels[: g.num_vertices]),
+            np.asarray(ref.labels), err_msg=mode)
+
+
+def test_symmetrized_preserves_weights():
+    """Regression: symmetrized() used to drop weights, silently turning
+    weighted SSSP on symmetrized inputs into unit-weight BFS."""
+    src = np.array([0, 1, 2, 0])
+    dst = np.array([1, 2, 0, 2])
+    w = np.array([7, 3, 9, 5])
+    g = G.from_edge_list(src, dst, 3, weights=w)
+    sg = G.symmetrized(g)
+    ssrc, sdst, sw = G.to_coo(sg)
+    wmap = {(int(a), int(b)): int(x) for a, b, x in zip(ssrc, sdst, sw)}
+    # both directions exist and carry the min over duplicates
+    assert wmap[(0, 1)] == wmap[(1, 0)] == 7
+    assert wmap[(1, 2)] == wmap[(2, 1)] == 3
+    # (0,2)/(2,0): forward weight 5, reverse of (2,0) weight 9 -> min 5
+    assert wmap[(0, 2)] == wmap[(2, 0)] == 5
+    # round-trip: symmetrizing a symmetric graph is the identity
+    s2 = G.symmetrized(sg)
+    np.testing.assert_array_equal(np.asarray(s2.row_ptr),
+                                  np.asarray(sg.row_ptr))
+    np.testing.assert_array_equal(np.asarray(s2.col_idx),
+                                  np.asarray(sg.col_idx))
+    np.testing.assert_array_equal(np.asarray(s2.edge_w),
+                                  np.asarray(sg.edge_w))
+
+
+def test_from_edge_list_dedup_keeps_min_weight():
+    """Regression: dedup used to keep an input-order-dependent
+    duplicate's weight; it must keep the per-(src, dst) minimum,
+    independent of edge order."""
+    src = np.array([0, 0, 0, 0])
+    dst = np.array([1, 1, 1, 2])
+    w = np.array([9, 2, 5, 4])
+    g = G.from_edge_list(src, dst, 3, weights=w)
+    assert g.num_edges == 2
+    np.testing.assert_array_equal(np.asarray(g.edge_w), [2, 4])
+    # permuting the input edges changes nothing
+    perm = np.array([2, 3, 0, 1])
+    g2 = G.from_edge_list(src[perm], dst[perm], 3, weights=w[perm])
+    np.testing.assert_array_equal(np.asarray(g.col_idx),
+                                  np.asarray(g2.col_idx))
+    np.testing.assert_array_equal(np.asarray(g.edge_w),
+                                  np.asarray(g2.edge_w))
+
+
 def test_highest_out_degree_vertex():
     g = G.rmat(8, 8, seed=0)
     v = G.highest_out_degree_vertex(g)

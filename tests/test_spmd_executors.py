@@ -273,7 +273,9 @@ def test_host_round_counts_layout():
     g = G.rmat(9, 8, seed=3)
     dist, frontier = _sssp_round_inputs(g)
     cfg = BalancerConfig(strategy="alb", threshold=64)
-    cnt = np.asarray(_host_round_counts(g, frontier, cfg))
+    cnt, union = _host_round_counts(g, frontier, cfg)
+    cnt = np.asarray(cnt)
+    np.testing.assert_array_equal(np.asarray(union), np.asarray(frontier))
     plan = make_plan(cfg)
     assert cnt.shape == (1 + 3 * len(plan.bins) + 2,)
     deg = np.asarray(g.row_ptr[1:]) - np.asarray(g.row_ptr[:-1])
