@@ -23,6 +23,24 @@ def symmetrized(g):
     return G.symmetrized(g)
 
 
+def pick_sources(g, n: int, seed: int = 0) -> list:
+    """n distinct sources with out-degree > 0: the highest-degree hub
+    (the paper's source pick) plus random reachable starts — the mixed
+    traffic a query-serving deployment sees.  Shared by the qps and
+    serve harnesses so both measure the same workload shape."""
+    deg = np.asarray(g.out_degrees())
+    cand = np.flatnonzero(deg > 0)
+    rng = np.random.default_rng(seed)
+    hub = int(np.argmax(deg))
+    picks = [hub]
+    for v in rng.permutation(cand):
+        if len(picks) == n:
+            break
+        if int(v) != hub:
+            picks.append(int(v))
+    return picks
+
+
 def timed(fn, repeats: int = 3):
     """median-of-N wall clock (first call includes jit; we warm once)."""
     fn()                                     # warmup (compilation)

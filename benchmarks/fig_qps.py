@@ -40,23 +40,7 @@ from repro.core import graph as G
 from repro.core.apps import bfs_batch, sssp_batch
 from repro.core.balancer import BalancerConfig
 
-from .common import timed, emit
-
-
-def _sources(g, n: int, seed: int = 0) -> list[int]:
-    """n distinct sources with out-degree > 0: the highest-degree hub
-    (the paper's source pick) plus random reachable starts — the mixed
-    traffic a query-serving deployment sees."""
-    deg = np.asarray(g.out_degrees())
-    cand = np.flatnonzero(deg > 0)
-    rng = np.random.default_rng(seed)
-    picks = [int(np.argmax(deg))]
-    for v in rng.permutation(cand):
-        if len(picks) == n:
-            break
-        if int(v) not in picks:
-            picks.append(int(v))
-    return picks
+from .common import timed, emit, pick_sources
 
 
 def run(smoke: bool = False, spmd: bool = False) -> dict:
@@ -70,7 +54,7 @@ def run(smoke: bool = False, spmd: bool = False) -> dict:
     # boxes it is slow enough that it is opt-in here
     modes = ["host"] + (["spmd"] if spmd and not smoke else [])
     n_queries = max(batch_sizes)
-    sources = _sources(g, n_queries)
+    sources = pick_sources(g, n_queries)
     results: dict = {}
     for app_name, driver in apps.items():
         for mode in modes:

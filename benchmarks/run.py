@@ -25,6 +25,11 @@ Selectors and what each script reproduces:
 * ``qps``      (fig_qps.py)             — batched multi-source query
   throughput: queries/sec of bfs_batch/sssp_batch vs batch size on the
   power-law input (DESIGN.md section 7); ``--smoke`` variant gates CI.
+* ``serve``    (fig_serve.py)           — continuous-batching service
+  throughput/latency vs the restart-per-batch baseline: Zipf traffic
+  with the LRU cache + single-flight coalescing, Poisson-arrival
+  latency sweep, deterministic slot-packing comparison (DESIGN.md
+  section 8); ``--smoke`` variant gates CI.
 * ``roofline`` (roofline.py)            — kernel roofline estimates
   from dry-run artifacts (skipped when artifacts are absent).
 
@@ -38,7 +43,8 @@ import sys
 
 def main() -> None:
     which = set(sys.argv[1:]) or {"table2", "table2sim", "fig5", "fig6",
-                                  "fig8", "fig9", "qps", "roofline"}
+                                  "fig8", "fig9", "qps", "serve",
+                                  "roofline"}
     print("name,us_per_call,derived")
     if "table2" in which:
         from . import table2_strategies
@@ -61,6 +67,9 @@ def main() -> None:
     if "qps" in which:
         from . import fig_qps
         fig_qps.run()
+    if "serve" in which:
+        from . import fig_serve
+        fig_serve.run()
     if "roofline" in which:
         from . import roofline
         try:

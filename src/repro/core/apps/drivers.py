@@ -24,6 +24,13 @@ empties, so it stops contributing vertices to the union while the loop
 drains the remaining queries.  The loop ends when the union is empty,
 and each query's labels are bitwise what its own single-source run
 would have produced.
+
+The continuous-batching service (``repro.serve``, DESIGN.md section 8)
+builds on the same round structure through two public hooks here:
+:func:`relax_round` (one balancer round in either execution mode) and
+:func:`step_batch` (round + min-combine frontier update over ``[B, V]``
+slot state), plus the :data:`QUERY_APPS` registry naming the
+point-query applications a service can admit.
 """
 from __future__ import annotations
 
@@ -43,15 +50,21 @@ from .. import operators as ops
 
 @dataclasses.dataclass
 class AppResult:
+    """What every driver returns: final labels, round count, wall-clock
+    seconds, and (with ``collect_stats=True``) per-round
+    :class:`RoundStats`."""
     labels: jax.Array
     rounds: int
     seconds: float
     stats: Optional[List[RoundStats]] = None
 
 
-def _round(g, values, labels, frontier, cfg, op, collect_stats, mode):
-    """One balancer round in the selected execution mode; always returns
-    (labels, RoundStats|None) with host-side stats."""
+def relax_round(g, values, labels, frontier, cfg, op,
+                collect_stats=False, mode="host"):
+    """One balancer round in the selected execution mode (``"host"`` |
+    ``"spmd"``); always returns (labels, RoundStats|None) with
+    host-side stats.  The single round primitive shared by every driver
+    loop here and by the serving engine (DESIGN.md section 8)."""
     if mode == "host":
         return relax(g, values, labels, frontier, cfg, op,
                      collect_stats=collect_stats)
@@ -63,6 +76,41 @@ def _round(g, values, labels, frontier, cfg, op, collect_stats, mode):
         labels, st = out
         return labels, RoundStats.from_device(st)
     return out, None
+
+
+_round = relax_round                     # internal alias, kept short
+
+
+def step_batch(g, labels, frontier, cfg, op, mode="host",
+               collect_stats=False):
+    """One serving step over ``[B, V]`` slot state: a balancer round
+    followed by the min-combine frontier update (a vertex re-enters its
+    query's worklist exactly when its label improved).  Returns
+    ``(labels, next_frontier, RoundStats|None)``.
+
+    This is the continuous-batching engine's inner loop body
+    (DESIGN.md section 8): rows are independent, so the caller may
+    retire/refill any subset of rows between steps — at fixed shapes,
+    hence without recompiling — and every row still evolves bitwise
+    like its standalone single-source run.  Only ``min``-combine
+    operators (the point-query apps in :data:`QUERY_APPS`) are valid
+    here."""
+    if op.combine != "min":
+        raise ValueError(f"step_batch serves min-combine point queries; "
+                         f"got {op.name} (combine={op.combine!r})")
+    old = labels
+    labels, st = relax_round(g, labels, labels, frontier, cfg, op,
+                             collect_stats=collect_stats, mode=mode)
+    return labels, labels < old, st
+
+
+# the point-query applications a serving deployment admits: name ->
+# (operator, label fill value).  Initial state for a fresh query is
+# multi_source_state / frontier.refill_rows with that fill.
+QUERY_APPS = {
+    "bfs": (ops.BFS_HOP, INF),
+    "sssp": (ops.SSSP_RELAX, INF),
+}
 
 
 def _loop(g: Graph, values_of, labels, frontier, cfg, op,
@@ -104,6 +152,7 @@ def sssp(g: Graph, source: int, cfg: BalancerConfig = BalancerConfig(),
 def bfs(g: Graph, source: int, cfg: BalancerConfig = BalancerConfig(),
         max_rounds: int = 10_000, collect_stats: bool = False,
         mode: str = "host") -> AppResult:
+    """Data-driven BFS: hop-count labels via min-combine push rounds."""
     level = jnp.full((g.num_vertices,), INF, dtype=jnp.int32).at[source].set(0)
     frontier = single_source(g.num_vertices, source)
     labels, rounds, secs, stats = _loop(

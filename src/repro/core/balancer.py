@@ -51,6 +51,16 @@ gathering the ``[B, V]`` frontier mask at each enumerated edge's
 anchor vertex, and candidates of inactive (vertex, query) pairs carry
 the combiner's identity so skipping them is exact.  One kernel launch
 therefore serves B queries instead of B launches serving one.
+
+The continuous-batching service (DESIGN.md section 8) leans on one
+further property of the batched round: rows are *independent*.  A row
+whose frontier is empty contributes no live candidates anywhere, so
+its labels are frozen — which is what lets the serving engine retire a
+converged query's slot and refill it mid-loop.  ``relax``'s
+``return_active`` surfaces each row's entered-the-round liveness from
+the fused host transfer the round already pays for (free
+instrumentation for external loops; retirement itself is a post-round
+fact the engine reads from the updated frontier).
 """
 from __future__ import annotations
 
@@ -70,6 +80,10 @@ from .operators import Operator
 
 @dataclasses.dataclass(frozen=True)
 class BalancerConfig:
+    """Everything that defines a load-balancing strategy instance; a
+    frozen (hashable) value object, so it doubles as a jit static arg
+    and as the ``strategy`` component of the serving-layer result-cache
+    key (DESIGN.md section 8)."""
     strategy: str = "alb"            # vertex | twc | edge_lb | alb
     threshold: int = 1024            # paper: #threads launched
     small_width: int = 8             # thread-level bin
@@ -86,6 +100,7 @@ class BalancerConfig:
 
     @property
     def executor(self) -> str:
+        """Registry name of the backend this config routes through."""
         return "pallas" if self.use_pallas else "xla"
 
 
@@ -111,6 +126,7 @@ class BinSpec:
     cap: Optional[int] = None
 
     def mask(self, deg: jax.Array, valid: jax.Array) -> jax.Array:
+        """Membership mask of this bin over a frontier's degrees."""
         m = valid & (deg > self.lo)
         if self.hi is not None:
             m = m & (deg <= self.hi)
@@ -136,6 +152,7 @@ class RoundPlan:
     lb: str
 
     def lb_mask(self, deg, valid, cfg: BalancerConfig):
+        """Which frontier vertices the edge-balanced path serves."""
         if self.lb == "all":
             return valid & (deg > 0)
         if self.lb == "huge":
@@ -144,6 +161,9 @@ class RoundPlan:
 
 
 def make_plan(cfg: BalancerConfig) -> RoundPlan:
+    """Turn a config into the degree bins + LB mode of its strategy —
+    the ONE place a strategy is defined (both round modes consume the
+    same plan)."""
     s, sw, mw, lw, th = (cfg.strategy, cfg.small_width, cfg.medium_width,
                          cfg.large_width, cfg.threshold)
     if s == "vertex":
@@ -198,10 +218,14 @@ _REGISTRY: dict = {}
 
 
 def register_executor(pair: ExecutorPair) -> None:
+    """Install (or replace) a named backend in the executor registry."""
     _REGISTRY[pair.name] = pair
 
 
 def get_executor(name: str) -> ExecutorPair:
+    """Look up a backend by name (``"xla"`` | ``"pallas"``); the Pallas
+    pair is registered lazily on first use to keep its import cost off
+    the common path."""
     if name not in _REGISTRY and name == "pallas":
         from repro.kernels import ops as kops   # lazy: pallas import cost
         register_executor(ExecutorPair(
@@ -233,6 +257,7 @@ class RoundStats(NamedTuple):
 
     @classmethod
     def from_device(cls, s: "RoundStatsDev") -> "RoundStats":
+        """Materialize a jit-safe :class:`RoundStatsDev` on the host."""
         return cls(frontier_size=int(s.frontier_size),
                    edges_twc=int(s.edges_twc),
                    edges_lb=int(s.edges_lb),
@@ -426,6 +451,22 @@ def _lb_tile_loads(total, num_tiles: int):
 # host-driven round (per-round "kernel launches", bucketed jit)
 # ---------------------------------------------------------------------------
 
+@partial(jax.jit, static_argnames=("cap", "fcap", "v"))
+def _gather_bin(mask, fidx, deg, row_start, cap: int, fcap: int, v: int):
+    """Compact a bin mask into (vidx, deg, row) at capacity ``cap``
+    (slots past the bin size become out-of-range sentinels).  One fused
+    kernel per (cap, fcap) bucket: the compaction and the three
+    selector gathers used to run as ~9 separate dispatches per bin per
+    round, which dominated small-frontier rounds — exactly the
+    per-round fixed cost the batched/serving engines amortize."""
+    sel = compact(mask, cap)                       # slots into fidx
+    sel_safe = jnp.where(sel < fcap, sel, 0)
+    take = sel < fcap
+    return (jnp.where(take, fidx[sel_safe], v),
+            jnp.where(take, deg[sel_safe], 0),
+            jnp.where(take, row_start[sel_safe], 0))
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def _host_round_counts(g: Graph, frontier: jax.Array, cfg: BalancerConfig):
     """Every host-side decision scalar of one round, fused into a single
@@ -465,7 +506,7 @@ def _host_round_counts(g: Graph, frontier: jax.Array, cfg: BalancerConfig):
 
 def relax(g: Graph, values: jax.Array, labels: jax.Array,
           frontier: jax.Array, cfg: BalancerConfig, op: Operator,
-          collect_stats: bool = False):
+          collect_stats: bool = False, return_active: bool = False):
     """One round: apply ``op`` along all edges of active vertices.
 
     Returns (new_labels, RoundStats|None).  ``values`` is the per-vertex
@@ -478,6 +519,13 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
     are planned on the union frontier and the executors recover
     per-query activity from the ``[B, V]`` mask.  The returned labels
     keep the batch axis.
+
+    ``return_active=True`` appends a host ``bool[B]`` (``bool[1]`` for
+    the un-batched form) marking which rows entered the round with a
+    non-empty frontier — per-slot liveness instrumentation for round
+    loops over batched state (DESIGN.md section 8).  It is sliced out
+    of the fused host-transfer the round already performs, so
+    observing it costs no extra device round-trip.
     """
     batched = labels.ndim == 2
     if not batched:
@@ -488,8 +536,10 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
     cnt, union = _host_round_counts(g, frontier, cfg)
     cnt = np.asarray(cnt)
     nf = int(cnt[0])                                   # union size
+    active = cnt[-b:] > 0
     if nf == 0:
-        return (labels if batched else labels[0]), None
+        out = ((labels if batched else labels[0]), None)
+        return out + (active,) if return_active else out
     fcap = next_bucket(nf)
     fidx = compact(union, fcap)
     deg, row_start, valid = _frontier_meta(g, fidx)
@@ -502,14 +552,7 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
                  frontier_per_query=cnt[-b:].astype(np.int64))
 
     def gather_bin(mask, cap):
-        """Compact a bin mask into (vidx, deg, row) at capacity ``cap``
-        (slots past the bin size become out-of-range sentinels)."""
-        sel = compact(mask, cap)                       # slots into fidx
-        sel_safe = jnp.where(sel < fcap, sel, 0)
-        take = sel < fcap
-        return (jnp.where(take, fidx[sel_safe], v),
-                jnp.where(take, deg[sel_safe], 0),
-                jnp.where(take, row_start[sel_safe], 0))
+        return _gather_bin(mask, fidx, deg, row_start, cap, fcap, v)
 
     k = 1
     for spec in plan.bins:
@@ -547,7 +590,8 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
                         _lb_tile_loads(total, cfg.num_tiles),
                         dtype=np.int64)
     labels = labels if batched else labels[0]
-    return labels, (RoundStats(**stats) if collect_stats else None)
+    out = (labels, RoundStats(**stats) if collect_stats else None)
+    return out + (active,) if return_active else out
 
 
 # ---------------------------------------------------------------------------

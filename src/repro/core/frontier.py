@@ -18,6 +18,13 @@ frontier (``union_frontier``) — binning, the huge-bin inspector, and
 the LB prefix-sum deal run once for all B queries — while per-query
 activity is recovered by gathering the ``[B, V]`` mask at each
 enumerated edge's source vertex.
+
+The serving engine (DESIGN.md section 8) treats each batch row as a
+*slot* with a lifecycle: a row whose frontier empties has *retired*
+(``rows_active``) and can be *refilled* mid-loop with a fresh source
+(``refill_rows``) or restored from a preemption snapshot
+(``load_rows``) — all at fixed ``[B, V]`` shapes, so the round loop
+never recompiles across admissions.
 """
 from __future__ import annotations
 
@@ -86,6 +93,53 @@ def single_sources(num_vertices: int, sources) -> jax.Array:
     b = srcs.shape[0]
     return jnp.zeros((b, num_vertices), dtype=bool) \
         .at[jnp.arange(b), srcs].set(True)
+
+
+@jax.jit
+def rows_active(frontier: jax.Array) -> jax.Array:
+    """Per-slot liveness ``bool[B]`` of a batched frontier: row b is
+    active while any of its vertices is on the worklist.  A row that
+    goes inactive has *retired* — its query converged and its slot can
+    be refilled (DESIGN.md section 8)."""
+    return jnp.any(frontier, axis=-1)
+
+
+@jax.jit
+def refill_rows(labels: jax.Array, frontier: jax.Array,
+                slots: jax.Array, sources: jax.Array, fill) -> tuple:
+    """Admit fresh single-source queries into batch slots, in place of
+    whatever the rows held before (DESIGN.md section 8).
+
+    ``slots``/``sources`` are int32 ``[K]`` (pad unused entries with
+    ``slots[k] = B`` — the out-of-range sentinel is dropped by the
+    ``mode="drop"`` scatter, so one fixed ``K`` serves any number of
+    admissions without re-jitting).  Each named slot's labels row is
+    reset to ``fill`` with 0 at its own source and its frontier row to
+    the one-hot source — exactly :func:`multi_source_state` for that
+    row, so a refilled slot evolves bitwise like a standalone run.
+    """
+    v = labels.shape[-1]
+    k = slots.shape[0]
+    ssafe = jnp.clip(sources, 0, v - 1)
+    lrows = jnp.full((k, v), fill, labels.dtype) \
+        .at[jnp.arange(k), ssafe].set(0)
+    frows = jnp.zeros((k, v), dtype=bool) \
+        .at[jnp.arange(k), ssafe].set(True)
+    return (labels.at[slots].set(lrows, mode="drop"),
+            frontier.at[slots].set(frows, mode="drop"))
+
+
+@jax.jit
+def load_rows(labels: jax.Array, frontier: jax.Array, slots: jax.Array,
+              label_rows: jax.Array, frontier_rows: jax.Array) -> tuple:
+    """Restore snapshot rows into batch slots: the resume half of the
+    serving engine's preempt/resume pair (DESIGN.md section 8).
+    ``slots`` is int32 ``[K]`` (sentinel ``B`` entries dropped) and
+    ``label_rows``/``frontier_rows`` are the ``[K, V]`` per-slot states
+    captured when the queries were preempted; restoring them is exact,
+    so a resumed query's labels evolve bitwise as if never paused."""
+    return (labels.at[slots].set(label_rows, mode="drop"),
+            frontier.at[slots].set(frontier_rows, mode="drop"))
 
 
 def multi_source_state(num_vertices: int, sources, fill,

@@ -62,6 +62,9 @@ from . import operators as ops
 
 
 def device_mesh(num_devices: int | None = None):
+    """A 1-D ``("dev",)`` mesh over the first ``num_devices`` local
+    devices (all of them by default) — what every distributed driver
+    here expects."""
     devs = jax.devices()
     if num_devices is not None:
         devs = devs[:num_devices]
@@ -404,6 +407,9 @@ def sssp_distributed(stacked_g: Graph, mesh, source: int,
                      collect_stats: bool = False,
                      sync: str = "replicated",
                      meta: PartitionMeta | None = None):
+    """Distributed single-source SSSP over a partitioned (stacked-CSR)
+    graph; ``sync`` selects the replicated all-reduce or the
+    master/mirror boundary exchange (DESIGN.md section 6)."""
     v = stacked_g.row_ptr.shape[-1] - 1
     dist = jnp.full((v,), INF, jnp.int32).at[source].set(0)
     frontier = jnp.zeros((v,), bool).at[source].set(True)
@@ -418,6 +424,7 @@ def bfs_distributed(stacked_g: Graph, mesh, source: int,
                     collect_stats: bool = False,
                     sync: str = "replicated",
                     meta: PartitionMeta | None = None):
+    """Distributed single-source BFS (see :func:`sssp_distributed`)."""
     v = stacked_g.row_ptr.shape[-1] - 1
     lvl = jnp.full((v,), INF, jnp.int32).at[source].set(0)
     frontier = jnp.zeros((v,), bool).at[source].set(True)
@@ -463,6 +470,9 @@ def cc_distributed(stacked_g: Graph, mesh,
                    collect_stats: bool = False,
                    sync: str = "replicated",
                    meta: PartitionMeta | None = None):
+    """Distributed connected components by min-label propagation
+    (expects a symmetrized input; see :func:`sssp_distributed` for the
+    ``sync`` substrates)."""
     v = stacked_g.row_ptr.shape[-1] - 1
     comp = jnp.arange(v, dtype=jnp.int32)
     frontier = jnp.ones((v,), bool)

@@ -1,0 +1,82 @@
+"""LRU result cache of the serving layer.
+
+Point queries are deterministic — the batched engine guarantees every
+served query is bitwise equal to its standalone run — so a repeat
+(graph, app, source) lookup can be answered from memory without
+touching the device.  Keys are ``(graph_id, app, source, strategy)``
+where ``strategy`` is the frozen :class:`BalancerConfig` (hashable by
+construction): results are strategy-independent by the parity
+invariant, but keying on the config keeps the cache trivially correct
+if a future strategy ever trades exactness for speed, and lets A/B
+deployments coexist (DESIGN.md section 8).
+
+Re-registering a graph id invalidates every entry for that id — the
+binding ``graph_id -> CSR`` changed, so cached labels may be stale.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Hashable, Optional
+
+import numpy as np
+
+
+class ResultCache:
+    """Bounded LRU map ``(graph_id, app, source, strategy) ->
+    labels[V]`` with hit/miss counters; ``capacity=0`` disables
+    caching entirely (every ``get`` is a miss)."""
+
+    def __init__(self, capacity: int = 256) -> None:
+        if capacity < 0:
+            raise ValueError("capacity must be >= 0")
+        self.capacity = capacity
+        self._entries: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key(graph_id: str, app: str, source: int,
+            strategy: Hashable) -> tuple:
+        """The canonical cache key (DESIGN.md section 8)."""
+        return (graph_id, app, int(source), strategy)
+
+    def get(self, graph_id: str, app: str, source: int,
+            strategy: Hashable) -> Optional[np.ndarray]:
+        """Cached labels for the query, refreshing its LRU position;
+        None (and a counted miss) when absent."""
+        k = self.key(graph_id, app, source, strategy)
+        if k not in self._entries:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(k)
+        self.hits += 1
+        return self._entries[k]
+
+    def put(self, graph_id: str, app: str, source: int,
+            strategy: Hashable, labels: np.ndarray) -> None:
+        """Insert/refresh an entry, evicting the least recently used
+        entry when over capacity."""
+        if self.capacity == 0:
+            return
+        k = self.key(graph_id, app, source, strategy)
+        self._entries[k] = labels
+        self._entries.move_to_end(k)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+
+    def invalidate_graph(self, graph_id: str) -> int:
+        """Drop every entry of ``graph_id`` (its CSR binding changed);
+        returns how many entries were dropped."""
+        stale = [k for k in self._entries if k[0] == graph_id]
+        for k in stale:
+            del self._entries[k]
+        return len(stale)
+
+    @property
+    def hit_rate(self) -> float:
+        """hits / (hits + misses); 0.0 before any lookup."""
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def __len__(self) -> int:
+        return len(self._entries)

@@ -1,0 +1,320 @@
+"""The continuous-batching query service (DESIGN.md section 8).
+
+:class:`QueryService` runs the ALB round loop as a *service*: queries
+arrive continuously via ``submit``, each occupies one row (a **slot**)
+of a ``[B, V]`` slot bank, and the bank advances one balancer round
+per ``step``.  A row whose frontier empties has converged — it is
+retired and its slot refilled from the queue *mid-loop*, at fixed
+``[B, V]`` shapes, so admission never recompiles or restarts the loop.
+Because batch rows are independent (inactive rows scatter only the
+combiner's identity), every served query is bitwise equal to its
+standalone ``bfs``/``sssp`` run regardless of what shared its batch.
+
+Composition (one class per module in this package):
+
+* :class:`repro.serve.queue.QueryQueue` — submit/poll bookkeeping,
+  FIFO pending order;
+* :class:`repro.serve.scheduler.Scheduler` — deterministic admission +
+  round-budget preemption (snapshot/resume, exact);
+* :class:`repro.serve.cache.ResultCache` — LRU over
+  (graph_id, app, source, strategy), invalidated per graph on
+  re-registration; the same key drives single-flight coalescing of
+  identical in-flight submissions;
+* :class:`repro.serve.stats.ServiceStats` — queries served, p50/p95
+  rounds-in-system, slot occupancy, cache hit rate.
+
+Slot banks are keyed ``(graph_id, app)`` — a balancer round applies
+one operator to its whole batch — and created lazily on first demand.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.balancer import BalancerConfig
+from repro.core.frontier import rows_active, refill_rows, load_rows
+from repro.core.apps.drivers import QUERY_APPS, step_batch
+
+from .queue import Query, QueryQueue, QUEUED, RUNNING, DONE
+from .scheduler import Scheduler, SlotView
+from .cache import ResultCache
+from .stats import ServiceStats
+
+
+class _SlotBank:
+    """Device state of one (graph_id, app) batch: ``[B, V]`` labels +
+    frontier, plus the host-side slot -> query map."""
+
+    def __init__(self, g: Graph, app: str, num_slots: int) -> None:
+        self.g = g
+        self.app = app
+        self.op, self.fill = QUERY_APPS[app]
+        v = g.num_vertices
+        self.labels = jnp.full((num_slots, v), self.fill, jnp.int32)
+        self.frontier = jnp.zeros((num_slots, v), dtype=bool)
+        self.slot_q: list = [None] * num_slots      # Query | None
+
+    @property
+    def num_slots(self) -> int:
+        return len(self.slot_q)
+
+    def views(self) -> list:
+        """Scheduler-facing occupancy views, ascending slot order."""
+        return [SlotView(slot=s,
+                         qid=None if q is None else q.qid,
+                         slot_rounds=0 if q is None else q.slot_rounds)
+                for s, q in enumerate(self.slot_q)]
+
+    def busy(self) -> int:
+        return sum(q is not None for q in self.slot_q)
+
+
+class QueryService:
+    """Continuous-batching BFS/SSSP service over registered graphs.
+
+    ``num_slots`` fixes B (per slot bank); ``cfg``/``mode`` select the
+    balancer strategy and round implementation for every bank;
+    ``round_budget`` enables preemptive fairness (see
+    :class:`repro.serve.scheduler.Scheduler`); ``cache_capacity``
+    bounds the LRU result cache (0 disables it).
+
+    Typical use::
+
+        svc = QueryService(num_slots=8)
+        svc.register_graph("social", g)
+        qid = svc.submit("social", "bfs", source=17)
+        svc.run()                       # drain queue + slots
+        labels = svc.poll(qid).result   # np.ndarray[V], bitwise ==
+                                        # apps.bfs(g, 17).labels
+    """
+
+    def __init__(self, num_slots: int = 8,
+                 cfg: BalancerConfig = BalancerConfig(),
+                 mode: str = "host",
+                 round_budget: Optional[int] = None,
+                 cache_capacity: int = 256) -> None:
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.num_slots = num_slots
+        self.cfg = cfg
+        self.mode = mode
+        self.queue = QueryQueue()
+        self.scheduler = Scheduler(round_budget=round_budget)
+        self.cache = ResultCache(capacity=cache_capacity)
+        self.stats = ServiceStats()
+        self._graphs: Dict[str, Graph] = {}
+        self._banks: Dict[tuple, _SlotBank] = {}
+        self._step = 0
+        # single-flight coalescing: cache-key -> primary qid of the
+        # in-flight computation identical submissions attach to
+        self._inflight: Dict[tuple, int] = {}
+        self._followers: Dict[int, list] = {}
+        # (step, qid, slot) admission trace — the determinism witness
+        self.admission_log: list = []
+
+    # ---- graph registry --------------------------------------------------
+
+    def register_graph(self, graph_id: str, g: Graph) -> None:
+        """Bind ``graph_id`` to a CSR graph.  Re-registering an id
+        invalidates its cache entries (the binding changed) and drops
+        its idle slot banks; it is an error while queries for the id
+        are still in flight."""
+        if graph_id in self._graphs:
+            if self.queue.in_flight(graph_id):
+                raise ValueError(
+                    f"cannot re-register {graph_id!r}: queries in flight")
+            self.cache.invalidate_graph(graph_id)
+            for key in [k for k in self._banks if k[0] == graph_id]:
+                del self._banks[key]
+        self._graphs[graph_id] = g
+
+    # ---- submit / poll ---------------------------------------------------
+
+    def submit(self, graph_id: str, app: str, source: int) -> int:
+        """Enqueue one point query; returns its qid.
+
+        Two short-circuits keep repeat traffic off the device: a
+        **cache hit** is answered immediately (status DONE,
+        ``from_cache=True``, rounds-in-system 0), and a submission
+        identical to one still in flight is **coalesced** onto it
+        (single-flight): it never occupies a slot, and completes —
+        also marked ``from_cache`` — the moment its primary does."""
+        if graph_id not in self._graphs:
+            raise ValueError(f"unknown graph {graph_id!r}")
+        if app not in QUERY_APPS:
+            raise ValueError(
+                f"unknown app {app!r} (have {sorted(QUERY_APPS)})")
+        g = self._graphs[graph_id]
+        if not 0 <= int(source) < g.num_vertices:
+            raise ValueError(f"source {source} out of range "
+                             f"[0, {g.num_vertices})")
+        cached = self.cache.get(graph_id, app, source, self.cfg)
+        key = self.cache.key(graph_id, app, source, self.cfg)
+        primary = None if cached is not None else self._inflight.get(key)
+        q = self.queue.submit(
+            graph_id, app, source, step=self._step,
+            enqueue=cached is None and primary is None)
+        if cached is not None:
+            self._finish(q, cached, from_cache=True)
+        elif primary is not None:
+            self._followers.setdefault(primary, []).append(q)
+        else:
+            self._inflight[key] = q.qid
+        return q.qid
+
+    def poll(self, qid: int) -> Query:
+        """The query's live record: ``status`` (queued/running/done),
+        ``result`` (host labels once done), ``rounds_in_system``,
+        ``from_cache``."""
+        return self.queue.poll(qid)
+
+    # ---- the serving loop ------------------------------------------------
+
+    def step(self) -> bool:
+        """One service round: for every slot bank with work — admit
+        (after any preemptions), run one balancer round, retire
+        converged slots.  Returns False when nothing was left to do
+        (queue empty, all slots idle)."""
+        self._step += 1
+        did_work = False
+        for key in self._bank_keys_with_work():
+            did_work |= self._step_bank(key)
+        return did_work
+
+    def run(self, max_steps: int = 1_000_000) -> ServiceStats:
+        """Drain: step until every submitted query is DONE (bounded by
+        ``max_steps`` as a divergence guard).  Returns the accumulated
+        :class:`ServiceStats`."""
+        for _ in range(max_steps):
+            if not self.step():
+                return self.stats
+        raise RuntimeError(f"service did not drain in {max_steps} steps")
+
+    # ---- internals -------------------------------------------------------
+
+    def _bank_keys_with_work(self) -> list:
+        keys = list(self._banks)    # insertion order: deterministic
+        keys = [k for k in keys if self._banks[k].busy()
+                or self.queue.pending_count(*k)]
+        for k in self.queue.banks_with_pending():
+            if k not in keys:
+                keys.append(k)
+        return keys
+
+    def _bank(self, key: tuple) -> _SlotBank:
+        if key not in self._banks:
+            graph_id, app = key
+            self._banks[key] = _SlotBank(self._graphs[graph_id], app,
+                                         self.num_slots)
+        return self._banks[key]
+
+    def _finish(self, q: Query, labels: np.ndarray,
+                from_cache: bool) -> None:
+        """Complete a query and fan its labels out to any coalesced
+        followers (shared, not copied — results are read-only)."""
+        q.status = DONE
+        q.result = labels
+        q.from_cache = from_cache
+        q.done_step = self._step
+        q.slot = None
+        q.saved_state = None
+        self.stats.record_done(q.rounds_in_system, from_cache)
+        key = self.cache.key(q.graph_id, q.app, q.source, self.cfg)
+        if self._inflight.get(key) == q.qid:
+            del self._inflight[key]
+        for f in self._followers.pop(q.qid, ()):
+            self._finish(f, labels, from_cache=True)
+
+    def _step_bank(self, key: tuple) -> bool:
+        bank = self._bank(key)
+        graph_id, app = key
+        b = bank.num_slots
+
+        # 1. plan admissions/preemptions against current occupancy
+        decision = self.scheduler.plan(
+            bank.views(), self.queue.pending_count(graph_id, app))
+
+        # 2. preempt: snapshot rows to host, requeue at the back
+        #    (whole-array device_get — cheaper to dispatch than a
+        #    fancy-index row gather, and preemption steps are rare)
+        if decision.preempt:
+            l_host = np.asarray(bank.labels)
+            f_host = np.asarray(bank.frontier)
+            for slot in decision.preempt:
+                q = bank.slot_q[slot]
+                q.saved_state = (l_host[slot].copy(),
+                                 f_host[slot].copy())
+                q.preemptions += 1
+                self.stats.preemptions += 1
+                self.queue.requeue(q)
+                bank.slot_q[slot] = None
+
+        # 3. admit: fresh queries reset their row, resumed queries
+        #    restore their snapshot — one fixed-K scatter each, so the
+        #    loop shapes never change
+        fresh, resumed = [], []
+        for slot in decision.admit:
+            q = self.queue.next_pending(graph_id, app)
+            if q is None:
+                break
+            q.status = RUNNING
+            q.slot = slot
+            q.slot_rounds = 0
+            bank.slot_q[slot] = q
+            self.admission_log.append((self._step, q.qid, slot))
+            (resumed if q.saved_state is not None else fresh).append(
+                (slot, q))
+        if fresh:
+            slots = np.full((b,), b, np.int32)
+            srcs = np.zeros((b,), np.int32)
+            for i, (slot, q) in enumerate(fresh):
+                slots[i], srcs[i] = slot, q.source
+            bank.labels, bank.frontier = refill_rows(
+                bank.labels, bank.frontier, slots, srcs, bank.fill)
+        if resumed:
+            slots = np.full((b,), b, np.int32)
+            v = bank.g.num_vertices
+            lrows = np.zeros((b, v), np.int32)
+            frows = np.zeros((b, v), bool)
+            for i, (slot, q) in enumerate(resumed):
+                slots[i] = slot
+                lrows[i], frows[i] = q.saved_state
+                q.saved_state = None
+            bank.labels, bank.frontier = load_rows(
+                bank.labels, bank.frontier, slots, lrows, frows)
+
+        busy = bank.busy()
+        if busy == 0:
+            return False
+
+        # 4. one balancer round for the whole bank
+        bank.labels, bank.frontier, _ = step_batch(
+            bank.g, bank.labels, bank.frontier, self.cfg, bank.op,
+            mode=self.mode)
+        self.stats.record_step(busy=busy, total=b)
+        for q in bank.slot_q:
+            if q is not None:
+                q.slot_rounds += 1
+
+        # 5. retire: occupied rows whose frontier emptied have
+        #    converged — publish, cache, free the slot.  The steady
+        #    per-round transfer is only the ``bool[B]`` liveness
+        #    vector; the [B, V] labels are fetched (one dense
+        #    device_get — cheaper to dispatch than per-row gathers)
+        #    only on rounds where something actually retired.
+        act = jax.device_get(rows_active(bank.frontier))
+        done = [slot for slot, q in enumerate(bank.slot_q)
+                if q is not None and not act[slot]]
+        if done:
+            l_host = np.asarray(bank.labels)
+            for slot in done:
+                q = bank.slot_q[slot]
+                labels = l_host[slot].copy()
+                self.cache.put(graph_id, app, q.source, self.cfg, labels)
+                self._finish(q, labels, from_cache=False)
+                bank.slot_q[slot] = None
+        return True

@@ -1,0 +1,81 @@
+"""Service-level instrumentation.
+
+Where :class:`repro.core.balancer.RoundStats` measures one balancer
+round, :class:`ServiceStats` measures the *service*: how many queries
+were served (and how many straight from cache), the distribution of
+rounds-in-system (queue wait + slot residency, the service's latency
+in its natural unit), and how full the slot array ran (occupancy = the
+fraction of slot-rounds that held a query — the utilization that
+continuous batching exists to maximize, DESIGN.md section 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Counters accumulated by a :class:`repro.serve.QueryService`."""
+    queries_served: int = 0        # completed, including cache hits
+    cache_hits: int = 0            # served with NO device work: LRU
+    #                                hits + single-flight coalesced
+    cache_misses: int = 0          # actually computed on the device
+    steps: int = 0                 # service rounds executed
+    slot_rounds_total: int = 0     # B per step (the capacity offered)
+    slot_rounds_busy: int = 0      # ... of which held a RUNNING query
+    preemptions: int = 0
+    rounds_in_system: List[int] = dataclasses.field(default_factory=list)
+
+    def record_step(self, busy: int, total: int) -> None:
+        """Account one service round offering ``total`` slot-rounds of
+        which ``busy`` were occupied."""
+        self.steps += 1
+        self.slot_rounds_total += total
+        self.slot_rounds_busy += busy
+
+    def record_done(self, rounds_in_system: int,
+                    from_cache: bool) -> None:
+        """Account one completed query."""
+        self.queries_served += 1
+        if from_cache:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+        self.rounds_in_system.append(int(rounds_in_system))
+
+    @property
+    def occupancy(self) -> float:
+        """Busy slot-rounds / offered slot-rounds (0.0 before any
+        step)."""
+        if self.slot_rounds_total == 0:
+            return 0.0
+        return self.slot_rounds_busy / self.slot_rounds_total
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Fraction of completed queries answered from the cache."""
+        if self.queries_served == 0:
+            return 0.0
+        return self.cache_hits / self.queries_served
+
+    def latency_percentile(self, p: float) -> float:
+        """p-th percentile of rounds-in-system over completed queries
+        (NaN before any completion)."""
+        if not self.rounds_in_system:
+            return float("nan")
+        return float(np.percentile(np.asarray(self.rounds_in_system), p))
+
+    def summary(self) -> dict:
+        """One flat dict for logging/benchmark emission."""
+        return {
+            "queries_served": self.queries_served,
+            "cache_hit_rate": round(self.cache_hit_rate, 4),
+            "steps": self.steps,
+            "occupancy": round(self.occupancy, 4),
+            "preemptions": self.preemptions,
+            "lat_rounds_p50": self.latency_percentile(50),
+            "lat_rounds_p95": self.latency_percentile(95),
+        }

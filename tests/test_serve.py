@@ -1,0 +1,422 @@
+"""Continuous-batching query service (repro.serve, DESIGN.md
+section 8).
+
+The invariants under test:
+
+* **Mid-loop refill parity** — every query served through the slot
+  engine (including queries admitted into a slot another query just
+  vacated, and queries preempted/resumed) returns labels bitwise equal
+  to its standalone ``bfs``/``sssp`` run.
+* **Fairness** — with a round budget, a giant-diameter query cannot
+  starve the queue: short queries complete in O(budget) rounds, the
+  giant still finishes correctly.
+* **Cache** — repeat queries hit the LRU cache; re-registering a graph
+  id invalidates its entries.
+* **Determinism** — identical submissions produce identical admission
+  sequences (and identical results), run to run.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import graph as G
+from repro.core.apps import bfs, sssp
+from repro.core.apps.drivers import QUERY_APPS, step_batch
+from repro.core.balancer import BalancerConfig, relax
+from repro.core.frontier import (multi_source_state, rows_active,
+                                 refill_rows, load_rows)
+from repro.serve import (QueryService, ResultCache, Scheduler, SlotView,
+                         QUEUED, RUNNING, DONE)
+
+CFG = BalancerConfig(strategy="alb", threshold=32)
+STANDALONE = {"bfs": bfs, "sssp": sssp}
+
+
+@pytest.fixture(scope="module")
+def rmat_g():
+    return G.rmat(8, 8, seed=3)
+
+
+@pytest.fixture(scope="module")
+def path_star_g():
+    """One graph, two workload shapes: an 80-hop path (the
+    giant-diameter query) and a star (1–2 round queries)."""
+    n_path, hub, leaves = 80, 80, range(82, 90)
+    src = list(range(n_path)) + [hub] * len(list(leaves))
+    dst = list(range(1, n_path + 1)) + list(leaves)
+    return G.from_edge_list(np.asarray(src), np.asarray(dst), 90)
+
+
+def _sources(g, n, seed=0):
+    deg = np.asarray(g.out_degrees())
+    cand = np.flatnonzero(deg > 0)
+    rng = np.random.default_rng(seed)
+    picks = rng.choice(cand, size=n, replace=False)
+    return [int(v) for v in picks]
+
+
+# ---------------------------------------------------------------------------
+# lifecycle primitives
+# ---------------------------------------------------------------------------
+
+def test_rows_active_and_refill(rmat_g):
+    g = rmat_g
+    labels, frontier = multi_source_state(g.num_vertices, [1, 2, 3],
+                                          G.INF)
+    act = np.asarray(rows_active(frontier))
+    assert act.tolist() == [True, True, True]
+    # refill slot 1 with source 5, sentinel-pad the rest
+    slots = jnp.asarray([1, 3, 3], jnp.int32)      # 3 == B: dropped
+    srcs = jnp.asarray([5, 0, 0], jnp.int32)
+    labels2, frontier2 = refill_rows(labels, frontier, slots, srcs,
+                                     G.INF)
+    ref_l, ref_f = multi_source_state(g.num_vertices, [1, 5, 3], G.INF)
+    assert np.array_equal(np.asarray(labels2), np.asarray(ref_l))
+    assert np.array_equal(np.asarray(frontier2), np.asarray(ref_f))
+    # sentinel rows untouched
+    assert np.array_equal(np.asarray(labels2[0]), np.asarray(labels[0]))
+
+
+def test_load_rows_restores_snapshot(rmat_g):
+    g = rmat_g
+    labels, frontier = multi_source_state(g.num_vertices, [1, 2], G.INF)
+    snap_l = np.asarray(labels[0])
+    snap_f = np.asarray(frontier[0])
+    labels2, frontier2 = refill_rows(
+        labels, frontier, jnp.asarray([0, 2], jnp.int32),
+        jnp.asarray([7, 0], jnp.int32), G.INF)
+    b = labels.shape[0]
+    labels3, frontier3 = load_rows(
+        labels2, frontier2, jnp.asarray([0, b], jnp.int32),
+        jnp.asarray(np.stack([snap_l, snap_l])),
+        jnp.asarray(np.stack([snap_f, snap_f])))
+    assert np.array_equal(np.asarray(labels3), np.asarray(labels))
+    assert np.array_equal(np.asarray(frontier3), np.asarray(frontier))
+
+
+def test_relax_return_active(rmat_g):
+    g = rmat_g
+    op, fill = QUERY_APPS["bfs"]
+    labels, frontier = multi_source_state(g.num_vertices, [1, 2], fill)
+    frontier = frontier.at[1].set(False)           # row 1 retired
+    out, st, active = relax(g, labels, labels, frontier, CFG, op,
+                            return_active=True)
+    assert active.tolist() == [True, False]
+    # empty union: early return still reports per-row liveness
+    empty = jnp.zeros_like(frontier)
+    out, st, active = relax(g, labels, labels, empty, CFG, op,
+                            return_active=True)
+    assert active.tolist() == [False, False]
+
+
+def test_step_batch_rejects_non_min_ops(rmat_g):
+    from repro.core import operators as ops
+    labels, frontier = multi_source_state(rmat_g.num_vertices, [1], G.INF)
+    with pytest.raises(ValueError, match="min-combine"):
+        step_batch(rmat_g, labels, frontier, CFG, ops.KCORE_DEC)
+
+
+# ---------------------------------------------------------------------------
+# mid-loop refill parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("app", ["bfs", "sssp"])
+@pytest.mark.parametrize("strategy", ["alb", "twc"])
+def test_served_queries_match_standalone(rmat_g, app, strategy):
+    """More queries than slots => slots are refilled mid-loop as
+    earlier queries retire; every result must still be bitwise equal to
+    its standalone single-source run."""
+    g = rmat_g
+    cfg = BalancerConfig(strategy=strategy, threshold=32)
+    svc = QueryService(num_slots=3, cfg=cfg)
+    svc.register_graph("g", g)
+    sources = _sources(g, 10, seed=1)
+    qids = [svc.submit("g", app, s) for s in sources]
+    svc.run()
+    for qid, s in zip(qids, sources):
+        q = svc.poll(qid)
+        assert q.status == DONE and not q.from_cache
+        ref = np.asarray(STANDALONE[app](g, s, cfg).labels)
+        assert np.array_equal(q.result, ref), f"{app} from {s}"
+    # refills actually happened: 10 queries through 3 slots
+    assert len(svc.admission_log) == 10
+    assert svc.stats.queries_served == 10
+
+
+def test_served_queries_match_standalone_spmd(rmat_g):
+    """Same parity through the fully-jit (relax_spmd) round mode."""
+    g = rmat_g
+    svc = QueryService(num_slots=2, cfg=CFG, mode="spmd")
+    svc.register_graph("g", g)
+    sources = _sources(g, 5, seed=2)
+    qids = [svc.submit("g", "bfs", s) for s in sources]
+    svc.run()
+    for qid, s in zip(qids, sources):
+        ref = np.asarray(bfs(g, s, CFG, mode="spmd").labels)
+        assert np.array_equal(svc.poll(qid).result, ref)
+
+
+def test_mixed_apps_one_service(rmat_g):
+    """bfs and sssp queries on the same graph run in separate slot
+    banks but one service; both keep parity."""
+    g = rmat_g
+    svc = QueryService(num_slots=2, cfg=CFG)
+    svc.register_graph("g", g)
+    sources = _sources(g, 4, seed=3)
+    q_bfs = [svc.submit("g", "bfs", s) for s in sources]
+    q_sssp = [svc.submit("g", "sssp", s) for s in sources]
+    svc.run()
+    for qid, s in zip(q_bfs, sources):
+        assert np.array_equal(svc.poll(qid).result,
+                              np.asarray(bfs(g, s, CFG).labels))
+    for qid, s in zip(q_sssp, sources):
+        assert np.array_equal(svc.poll(qid).result,
+                              np.asarray(sssp(g, s, CFG).labels))
+
+
+def test_zero_out_degree_source(rmat_g):
+    """A source with no outgoing edges converges in one round with only
+    itself labelled — same as standalone."""
+    g = rmat_g
+    deg = np.asarray(g.out_degrees())
+    sinks = np.flatnonzero(deg == 0)
+    if len(sinks) == 0:
+        pytest.skip("input has no zero-out-degree vertex")
+    s = int(sinks[0])
+    svc = QueryService(num_slots=2, cfg=CFG)
+    svc.register_graph("g", g)
+    qid = svc.submit("g", "bfs", s)
+    svc.run()
+    assert np.array_equal(svc.poll(qid).result,
+                          np.asarray(bfs(g, s, CFG).labels))
+
+
+# ---------------------------------------------------------------------------
+# fairness
+# ---------------------------------------------------------------------------
+
+def test_round_budget_prevents_starvation(path_star_g):
+    """B=1, one 80-round query ahead of three 1–2 round queries: with a
+    round budget the shorts finish in O(budget); without one they wait
+    for the giant's whole eccentricity.  The preempted giant still
+    matches its standalone run bitwise."""
+    g = path_star_g
+    short_srcs = [80, 82, 83]                      # hub + two leaves
+
+    def serve(budget):
+        svc = QueryService(num_slots=1, cfg=CFG, round_budget=budget)
+        svc.register_graph("p", g)
+        giant = svc.submit("p", "bfs", 0)
+        shorts = [svc.submit("p", "bfs", s) for s in short_srcs]
+        svc.run()
+        return svc, giant, shorts
+
+    svc, giant, shorts = serve(budget=None)
+    starved = [svc.poll(q).rounds_in_system for q in shorts]
+    assert min(starved) > 70                       # run-to-completion
+    assert svc.stats.preemptions == 0
+
+    svc, giant, shorts = serve(budget=5)
+    fair = [svc.poll(q).rounds_in_system for q in shorts]
+    assert max(fair) <= 15                         # O(budget), not O(D)
+    gq = svc.poll(giant)
+    assert gq.preemptions >= 1
+    assert np.array_equal(gq.result, np.asarray(bfs(g, 0, CFG).labels))
+    assert svc.stats.preemptions >= 1
+
+
+def test_preempt_resume_parity_multislot(path_star_g):
+    """Preemption under contention with B=2: every query (preempted or
+    not) keeps standalone parity."""
+    g = path_star_g
+    svc = QueryService(num_slots=2, cfg=CFG, round_budget=4)
+    svc.register_graph("p", g)
+    sources = [0, 10, 80, 82, 83, 84, 20]          # two deep, rest short
+    qids = [svc.submit("p", "bfs", s) for s in sources]
+    svc.run()
+    assert svc.stats.preemptions >= 1
+    for qid, s in zip(qids, sources):
+        assert np.array_equal(svc.poll(qid).result,
+                              np.asarray(bfs(g, s, CFG).labels))
+
+
+def test_scheduler_plan_is_pure_and_bounded():
+    """Unit: preempt only what idle slots can't absorb, fill free
+    slots FIFO in ascending order."""
+    sch = Scheduler(round_budget=3)
+    slots = [SlotView(0, qid=7, slot_rounds=5),
+             SlotView(1, qid=8, slot_rounds=9),
+             SlotView(2, qid=None, slot_rounds=0)]
+    # one pending query and one idle slot: no preemption needed
+    d = sch.plan(slots, pending=1)
+    assert d.preempt == () and d.admit == (2,)
+    # two pending, one idle: preempt ONE over-budget slot (longest
+    # residency first) and refill it plus the idle slot
+    d = sch.plan(slots, pending=2)
+    assert d.preempt == (1,)
+    assert d.admit == (1, 2)
+    # three pending, one idle: both over-budget slots yield
+    d = sch.plan(slots, pending=3)
+    assert d.preempt == (1, 0)                     # residency order
+    assert d.admit == (0, 1, 2)
+    d = sch.plan(slots, pending=0)
+    assert d.preempt == () and d.admit == ()
+    d = Scheduler(round_budget=None).plan(slots, pending=5)
+    assert d.preempt == () and d.admit == (2,)
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_and_invalidation_on_reregistration(rmat_g):
+    g1 = rmat_g
+    g2 = G.rmat(8, 8, seed=99)                     # different binding
+    s = _sources(g1, 1, seed=4)[0]
+    svc = QueryService(num_slots=2, cfg=CFG)
+    svc.register_graph("g", g1)
+
+    q1 = svc.submit("g", "bfs", s)
+    svc.run()
+    q2 = svc.submit("g", "bfs", s)                 # answered at submit
+    r1, r2 = svc.poll(q1), svc.poll(q2)
+    assert not r1.from_cache and r2.from_cache
+    assert r2.status == DONE and r2.rounds_in_system == 0
+    assert np.array_equal(r1.result, r2.result)
+    assert svc.cache.hits == 1
+
+    svc.register_graph("g", g2)                    # invalidates "g"
+    q3 = svc.submit("g", "bfs", s)
+    assert svc.poll(q3).status == QUEUED           # real work again
+    svc.run()
+    r3 = svc.poll(q3)
+    assert not r3.from_cache
+    assert np.array_equal(r3.result, np.asarray(bfs(g2, s, CFG).labels))
+
+
+def test_single_flight_coalescing(rmat_g):
+    """Identical submissions while the first is still in flight never
+    occupy a slot: one device computation serves all of them."""
+    g = rmat_g
+    s = _sources(g, 1, seed=8)[0]
+    svc = QueryService(num_slots=2, cfg=CFG)
+    svc.register_graph("g", g)
+    qids = [svc.submit("g", "bfs", s) for _ in range(4)]   # cold cache
+    other = svc.submit("g", "bfs", _sources(g, 2, seed=9)[1])
+    svc.run()
+    ref = np.asarray(bfs(g, s, CFG).labels)
+    primary, followers = svc.poll(qids[0]), [svc.poll(q) for q in qids[1:]]
+    assert not primary.from_cache
+    for f in followers:
+        assert f.from_cache and f.status == DONE
+        assert np.array_equal(f.result, ref)
+    assert np.array_equal(primary.result, ref)
+    # only the primary (and the unrelated query) were ever admitted
+    admitted = {qid for _, qid, _ in svc.admission_log}
+    assert admitted == {qids[0], other}
+    assert svc.stats.cache_hits == 3 and svc.stats.cache_misses == 2
+
+
+def test_reregistration_rejected_while_in_flight(path_star_g):
+    svc = QueryService(num_slots=1, cfg=CFG)
+    svc.register_graph("p", path_star_g)
+    svc.submit("p", "bfs", 0)
+    with pytest.raises(ValueError, match="in flight"):
+        svc.register_graph("p", path_star_g)
+
+
+def test_cache_keyed_by_strategy(rmat_g):
+    """Different BalancerConfig => different cache key (no cross-hit),
+    same bitwise labels either way."""
+    s = _sources(rmat_g, 1, seed=5)[0]
+    svc = QueryService(num_slots=2, cfg=CFG)
+    svc.register_graph("g", rmat_g)
+    q1 = svc.submit("g", "bfs", s)
+    svc.run()
+    other = BalancerConfig(strategy="twc")
+    assert svc.cache.get("g", "bfs", s, other) is None
+    assert svc.cache.get("g", "bfs", s, CFG) is not None
+
+
+def test_result_cache_lru_eviction():
+    c = ResultCache(capacity=2)
+    c.put("g", "bfs", 0, "a", np.zeros(1))
+    c.put("g", "bfs", 1, "a", np.ones(1))
+    assert c.get("g", "bfs", 0, "a") is not None   # 0 now most recent
+    c.put("g", "bfs", 2, "a", np.ones(1))          # evicts 1
+    assert c.get("g", "bfs", 1, "a") is None
+    assert c.get("g", "bfs", 0, "a") is not None
+    assert len(c) == 2
+    disabled = ResultCache(capacity=0)
+    disabled.put("g", "bfs", 0, "a", np.zeros(1))
+    assert disabled.get("g", "bfs", 0, "a") is None
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def test_deterministic_scheduler_order(path_star_g):
+    """Identical submissions => identical admission traces and
+    identical per-query results, run to run (including preemptions)."""
+    def serve():
+        svc = QueryService(num_slots=2, cfg=CFG, round_budget=4)
+        svc.register_graph("p", path_star_g)
+        qids = [svc.submit("p", "bfs", s)
+                for s in [0, 80, 10, 82, 83, 20]]
+        svc.run()
+        return (svc.admission_log,
+                [svc.poll(q).result for q in qids],
+                [svc.poll(q).rounds_in_system for q in qids])
+
+    log_a, res_a, lat_a = serve()
+    log_b, res_b, lat_b = serve()
+    assert log_a == log_b
+    assert lat_a == lat_b
+    for a, b in zip(res_a, res_b):
+        assert np.array_equal(a, b)
+
+
+def test_fifo_admission_order(rmat_g):
+    """Without preemption, queries are admitted in submission (qid)
+    order."""
+    svc = QueryService(num_slots=2, cfg=CFG)
+    svc.register_graph("g", rmat_g)
+    qids = [svc.submit("g", "bfs", s) for s in _sources(rmat_g, 6, 6)]
+    svc.run()
+    admitted = [qid for _, qid, _ in svc.admission_log]
+    assert admitted == sorted(admitted) == qids
+
+
+# ---------------------------------------------------------------------------
+# submit validation + stats
+# ---------------------------------------------------------------------------
+
+def test_submit_validation(rmat_g):
+    svc = QueryService(num_slots=1, cfg=CFG)
+    svc.register_graph("g", rmat_g)
+    with pytest.raises(ValueError, match="unknown graph"):
+        svc.submit("nope", "bfs", 0)
+    with pytest.raises(ValueError, match="unknown app"):
+        svc.submit("g", "pagerank", 0)
+    with pytest.raises(ValueError, match="out of range"):
+        svc.submit("g", "bfs", rmat_g.num_vertices)
+
+
+def test_service_stats_accounting(rmat_g):
+    svc = QueryService(num_slots=4, cfg=CFG)
+    svc.register_graph("g", rmat_g)
+    sources = _sources(rmat_g, 6, seed=7)
+    for s in sources:
+        svc.submit("g", "bfs", s)
+    st = svc.run()
+    svc.submit("g", "bfs", sources[0])             # one cache hit
+    assert st.queries_served == 7
+    assert st.cache_hits == 1 and st.cache_misses == 6
+    assert 0 < st.occupancy <= 1
+    assert st.latency_percentile(50) <= st.latency_percentile(95)
+    s = st.summary()
+    assert s["queries_served"] == 7
+    assert s["cache_hit_rate"] == pytest.approx(1 / 7, abs=1e-4)
