@@ -1,0 +1,108 @@
+"""Push vs pull vs adaptive traversal direction (DESIGN.md section 9).
+
+The ALB picks a load-balancing *strategy* per round from the fused
+host counts; the direction planner reuses the same counts to pick the
+traversal *direction* (Beamer-style): dense frontiers run as a pull
+over the cached reverse CSR, sparse frontiers as the ordinary push.
+This harness sweeps bfs/sssp over the paper's graph classes with
+``direction`` in {push, pull, adaptive} and reports wall clock, round
+counts, and the share of rounds adaptive ran as pulls.
+
+Rows: ``dir_<app>_<graph>_<direction>,us_per_run,rounds=N pull_share=S``.
+
+Run directly (also wired as the ``direction`` selector of
+benchmarks.run):
+
+    PYTHONPATH=src python -m benchmarks.fig_direction          # sweep
+    PYTHONPATH=src python -m benchmarks.fig_direction --smoke  # CI
+
+``--smoke`` shrinks the input and gates on STRUCTURAL invariants only
+(CI boxes are noisy timers — wall clock is reported, never asserted):
+
+1. parity — pull and adaptive labels are bitwise equal to push;
+2. trace — adaptive's recorded per-round direction equals
+   :func:`repro.core.balancer.resolve_direction` replayed over the
+   recorded per-round counts;
+3. rounds — adaptive's round count never exceeds push-only's.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.apps import bfs, sssp
+from repro.core.balancer import BalancerConfig, resolve_direction
+
+from .common import timed, emit
+
+DIRECTIONS = ["push", "pull", "adaptive"]
+
+
+def _inputs(smoke: bool) -> dict:
+    if smoke:
+        return {"rmat": G.rmat(9, 8, seed=1),
+                "road": G.road_grid(16, seed=1)}
+    return {"rmat": G.rmat(12, 16, seed=1),
+            "road": G.road_grid(64, seed=1)}
+
+
+def run(smoke: bool = False) -> int:
+    cfg = BalancerConfig(strategy="alb", threshold=64)
+    apps = {"bfs": bfs} if smoke else {"bfs": bfs, "sssp": sssp}
+    failures = 0
+    for gname, g in _inputs(smoke).items():
+        src = G.highest_out_degree_vertex(g)
+        v, e = g.num_vertices, g.num_edges
+        for app_name, driver in apps.items():
+            results = {}
+            for direction in DIRECTIONS:
+                out = driver(g, src, cfg, direction=direction,
+                             collect_stats=True)
+                secs = timed(lambda d=direction: driver(g, src, cfg,
+                                                        direction=d))
+                pulls = sum(st.direction == "pull" for st in out.stats)
+                share = pulls / max(len(out.stats), 1)
+                emit(f"dir_{app_name}_{gname}_{direction}", secs,
+                     f"rounds={out.rounds} pull_share={share:.2f}")
+                results[direction] = out
+            # ---- structural gates (deterministic; no wall clock) ----
+            push, ad = results["push"], results["adaptive"]
+            for direction in ("pull", "adaptive"):
+                if not np.array_equal(
+                        np.asarray(results[direction].labels),
+                        np.asarray(push.labels)):
+                    print(f"FAIL: {app_name}/{gname}: {direction} "
+                          f"labels != push labels", file=sys.stderr)
+                    failures += 1
+            acfg = BalancerConfig(strategy="alb", threshold=64,
+                                  direction="adaptive")
+            for i, st in enumerate(ad.stats):
+                want = resolve_direction(acfg, st.frontier_size,
+                                         st.frontier_edges, v, e)
+                if st.direction != want:
+                    print(f"FAIL: {app_name}/{gname} round {i}: ran "
+                          f"{st.direction}, threshold rule says {want}",
+                          file=sys.stderr)
+                    failures += 1
+            if ad.rounds > push.rounds:
+                print(f"FAIL: {app_name}/{gname}: adaptive took "
+                      f"{ad.rounds} rounds > push's {push.rounds}",
+                      file=sys.stderr)
+                failures += 1
+    return failures
+
+
+def main() -> int:
+    smoke = "--smoke" in sys.argv[1:]
+    failures = run(smoke=smoke)
+    if failures:
+        return 1
+    if smoke:
+        print("smoke OK: direction parity + adaptive trace + rounds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

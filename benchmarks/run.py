@@ -30,6 +30,10 @@ Selectors and what each script reproduces:
   with the LRU cache + single-flight coalescing, Poisson-arrival
   latency sweep, deterministic slot-packing comparison (DESIGN.md
   section 8); ``--smoke`` variant gates CI.
+* ``direction`` (fig_direction.py)      — push vs pull vs adaptive
+  traversal direction per round (DESIGN.md section 9): wall clock,
+  round counts, adaptive's pull share; ``--smoke`` gates parity and
+  the adaptive direction trace structurally (no timing gate).
 * ``roofline`` (roofline.py)            — kernel roofline estimates
   from dry-run artifacts (skipped when artifacts are absent).
 
@@ -44,7 +48,7 @@ import sys
 def main() -> None:
     which = set(sys.argv[1:]) or {"table2", "table2sim", "fig5", "fig6",
                                   "fig8", "fig9", "qps", "serve",
-                                  "roofline"}
+                                  "direction", "roofline"}
     print("name,us_per_call,derived")
     if "table2" in which:
         from . import table2_strategies
@@ -70,6 +74,12 @@ def main() -> None:
     if "serve" in which:
         from . import fig_serve
         fig_serve.run()
+    if "direction" in which:
+        from . import fig_direction
+        if fig_direction.run():
+            # structural gate failures (parity / adaptive trace) must
+            # fail the aggregate run too, not just the --smoke entry
+            sys.exit(1)
     if "roofline" in which:
         from . import roofline
         try:

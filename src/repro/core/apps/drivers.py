@@ -42,9 +42,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..graph import Graph, INF, reverse_graph
+from ..graph import Graph, INF
 from ..frontier import full_frontier, single_source, multi_source_state
-from ..balancer import BalancerConfig, RoundStats, relax, relax_spmd
+from ..balancer import (BalancerConfig, RoundStats, relax,
+                        relax_spmd_directed)
 from .. import operators as ops
 
 
@@ -60,22 +61,32 @@ class AppResult:
 
 
 def relax_round(g, values, labels, frontier, cfg, op,
-                collect_stats=False, mode="host"):
+                collect_stats=False, mode="host",
+                return_active=False):
     """One balancer round in the selected execution mode (``"host"`` |
     ``"spmd"``); always returns (labels, RoundStats|None) with
     host-side stats.  The single round primitive shared by every driver
-    loop here and by the serving engine (DESIGN.md section 8)."""
+    loop here and by the serving engine (DESIGN.md section 8).
+
+    Both modes honour ``cfg.direction`` (DESIGN.md section 9): the
+    host round resolves it inside :func:`repro.core.balancer.relax`,
+    the spmd round through
+    :func:`repro.core.balancer.relax_spmd_directed`.
+
+    ``return_active=True`` appends a host ``bool[B]`` per-row liveness
+    vector (``bool[1]`` un-batched) — in host mode it is sliced from
+    the fused count transfer the round already pays, so the driver
+    loops can converge without issuing a separate blocking
+    ``jnp.any(frontier)`` every round."""
     if mode == "host":
         return relax(g, values, labels, frontier, cfg, op,
-                     collect_stats=collect_stats)
+                     collect_stats=collect_stats,
+                     return_active=return_active)
     if mode != "spmd":
         raise ValueError(f"unknown mode {mode!r} (host|spmd)")
-    out = relax_spmd(g, values, labels, frontier, cfg, op,
-                     collect_stats=collect_stats)
-    if collect_stats:
-        labels, st = out
-        return labels, RoundStats.from_device(st)
-    return out, None
+    return relax_spmd_directed(g, values, labels, frontier, cfg, op,
+                               collect_stats=collect_stats,
+                               return_active=return_active)
 
 
 _round = relax_round                     # internal alias, kept short
@@ -116,14 +127,25 @@ QUERY_APPS = {
 def _loop(g: Graph, values_of, labels, frontier, cfg, op,
           max_rounds: int, collect_stats: bool,
           next_frontier, post_round=None, mode: str = "host"):
-    """Generic data-driven loop with explicit current/next worklists."""
+    """Generic data-driven loop with explicit current/next worklists.
+
+    Convergence is driven by the round's own ``return_active`` liveness
+    (in host mode a slice of the fused count transfer the round already
+    pays for) rather than a separate blocking ``jnp.any(frontier)``, so
+    a host-mode round costs exactly ONE device->host transfer; an empty
+    frontier is detected by the same probe, before any work launches.
+    """
     stats = [] if collect_stats else None
     t0 = time.perf_counter()
     rounds = 0
-    while rounds < max_rounds and bool(jnp.any(frontier)):
+    while rounds < max_rounds:
         old = labels
-        labels, st = _round(g, values_of(labels), labels, frontier, cfg,
-                            op, collect_stats, mode)
+        new, st, active = _round(g, values_of(labels), labels, frontier,
+                                 cfg, op, collect_stats, mode,
+                                 return_active=True)
+        if not bool(np.any(active)):
+            break                      # frontier empty: converged
+        labels = new
         if post_round is not None:
             labels = post_round(labels)
         frontier = next_frontier(old, labels, frontier)
@@ -136,10 +158,23 @@ def _loop(g: Graph, values_of, labels, frontier, cfg, op,
 
 # ---------------------------------------------------------------------------
 
+def _with_direction(cfg: BalancerConfig, direction) -> BalancerConfig:
+    """Per-call ``direction=`` override of the strategy config
+    (``push`` | ``pull`` | ``adaptive`` — DESIGN.md section 9); None
+    keeps ``cfg.direction``.  The replaced config hashes by value, so
+    overriding costs no extra jit traces."""
+    if direction is None:
+        return cfg
+    return dataclasses.replace(cfg, direction=direction)
+
+
 def sssp(g: Graph, source: int, cfg: BalancerConfig = BalancerConfig(),
          max_rounds: int = 10_000, collect_stats: bool = False,
-         mode: str = "host") -> AppResult:
-    """Bellman-Ford style data-driven SSSP (push relaxation)."""
+         mode: str = "host", direction: Optional[str] = None) -> AppResult:
+    """Bellman-Ford style data-driven SSSP (min-combine relaxation;
+    ``direction`` selects push/pull/adaptive rounds per DESIGN.md
+    section 9)."""
+    cfg = _with_direction(cfg, direction)
     dist = jnp.full((g.num_vertices,), INF, dtype=jnp.int32).at[source].set(0)
     frontier = single_source(g.num_vertices, source)
     labels, rounds, secs, stats = _loop(
@@ -151,8 +186,11 @@ def sssp(g: Graph, source: int, cfg: BalancerConfig = BalancerConfig(),
 
 def bfs(g: Graph, source: int, cfg: BalancerConfig = BalancerConfig(),
         max_rounds: int = 10_000, collect_stats: bool = False,
-        mode: str = "host") -> AppResult:
-    """Data-driven BFS: hop-count labels via min-combine push rounds."""
+        mode: str = "host", direction: Optional[str] = None) -> AppResult:
+    """Data-driven BFS: hop-count labels via min-combine rounds
+    (``direction`` selects push/pull/adaptive per DESIGN.md
+    section 9)."""
+    cfg = _with_direction(cfg, direction)
     level = jnp.full((g.num_vertices,), INF, dtype=jnp.int32).at[source].set(0)
     frontier = single_source(g.num_vertices, source)
     labels, rounds, secs, stats = _loop(
@@ -180,10 +218,15 @@ def _batch_loop(g: Graph, labels, frontier, cfg, op, max_rounds,
 
 def sssp_batch(g: Graph, sources, cfg: BalancerConfig = BalancerConfig(),
                max_rounds: int = 10_000, collect_stats: bool = False,
-               mode: str = "host") -> AppResult:
+               mode: str = "host",
+               direction: Optional[str] = None) -> AppResult:
     """Batched multi-source SSSP: ``labels[b]`` equals (bitwise) the
     single-source :func:`sssp` labels for ``sources[b]``, computed by
-    one union-frontier round loop for all B sources."""
+    one union-frontier round loop for all B sources.  ``direction``
+    selects push/pull/adaptive rounds (DESIGN.md section 9); the
+    adaptive choice is made on the union frontier for the whole
+    batch."""
+    cfg = _with_direction(cfg, direction)
     labels, frontier = multi_source_state(g.num_vertices, sources, INF)
     return _batch_loop(g, labels, frontier, cfg, ops.SSSP_RELAX,
                        max_rounds, collect_stats, mode)
@@ -191,8 +234,10 @@ def sssp_batch(g: Graph, sources, cfg: BalancerConfig = BalancerConfig(),
 
 def bfs_batch(g: Graph, sources, cfg: BalancerConfig = BalancerConfig(),
               max_rounds: int = 10_000, collect_stats: bool = False,
-              mode: str = "host") -> AppResult:
+              mode: str = "host",
+              direction: Optional[str] = None) -> AppResult:
     """Batched multi-source BFS (see :func:`sssp_batch`)."""
+    cfg = _with_direction(cfg, direction)
     labels, frontier = multi_source_state(g.num_vertices, sources, INF)
     return _batch_loop(g, labels, frontier, cfg, ops.BFS_HOP,
                        max_rounds, collect_stats, mode)
@@ -200,12 +245,16 @@ def bfs_batch(g: Graph, sources, cfg: BalancerConfig = BalancerConfig(),
 
 def cc(g: Graph, cfg: BalancerConfig = BalancerConfig(),
        max_rounds: int = 10_000, collect_stats: bool = False,
-       mode: str = "host") -> AppResult:
+       mode: str = "host", direction: Optional[str] = None) -> AppResult:
     """Connected components by min-label propagation.
 
     Computes weakly-connected components when ``g`` is symmetrized
     (the benchmark harness symmetrizes, matching standard practice).
+    ``direction`` selects push/pull/adaptive rounds (DESIGN.md
+    section 9) — on the dense early frontiers of cc, adaptive rounds
+    run as pulls.
     """
+    cfg = _with_direction(cfg, direction)
     comp = jnp.arange(g.num_vertices, dtype=jnp.int32)
     frontier = full_frontier(g.num_vertices)
     labels, rounds, secs, stats = _loop(
@@ -231,9 +280,13 @@ def kcore(g: Graph, k: int, cfg: BalancerConfig = BalancerConfig(),
     stats = [] if collect_stats else None
     t0 = time.perf_counter()
     rounds = 0
-    while rounds < max_rounds and bool(jnp.any(frontier)):
-        deg, st = _round(g, deg, deg, frontier, cfg, ops.KCORE_DEC,
-                         collect_stats, mode)
+    while rounds < max_rounds:
+        new_deg, st, active = _round(g, deg, deg, frontier, cfg,
+                                     ops.KCORE_DEC, collect_stats, mode,
+                                     return_active=True)
+        if not bool(np.any(active)):
+            break                      # no vertex died last round
+        deg = new_deg
         newly_dead = (deg < k) & ~dead_acc
         dead_acc = dead_acc | newly_dead
         frontier = newly_dead
@@ -249,12 +302,18 @@ def pagerank(g: Graph, damping: float = 0.85, tol: float = 1e-6,
              cfg: BalancerConfig = BalancerConfig(),
              max_rounds: int = 1000, collect_stats: bool = False,
              rg: Graph | None = None, mode: str = "host") -> AppResult:
-    """Pull-style topology-driven PageRank (residual tolerance)."""
+    """Pull-style topology-driven PageRank (residual tolerance).
+
+    Dangling vertices (out-degree 0) redistribute their rank mass
+    uniformly each round, so ``sum(rank) == 1`` is preserved on graphs
+    with sinks — without this, sinks leak mass every round, ranks
+    deflate, and ``tol`` is checked against shrunken values."""
     n = g.num_vertices
     if rg is None:
-        rg = reverse_graph(g)              # pull traverses in-edges
+        rg = g.reverse()                   # pull traverses in-edges
     outdeg = g.out_degrees().astype(jnp.float32)
     inv_out = jnp.where(outdeg > 0, 1.0 / jnp.maximum(outdeg, 1.0), 0.0)
+    sink = outdeg == 0
     rank = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
     frontier = full_frontier(n)
     stats = [] if collect_stats else None
@@ -262,11 +321,12 @@ def pagerank(g: Graph, damping: float = 0.85, tol: float = 1e-6,
     rounds = 0
     while rounds < max_rounds:
         contrib = rank * inv_out
+        dangling = jnp.sum(jnp.where(sink, rank, 0.0))
         acc = jnp.zeros((n,), jnp.float32)
         # pull: gather contrib at in-neighbours, scatter-add at anchor
         acc, st = _round(rg, contrib, acc, frontier, cfg, ops.PR_PULL,
                          collect_stats, mode)
-        new_rank = (1.0 - damping) / n + damping * acc
+        new_rank = (1.0 - damping) / n + damping * (acc + dangling / n)
         delta = float(jnp.max(jnp.abs(new_rank - rank)))
         rank = new_rank
         if collect_stats and st is not None:

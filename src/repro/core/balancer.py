@@ -52,6 +52,18 @@ anchor vertex, and candidates of inactive (vertex, query) pairs carry
 the combiner's identity so skipping them is exact.  One kernel launch
 therefore serves B queries instead of B launches serving one.
 
+Traversal direction (DESIGN.md section 9): the same fused host counts
+that drive the strategy's inspector also drive a Beamer-style
+*direction* choice — ``BalancerConfig.direction`` is ``push`` (as the
+operator is written), ``pull`` (the operator's pull twin over the
+cached reverse CSR: gather value and activity at each in-edge's
+source, combine at the anchor), or ``adaptive``
+(:func:`resolve_direction` per round, no extra device sync).  Pull
+enumeration is frontier-independent — every vertex with in-edges,
+binned by in-degree — so it is planned once per graph and cached
+(:func:`_pull_enum`).  For push min-combine operators the pull round
+is bitwise equal to the push round.
+
 The continuous-batching service (DESIGN.md section 8) leans on one
 further property of the batched round: rows are *independent*.  A row
 whose frontier is empty contributes no live candidates anywhere, so
@@ -75,7 +87,7 @@ import numpy as np
 from .graph import Graph
 from .frontier import (next_bucket, compact, count, dirty_mask,
                        union_frontier)
-from .operators import Operator
+from .operators import Operator, as_pull
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,10 +105,14 @@ class BalancerConfig:
     num_tiles: int = 64              # "thread blocks" for stats/kernels
     use_pallas: bool = False         # route hot loops through Pallas
     lb_tile_edges: int = 2048        # edge tile per grid step (LB kernel)
+    direction: str = "push"          # push | pull | adaptive (sec. 9)
+    pull_alpha: int = 14             # adaptive: pull when m_f*alpha >= E
+    pull_beta: int = 24              # adaptive: pull when n_f*beta >= V
 
     def __post_init__(self):
         assert self.strategy in ("vertex", "twc", "edge_lb", "alb")
         assert self.distribution in ("cyclic", "blocked")
+        assert self.direction in ("push", "pull", "adaptive")
 
     @property
     def executor(self) -> str:
@@ -147,9 +163,15 @@ class RoundPlan:
     frontier edge goes through LB — the non-adaptive Gunrock analog) or
     ``"huge"`` (only vertices with ``deg >= threshold`` — the paper's
     inspector-guarded adaptive path).
+
+    ``direction``: the traversal-direction policy of the strategy
+    instance (``push`` | ``pull`` | ``adaptive`` — DESIGN.md
+    section 9); ``adaptive`` is resolved per round by
+    :func:`resolve_direction` from the fused host counts.
     """
     bins: tuple
     lb: str
+    direction: str = "push"
 
     def lb_mask(self, deg, valid, cfg: BalancerConfig):
         """Which frontier vertices the edge-balanced path serves."""
@@ -166,21 +188,45 @@ def make_plan(cfg: BalancerConfig) -> RoundPlan:
     same plan)."""
     s, sw, mw, lw, th = (cfg.strategy, cfg.small_width, cfg.medium_width,
                          cfg.large_width, cfg.threshold)
+    d = cfg.direction
     if s == "vertex":
         # one unit of work per vertex, inner width = whole adjacency
-        return RoundPlan((BinSpec("vertex", lw, 0),), "none")
+        return RoundPlan((BinSpec("vertex", lw, 0),), "none", d)
     if s == "twc":
         return RoundPlan((BinSpec("small", sw, 0, sw, sw),
                           BinSpec("medium", mw, sw, mw, mw),
                           # CTA bin: UNBOUNDED — the paper's culprit
-                          BinSpec("large", lw, mw)), "none")
+                          BinSpec("large", lw, mw)), "none", d)
     if s == "edge_lb":
-        return RoundPlan((), "all")           # everything, non-adaptive
+        return RoundPlan((), "all", d)        # everything, non-adaptive
     # alb: bins must be DISJOINT with the huge bin or add-combine
     # operators double-count (min-combine would mask the bug)
     return RoundPlan((BinSpec("small", sw, 0, min(sw, th - 1), sw),
                       BinSpec("medium", mw, sw, min(mw, th - 1), mw),
-                      BinSpec("large", lw, mw, th - 1, th)), "huge")
+                      BinSpec("large", lw, mw, th - 1, th)), "huge", d)
+
+
+def resolve_direction(cfg: BalancerConfig, frontier_size: int,
+                      frontier_edges: int, num_vertices: int,
+                      num_edges: int) -> str:
+    """Per-round traversal-direction choice (DESIGN.md section 9).
+
+    ``push`` / ``pull`` configs are fixed; ``adaptive`` applies
+    Beamer-style direction-optimization thresholds to the union
+    frontier: the round runs as a pull (gather over in-edges of the
+    cached reverse CSR) when the frontier is dense by vertices
+    (``frontier_size * pull_beta >= V``) or by out-edges
+    (``frontier_edges * pull_alpha >= E``), and as a push otherwise.
+    Both inputs ride the fused host-count transfer every round already
+    pays (``_host_round_counts``), so adaptivity adds no device sync.
+    """
+    if cfg.direction != "adaptive":
+        return cfg.direction
+    if frontier_size * cfg.pull_beta >= num_vertices:
+        return "pull"
+    if frontier_edges * cfg.pull_alpha >= num_edges:
+        return "pull"
+    return "push"
 
 
 # ---------------------------------------------------------------------------
@@ -254,6 +300,11 @@ class RoundStats(NamedTuple):
     bytes_synced: int = 0    # ... in bytes (0 outside the distributed
     #                          runtime; see gluon.py / DESIGN.md section 6)
     frontier_per_query: Optional[np.ndarray] = None  # int64[B]
+    direction: str = "push"  # traversal direction this round ran as
+    #                          (DESIGN.md section 9)
+    frontier_edges: int = 0  # union-frontier out-edge total (the push-
+    #                          side m_f the direction choice is made on;
+    #                          0 where the round had no host counts)
 
     @classmethod
     def from_device(cls, s: "RoundStatsDev") -> "RoundStats":
@@ -356,12 +407,15 @@ def _bin_pass_impl(g: Graph, values, labels, fmask, vidx, deg, row_start,
     dst = g.col_idx[graph_e]
     w = g.edge_w[graph_e]
     vsafe = jnp.where(vidx < v, vidx, 0)
-    live = fmask[:, vsafe][:, :, None]                             # [B,N,1]
     if op.direction == "push":
+        live = fmask[:, vsafe][:, :, None]                         # [B,N,1]
         val = values[:, vsafe][:, :, None]                         # [B,N,1]
         cand = op.msg(val, w[None])
         new = _apply(labels, dst, cand, emask, live, op.combine)
-    else:  # pull: value gathered at the neighbour, scattered at anchor
+    else:  # pull: value AND activity gathered at the in-neighbour
+        # (``dst`` in the reverse CSR is the original edge's source),
+        # candidate scattered at the anchor — DESIGN.md section 9
+        live = fmask[:, dst]                                       # [B,N,W]
         val = values[:, dst]                                       # [B,N,W]
         cand = op.msg(val, w[None])
         anchor = jnp.broadcast_to(vidx[:, None], emask.shape)
@@ -411,11 +465,14 @@ def _lb_pass_impl(g: Graph, values, labels, fmask, hidx, hdeg, hrow_start,
     dst = g.col_idx[graph_e]
     w = g.edge_w[graph_e]
     ssafe = jnp.where(src < v, src, 0)
-    live = fmask[:, ssafe]                             # [B, n_enum]
     if op.direction == "push":
+        live = fmask[:, ssafe]                         # [B, n_enum]
         cand = op.msg(values[:, ssafe], w[None])
         return _apply(labels, dst, cand, emask, live, op.combine)
     else:
+        # pull: liveness comes from the in-neighbour (``dst`` of the
+        # reverse CSR), the anchor ``src`` receives the candidate
+        live = fmask[:, dst]                           # [B, n_enum]
         cand = op.msg(values[:, dst], w[None])
         return _apply(labels, src, cand, emask, live, op.combine)
 
@@ -504,6 +561,142 @@ def _host_round_counts(g: Graph, frontier: jax.Array, cfg: BalancerConfig):
         [head, jnp.sum(frontier.astype(jnp.int32), axis=1)]), union
 
 
+def _counts_frontier_edges(cnt: np.ndarray, plan: RoundPlan) -> int:
+    """Union-frontier out-edge total, reassembled from the fused host
+    count layout of :func:`_host_round_counts` (per-bin edge sums plus
+    the LB-path sum) — the ``m_f`` input of :func:`resolve_direction`.
+    The plan's bins and LB mask partition the frontier's edges for
+    every strategy, so the sum is exact."""
+    k, total = 1, 0
+    for _ in plan.bins:
+        total += int(cnt[k + 2])
+        k += 3
+    if plan.lb != "none":
+        total += int(cnt[k + 1])
+    return total
+
+
+class _PullEnum(NamedTuple):
+    """Frontier-independent pull-side enumeration of one (graph, plan):
+    the reverse CSR plus pre-gathered bin/LB member arrays over every
+    vertex with incoming edges, binned by IN-degree (DESIGN.md
+    section 9).  A pull round gathers at each in-edge's source, so its
+    work set never depends on the frontier — it is built once per
+    graph x plan (one blocking transfer, amortized) and cached on the
+    Graph object, keeping pull rounds free of per-round device syncs
+    and per-round gather dispatches."""
+    rg: Graph
+    emask: jax.Array     # bool[V]: in-degree > 0 (the enumeration set)
+    bins: tuple          # per plan bin: None | (max_d, edge_sum,
+    #                      bvidx, bdeg, brow) at bucketed capacity
+    lb: Optional[tuple]  # None | (total, hvidx, hdeg, hrow)
+
+
+def _pull_plan_key(cfg: BalancerConfig) -> tuple:
+    """The cfg fields a pull enumeration depends on (the plan's bins +
+    LB mask); direction/backend/deal fields deliberately excluded so
+    push/adaptive/pallas variants share one cache entry."""
+    return (cfg.strategy, cfg.threshold, cfg.small_width,
+            cfg.medium_width, cfg.large_width)
+
+
+def _assemble_bins(cnt: np.ndarray, plan: RoundPlan,
+                   cfg: BalancerConfig, fidx, deg, row_start, valid,
+                   fcap: int, v: int):
+    """Gather the bin / LB member arrays named by the fused host count
+    vector (the :func:`_host_round_counts` layout: per-bin triplets,
+    then the inspector pair).  Returns ``(bins, lb)`` in the
+    :func:`_run_plan_host` format — the ONE assembly shared by the push
+    round (per round, over the frontier) and the cached pull
+    enumeration (once per graph), so the count layout can never
+    desynchronize between them."""
+    bins, k = [], 1
+    for spec in plan.bins:
+        n, max_d, edge_sum = int(cnt[k]), int(cnt[k + 1]), int(cnt[k + 2])
+        k += 3
+        if n == 0:
+            bins.append(None)
+            continue
+        mask = spec.mask(deg, valid)
+        bvidx, bdeg, brow = _gather_bin(mask, fidx, deg, row_start,
+                                        next_bucket(n), fcap, v)
+        bins.append((max_d, edge_sum, bvidx, bdeg, brow))
+    lb = None
+    if plan.lb != "none":
+        # ---- inspector (Section 4.1): is the huge bin non-empty? ----
+        n_huge, total = int(cnt[k]), int(cnt[k + 1])
+        if n_huge > 0 and total > 0:
+            hmask = plan.lb_mask(deg, valid, cfg)
+            hvidx, hdeg, hrow = _gather_bin(hmask, fidx, deg, row_start,
+                                            next_bucket(n_huge), fcap, v)
+            lb = (total, hvidx, hdeg, hrow)
+    return tuple(bins), lb
+
+
+def _build_pull_enum(g: Graph, cfg: BalancerConfig) -> _PullEnum:
+    """Materialize the pull-side enumeration (see :class:`_PullEnum`)."""
+    rg = g.reverse()
+    v = rg.num_vertices
+    emask = (rg.row_ptr[1:] - rg.row_ptr[:-1]) > 0
+    cnt, union = _host_round_counts(rg, emask, cfg)
+    cnt = np.asarray(cnt)
+    fcap = next_bucket(int(cnt[0]))
+    fidx = compact(union, fcap)
+    deg, row_start, valid = _frontier_meta(rg, fidx)
+    bins, lb = _assemble_bins(cnt, make_plan(cfg), cfg, fidx, deg,
+                              row_start, valid, fcap, v)
+    return _PullEnum(rg, emask, bins, lb)
+
+
+def _pull_enum(g: Graph, cfg: BalancerConfig) -> _PullEnum:
+    """Cached :func:`_build_pull_enum` (on the Graph object, keyed by
+    the plan-relevant cfg fields)."""
+    cache = g.__dict__.get("_pull_enum_cache")
+    if cache is None:
+        cache = {}
+        object.__setattr__(g, "_pull_enum_cache", cache)
+    key = _pull_plan_key(cfg)
+    if key not in cache:
+        cache[key] = _build_pull_enum(g, cfg)
+    return cache[key]
+
+
+def _run_plan_host(gr: Graph, values, labels, fmask, plan: RoundPlan,
+                   cfg: BalancerConfig, op: Operator, ex: ExecutorPair,
+                   bins, lb, stats) -> jax.Array:
+    """Drive one host round's executor launches from pre-gathered
+    bin/LB member arrays — shared by the push path (members gathered
+    from this round's frontier) and the pull path (members cached per
+    graph by :func:`_pull_enum`).  ``stats`` is the mutable RoundStats
+    dict or None."""
+    v = labels.shape[-1]
+    for spec, entry in zip(plan.bins, bins):
+        if entry is None:
+            continue
+        max_d, edge_sum, bvidx, bdeg, brow = entry
+        passes = max(1, -(-max_d // spec.width))
+        for c in range(passes):
+            labels = ex.bin_host(gr, values, labels, fmask, bvidx,
+                                 bdeg, brow, spec.width, op, c)
+        if stats is not None:
+            stats["edges_twc"] += edge_sum
+            stats["tile_loads_twc"] += np.asarray(
+                _tile_loads(bdeg, bvidx < v, cfg.num_tiles))
+    if lb is not None:
+        total, hvidx, hdeg, hrow = lb
+        ecap = next_bucket(total, minimum=cfg.lb_tile_edges)
+        labels = ex.lb_host(gr, values, labels, fmask, hvidx, hdeg,
+                            hrow, jnp.int32(total), ecap, op,
+                            cfg.distribution, cfg.num_tiles,
+                            cfg.lb_tile_edges)
+        if stats is not None:
+            stats["edges_lb"] = total
+            stats["lb_invoked"] = True
+            stats["tile_loads_lb"] = np.asarray(
+                _lb_tile_loads(total, cfg.num_tiles), dtype=np.int64)
+    return labels
+
+
 def relax(g: Graph, values: jax.Array, labels: jax.Array,
           frontier: jax.Array, cfg: BalancerConfig, op: Operator,
           collect_stats: bool = False, return_active: bool = False):
@@ -520,6 +713,16 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
     per-query activity from the ``[B, V]`` mask.  The returned labels
     keep the batch axis.
 
+    Traversal direction (DESIGN.md section 9): with
+    ``cfg.direction="pull"`` (or ``"adaptive"`` resolving to pull for
+    this round — :func:`resolve_direction` over the same fused host
+    counts, no extra sync) the round runs the operator's pull twin over
+    the cached reverse CSR: enumeration covers every vertex with
+    incoming edges (binned by in-degree, cached per graph), the
+    executors gather value AND activity at each in-edge's source and
+    combine at the anchor.  Only push ``min``-combine operators may be
+    flipped; the result is bitwise equal to the push round's.
+
     ``return_active=True`` appends a host ``bool[B]`` (``bool[1]`` for
     the un-batched form) marking which rows entered the round with a
     non-empty frontier — per-slot liveness instrumentation for round
@@ -533,6 +736,9 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
                                     frontier[None])
     b, v = labels.shape
     plan = make_plan(cfg)
+    # validate direction x operator up front (even when adaptive ends
+    # up resolving to push every round, a bad pairing is a config bug)
+    pull_op = as_pull(op) if cfg.direction != "push" else None
     cnt, union = _host_round_counts(g, frontier, cfg)
     cnt = np.asarray(cnt)
     nf = int(cnt[0])                                   # union size
@@ -540,57 +746,32 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
     if nf == 0:
         out = ((labels if batched else labels[0]), None)
         return out + (active,) if return_active else out
-    fcap = next_bucket(nf)
-    fidx = compact(union, fcap)
-    deg, row_start, valid = _frontier_meta(g, fidx)
+    m_f = _counts_frontier_edges(cnt, plan)
+    direction = resolve_direction(cfg, nf, m_f, v, g.num_edges)
 
     ex = get_executor(cfg.executor)
     stats = dict(frontier_size=nf, edges_twc=0, edges_lb=0,
                  lb_invoked=False,
                  tile_loads_twc=np.zeros(cfg.num_tiles, np.int64),
                  tile_loads_lb=np.zeros(cfg.num_tiles, np.int64),
-                 frontier_per_query=cnt[-b:].astype(np.int64))
+                 frontier_per_query=cnt[-b:].astype(np.int64),
+                 direction=direction,
+                 frontier_edges=m_f) if collect_stats else None
 
-    def gather_bin(mask, cap):
-        return _gather_bin(mask, fidx, deg, row_start, cap, fcap, v)
-
-    k = 1
-    for spec in plan.bins:
-        n, max_d, edge_sum = int(cnt[k]), int(cnt[k + 1]), int(cnt[k + 2])
-        k += 3
-        if n == 0:
-            continue
-        mask = spec.mask(deg, valid)
-        bvidx, bdeg, brow = gather_bin(mask, next_bucket(n))
-        passes = max(1, -(-max_d // spec.width))
-        for c in range(passes):
-            labels = ex.bin_host(g, values, labels, frontier, bvidx,
-                                 bdeg, brow, spec.width, op, c)
-        if collect_stats:
-            stats["edges_twc"] += edge_sum
-            stats["tile_loads_twc"] += np.asarray(
-                _tile_loads(bdeg, bvidx < v, cfg.num_tiles))
-
-    if plan.lb != "none":
-        # ---- inspector (Section 4.1): is the huge bin non-empty? ----
-        n_huge, total = int(cnt[k]), int(cnt[k + 1])
-        if n_huge > 0:
-            hmask = plan.lb_mask(deg, valid, cfg)
-            hvidx, hdeg, hrow = gather_bin(hmask, next_bucket(n_huge))
-            if total > 0:
-                ecap = next_bucket(total, minimum=cfg.lb_tile_edges)
-                labels = ex.lb_host(g, values, labels, frontier, hvidx,
-                                    hdeg, hrow, jnp.int32(total), ecap,
-                                    op, cfg.distribution, cfg.num_tiles,
-                                    cfg.lb_tile_edges)
-                if collect_stats:
-                    stats["edges_lb"] = total
-                    stats["lb_invoked"] = True
-                    stats["tile_loads_lb"] = np.asarray(
-                        _lb_tile_loads(total, cfg.num_tiles),
-                        dtype=np.int64)
+    if direction == "pull":
+        pe = _pull_enum(g, cfg)
+        labels = _run_plan_host(pe.rg, values, labels, frontier, plan,
+                                cfg, pull_op, ex, pe.bins, pe.lb, stats)
+    else:
+        fcap = next_bucket(nf)
+        fidx = compact(union, fcap)
+        deg, row_start, valid = _frontier_meta(g, fidx)
+        bins, lb = _assemble_bins(cnt, plan, cfg, fidx, deg, row_start,
+                                  valid, fcap, v)
+        labels = _run_plan_host(g, values, labels, frontier, plan, cfg,
+                                op, ex, bins, lb, stats)
     labels = labels if batched else labels[0]
-    out = (labels, RoundStats(**stats) if collect_stats else None)
+    out = (labels, RoundStats(**stats) if stats is not None else None)
     return out + (active,) if return_active else out
 
 
@@ -602,7 +783,8 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
                                    "return_dirty"))
 def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
                frontier: jax.Array, cfg: BalancerConfig, op: Operator,
-               collect_stats: bool = False, return_dirty: bool = False):
+               collect_stats: bool = False, return_dirty: bool = False,
+               emask: Optional[jax.Array] = None):
     """Static-shape ALB round: capacities fixed at V/E, LB path guarded
     by ``lax.cond``, unbounded bins driven by ``lax.while_loop`` — the
     SPMD realization of the inspector-executor split.  Runs the same
@@ -625,6 +807,15 @@ def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
     the ``lax.while_loop`` chunk driver, and the ``lax.cond`` inspector
     all run once on the union frontier for the whole batch; ``dirty``
     and the returned labels keep the batch axis.
+
+    ``emask`` (DESIGN.md section 9) decouples the *enumeration* set
+    from the frontier: a pull round passes the reverse CSR as ``g``,
+    the pull twin of its operator, and ``emask`` = the ``bool[V]``
+    in-degree mask — vertices are enumerated from ``emask`` while the
+    executors still gather per-query activity from ``frontier``.
+    ``None`` (the default, and every push round) enumerates the union
+    frontier as before.  :func:`relax_spmd_directed` wraps this with
+    the host-side direction resolution.
     """
     batched = labels.ndim == 2
     if not batched:
@@ -633,7 +824,7 @@ def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
     labels_in = labels
     v = labels.shape[-1]
     union = union_frontier(frontier)
-    fidx = compact(union, v)
+    fidx = compact(union if emask is None else emask, v)
     deg, row_start, valid = _frontier_meta(g, fidx)
 
     ex = get_executor(cfg.executor)
@@ -713,3 +904,63 @@ def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
         dirty = dirty_mask(labels_in, labels)
         outs += (dirty if batched else dirty[0],)
     return outs[0] if len(outs) == 1 else outs
+
+
+def relax_spmd_directed(g: Graph, values: jax.Array, labels: jax.Array,
+                        frontier: jax.Array, cfg: BalancerConfig,
+                        op: Operator, collect_stats: bool = False,
+                        return_active: bool = False):
+    """Direction-aware wrapper around :func:`relax_spmd` (DESIGN.md
+    section 9): resolves ``cfg.direction`` on the host per round and
+    dispatches the fully-jit round accordingly — the push form on the
+    graph as-is, or the pull form (pull twin of ``op``, reverse CSR,
+    in-degree ``emask``).  This is the round primitive behind
+    ``mode="spmd"`` in the app drivers.
+
+    Returns ``(labels, RoundStats|None)`` — host stats with
+    ``direction`` (and, where known, the push-side ``frontier_edges``)
+    filled in — extended by a host ``bool[B]`` liveness vector when
+    ``return_active=True``.  An ``adaptive`` config costs one fused
+    host-count transfer per round (the same vector the host round
+    reads; it doubles as the liveness source); fixed directions
+    transfer only the per-row liveness, and only when asked for.
+    """
+    batched = labels.ndim == 2
+    f2 = frontier if batched else frontier[None]
+    b = f2.shape[0]
+    pull_op = as_pull(op) if cfg.direction != "push" else None
+    active = None
+    m_f = None
+    direction = cfg.direction
+    if cfg.direction == "adaptive":
+        cnt, _ = _host_round_counts(g, f2, cfg)
+        cnt = np.asarray(cnt)
+        active = cnt[-b:] > 0
+        m_f = _counts_frontier_edges(cnt, make_plan(cfg))
+        direction = resolve_direction(cfg, int(cnt[0]), m_f,
+                                      labels.shape[-1], g.num_edges)
+    elif return_active:
+        active = np.atleast_1d(np.asarray(
+            jax.device_get(jnp.any(f2, axis=-1))))
+    if active is not None and not active.any():
+        # empty frontier: skip the full static-capacity round entirely
+        # (mirrors the host round's nf == 0 early return)
+        result = (labels, None)
+        return result + (active,) if return_active else result
+    if direction == "pull":
+        pe = _pull_enum(g, cfg)
+        out = relax_spmd(pe.rg, values, labels, frontier, cfg, pull_op,
+                         collect_stats=collect_stats, emask=pe.emask)
+    else:
+        out = relax_spmd(g, values, labels, frontier, cfg, op,
+                         collect_stats=collect_stats)
+    if collect_stats:
+        labels_out, st_dev = out
+        st = RoundStats.from_device(st_dev)
+        fe = m_f if m_f is not None else (
+            st.edges_twc + st.edges_lb if direction == "push" else 0)
+        st = st._replace(direction=direction, frontier_edges=fe)
+    else:
+        labels_out, st = out, None
+    result = (labels_out, st)
+    return result + (active,) if return_active else result

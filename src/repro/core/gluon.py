@@ -141,7 +141,7 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
                          collect_stats: bool = False,
                          values_of=lambda l: l,
                          next_frontier=lambda old, new, f: new < old,
-                         post_sync=None):
+                         post_sync=None, global_of=None):
     """One BSP round over owned state: local ALB round, then Gluon's
     reduce-to-master -> broadcast-to-mirrors pair over the padded mirror
     lists.
@@ -164,6 +164,14 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
     ``shard_map`` so frontier and value derivation stay device-local —
     only a scalar activity count (and a residual, for convergence-driven
     drivers) crosses to the host each round.
+
+    ``global_of`` (optional): ``(labels, owned_mask) -> scalar``
+    evaluated on each device over its owned master range — the one
+    slice of pre-round state guaranteed globally correct — and
+    ``psum``'d across devices; the global scalar is then passed as a
+    third argument to ``post_sync(labels, acc, glob)``.  PageRank uses
+    it for the dangling-mass sum (no extra host traffic: the reduction
+    rides the round's existing collectives).
     """
     ndev = meta.num_devices
     v = meta.num_vertices
@@ -219,7 +227,13 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
             else:
                 acc = acc.at[:, in_idx].add(recv, mode="drop")
 
-        final = post_sync(labels, acc)
+        if global_of is not None:
+            ovids = jnp.arange(v, dtype=jnp.int32)
+            omask = (ovids >= lo) & (ovids < hi)
+            glob = jax.lax.psum(global_of(labels, omask), "dev")
+            final = post_sync(labels, acc, glob)
+        else:
+            final = post_sync(labels, acc)
 
         # ---- broadcast-to-mirrors: masters push the reduced values
         # back along the reverse ring; mirrors overwrite their copies.
@@ -296,6 +310,17 @@ def stats_per_device(st: RoundStatsDev) -> list[RoundStats]:
         jax.tree_util.tree_map(lambda x: x[d], st)) for d in range(ndev)]
 
 
+def _require_push_direction(cfg: BalancerConfig) -> None:
+    """The distributed runtime is push-only (partitions are cut along
+    out-edges; the sync substrates ship scatter targets) — refuse
+    direction-optimized configs instead of silently running push."""
+    if cfg.direction != "push":
+        raise ValueError(
+            f"the distributed runtime is push-only; "
+            f"cfg.direction={cfg.direction!r} is not supported "
+            f"(DESIGN.md section 9)")
+
+
 def _require_meta(meta, sync):
     if sync not in ("replicated", "mirror"):
         raise ValueError(f"unknown sync {sync!r} (replicated|mirror)")
@@ -324,7 +349,13 @@ def run_distributed(stacked_g: Graph, mesh, op: Operator,
     all-reduce for the dirty-tracked boundary exchange; labels and
     frontier stay per-device inside the loop and only a scalar activity
     count comes back to the host each round.
+
+    The distributed runtime is push-only: partitions are cut along
+    out-edges and the sync substrates exchange scatter targets, so
+    direction-optimized configs (DESIGN.md section 9) are refused
+    rather than silently run as push.
     """
+    _require_push_direction(cfg)
     _require_meta(meta, sync)
     if sync == "mirror":
         return _run_mirror(stacked_g, mesh, op, init_labels, init_frontier,
@@ -356,7 +387,7 @@ def run_distributed(stacked_g: Graph, mesh, op: Operator,
 def _run_mirror(stacked_g, mesh, op, init_labels, init_frontier, cfg,
                 values_of, next_frontier, sync_delta, max_rounds,
                 collect_stats, meta: PartitionMeta, post_sync=None,
-                tol: float | None = None):
+                tol: float | None = None, global_of=None):
     """Owned-state loop shared by the data-driven drivers and the
     convergence-driven ones: stops when the frontier empties, the round
     budget runs out, or (``tol`` set) the owned-entry residual drops
@@ -369,7 +400,8 @@ def _run_mirror(stacked_g, mesh, op, init_labels, init_frontier, cfg,
     round_fn = make_mirror_round_fn(
         mesh, cfg, op, meta, sync_delta=sync_delta,
         collect_stats=collect_stats, values_of=values_of,
-        next_frontier=next_frontier, post_sync=post_sync)
+        next_frontier=next_frontier, post_sync=post_sync,
+        global_of=global_of)
     mirror_t, incoming_t, lo, hi = _mirror_tables(meta)
     ndev = meta.num_devices
     labels_dev = jnp.tile(init_labels[None], (ndev, 1, 1))
@@ -516,11 +548,18 @@ def pagerank_distributed(stacked_rg: Graph, mesh, out_degrees,
                          collect_stats: bool = False,
                          sync: str = "replicated",
                          meta: PartitionMeta | None = None):
-    """stacked_rg: partitioned *reverse* graph (pull traverses in-edges)."""
+    """stacked_rg: partitioned *reverse* graph (pull traverses
+    in-edges).  Dangling vertices (out-degree 0) redistribute their
+    rank mass uniformly each round, matching the single-device
+    :func:`repro.core.apps.drivers.pagerank` exactly (under the mirror
+    substrate the dangling sum is reduced over owned master ranges via
+    the ``global_of`` hook — exact and free of extra host traffic)."""
+    _require_push_direction(cfg)
     _require_meta(meta, sync)
     v = stacked_rg.row_ptr.shape[-1] - 1
     outdeg = out_degrees.astype(jnp.float32)
     inv_out = jnp.where(outdeg > 0, 1.0 / jnp.maximum(outdeg, 1.0), 0.0)
+    sink = outdeg == 0
     rank = jnp.full((v,), 1.0 / v, jnp.float32)
     frontier = jnp.ones((v,), bool)
     if sync == "mirror":
@@ -532,7 +571,10 @@ def pagerank_distributed(stacked_rg: Graph, mesh, out_degrees,
             next_frontier=lambda old, new, f: f,
             sync_delta=True, max_rounds=max_rounds,
             collect_stats=collect_stats, meta=meta,
-            post_sync=lambda lab, acc: (1.0 - damping) / v + damping * acc,
+            post_sync=lambda lab, acc, dang: (
+                (1.0 - damping) / v + damping * (acc + dang / v)),
+            global_of=lambda lab, owned: jnp.sum(
+                jnp.where(owned[None] & sink[None], lab, 0.0)),
             tol=tol)
     round_fn = make_round_fn(mesh, cfg, ops.PR_PULL, sync_delta=True,
                              collect_stats=collect_stats)
@@ -541,6 +583,7 @@ def pagerank_distributed(stacked_rg: Graph, mesh, out_degrees,
     t0 = time.perf_counter()
     while rounds < max_rounds:
         contrib = rank * inv_out
+        dangling = jnp.sum(jnp.where(sink, rank, 0.0))
         out = round_fn(stacked_rg, contrib, jnp.zeros((v,), jnp.float32),
                        frontier)
         if collect_stats:
@@ -548,7 +591,7 @@ def pagerank_distributed(stacked_rg: Graph, mesh, out_degrees,
             stats.append(stats_per_device(st))
         else:
             acc = out
-        new_rank = (1.0 - damping) / v + damping * acc
+        new_rank = (1.0 - damping) / v + damping * (acc + dangling / v)
         delta = float(jnp.max(jnp.abs(new_rank - rank)))
         rank = new_rank
         rounds += 1

@@ -61,6 +61,20 @@ class Graph:
     def max_out_degree(self) -> int:
         return int(jnp.max(self.out_degrees()))
 
+    def reverse(self) -> "Graph":
+        """Memoized reverse view (:func:`reverse_graph`): the CSC of
+        this graph stored as a CSR, i.e. in-edges become out-edges.
+
+        Pull-direction rounds (DESIGN.md section 9) traverse it every
+        round, so the host-side transpose is built once per Graph
+        object and cached (the cache is an ordinary attribute, not a
+        pytree leaf — a jit-traced Graph never sees it)."""
+        rg = self.__dict__.get("_reverse_cache")
+        if rg is None:
+            rg = reverse_graph(self)
+            object.__setattr__(self, "_reverse_cache", rg)
+        return rg
+
 
 # ---------------------------------------------------------------------------
 # Construction helpers (host side, numpy).

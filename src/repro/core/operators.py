@@ -48,3 +48,30 @@ KCORE_DEC = Operator("kcore_dec", "push", "add",
 # vertex contribution rank[u]/outdeg[u] is precomputed as the value.
 PR_PULL = Operator("pr_pull", "pull", "add",
                    lambda v, w: v, uses_weight=False)
+
+
+# direction-optimized rounds (DESIGN.md section 9) flip a push operator
+# to its pull twin: same msg/combine, but the value is gathered at the
+# in-neighbour and combined at the anchor vertex over the reverse CSR.
+# Memoized per operator: jit caches key on operator *identity*
+# (eq=False), so every pull round of an app must see the SAME twin.
+_PULL_TWINS: dict = {}
+
+
+def as_pull(op: Operator) -> Operator:
+    """The pull twin of a push min-combine operator (memoized).
+
+    Only ``min``-combine push operators have an exact pull form here: a
+    pull round enumerates every in-edge and neutralizes sources outside
+    the frontier with the combiner identity, which is lossless for
+    ``min`` but would reorder floating-point ``add`` reductions.
+    """
+    if op.direction != "push" or op.combine != "min":
+        raise ValueError(
+            f"direction-optimized rounds need a push min-combine "
+            f"operator; got {op.name} (direction={op.direction!r}, "
+            f"combine={op.combine!r})")
+    if op not in _PULL_TWINS:
+        _PULL_TWINS[op] = Operator(op.name + "@pull", "pull",
+                                   op.combine, op.msg, op.uses_weight)
+    return _PULL_TWINS[op]

@@ -65,10 +65,13 @@ def edge_lb_apply_static(g, values, labels, fmask, hvidx, hdeg, hrow,
     j = jnp.clip(j, 0, hvidx.shape[0] - 1)
     src = jnp.where(hvidx.shape[0] > 0, hvidx[j], 0)
     ssafe = jnp.where(src < v, src, 0)
-    live = fmask[:, ssafe]                               # [B, n]
     if op.direction == "push":
+        live = fmask[:, ssafe]                           # [B, n]
         cand = op.msg(values[:, ssafe], w[None])
         return _apply(labels, dst, cand, mask, live, op.combine)
+    # pull: value AND activity gathered at the in-neighbour (``dst`` in
+    # the reverse CSR), combined at the anchor (DESIGN.md section 9)
+    live = fmask[:, dst]                                 # [B, n]
     cand = op.msg(values[:, dst], w[None])
     return _apply(labels, src, cand, mask, live, op.combine)
 
@@ -104,11 +107,14 @@ def twc_bin_apply_static(g, values, labels, fmask, bvidx, bdeg, brow,
     # per-row vertex ids from the anchor tiles (rows are constant)
     row_vid = anchor[:, 0]                               # [N] (pad = v)
     rsafe = jnp.where(row_vid < v, row_vid, 0)
-    live = fmask[:, rsafe][:, :, None]                   # [B, N, 1]
     if op.direction == "push":
+        live = fmask[:, rsafe][:, :, None]               # [B, N, 1]
         val = values[:, rsafe][:, :, None]               # [B, N, 1]
         cand = op.msg(val, w[None])
         return _apply(labels, dst, cand, mask, live, op.combine)
+    # pull: value AND activity gathered at the in-neighbour (``dst`` in
+    # the reverse CSR), combined at the anchor (DESIGN.md section 9)
+    live = fmask[:, dst]                                 # [B, N, W]
     cand = op.msg(values[:, dst], w[None])
     return _apply(labels, anchor, cand, mask, live, op.combine)
 

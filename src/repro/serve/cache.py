@@ -12,6 +12,13 @@ deployments coexist (DESIGN.md section 8).
 
 Re-registering a graph id invalidates every entry for that id — the
 binding ``graph_id -> CSR`` changed, so cached labels may be stale.
+
+Published arrays are **read-only**: ``put`` freezes the ndarray
+(``setflags(write=False)``) before it becomes shared state.  The same
+object is handed to every future ``get`` — and, via the engine, to the
+primary's ``poll().result`` and all coalesced followers — so a caller
+mutating a result in place would otherwise silently corrupt every
+future cache hit.
 """
 from __future__ import annotations
 
@@ -55,9 +62,13 @@ class ResultCache:
     def put(self, graph_id: str, app: str, source: int,
             strategy: Hashable, labels: np.ndarray) -> None:
         """Insert/refresh an entry, evicting the least recently used
-        entry when over capacity."""
+        entry when over capacity.  The array is frozen
+        (``setflags(write=False)``) — it becomes shared state served to
+        every future hit, so in-place mutation must raise rather than
+        corrupt the cache."""
         if self.capacity == 0:
             return
+        labels.setflags(write=False)
         k = self.key(graph_id, app, source, strategy)
         self._entries[k] = labels
         self._entries.move_to_end(k)

@@ -77,7 +77,10 @@ class QueryService:
     """Continuous-batching BFS/SSSP service over registered graphs.
 
     ``num_slots`` fixes B (per slot bank); ``cfg``/``mode`` select the
-    balancer strategy and round implementation for every bank;
+    balancer strategy and round implementation for every bank —
+    including the traversal direction (``cfg.direction``, DESIGN.md
+    section 9), which therefore also joins the result-cache key: A/B
+    deployments of push vs adaptive configs never share entries;
     ``round_budget`` enables preemptive fairness (see
     :class:`repro.serve.scheduler.Scheduler`); ``cache_capacity``
     bounds the LRU result cache (0 disables it).
@@ -215,7 +218,12 @@ class QueryService:
     def _finish(self, q: Query, labels: np.ndarray,
                 from_cache: bool) -> None:
         """Complete a query and fan its labels out to any coalesced
-        followers (shared, not copied — results are read-only)."""
+        followers.  The ndarray is SHARED — one object between the LRU
+        entry, this query's ``poll().result`` and every follower's — so
+        it is frozen here (``setflags(write=False)``): a caller
+        mutating a result raises instead of silently corrupting every
+        future cache hit."""
+        labels.setflags(write=False)
         q.status = DONE
         q.result = labels
         q.from_cache = from_cache

@@ -1,0 +1,226 @@
+"""Direction-optimizing rounds (DESIGN.md section 9).
+
+The invariants under test:
+
+* **Parity matrix** — for every min-combine app (bfs/sssp/cc),
+  ``direction="pull"`` and ``direction="adaptive"`` labels are bitwise
+  equal to the existing push labels, across all 4 strategies, both
+  round modes (host + spmd), and batch sizes B in {1, 4}.
+* **Adaptivity is structural** — ``adaptive`` selects pull on a full
+  frontier and push on a one-hot low-degree frontier, the per-round
+  direction trace matches :func:`resolve_direction` replayed over the
+  recorded counts, and RoundStats records the chosen direction.
+  (Deterministic gates only — no wall clock.)
+* **Validation** — flipping is defined only for push min-combine
+  operators; add-combine (kcore) and natural-pull (pagerank) configs
+  raise.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import operators as ops
+from repro.core.apps import (bfs, sssp, cc, kcore, pagerank, bfs_batch,
+                             sssp_batch)
+from repro.core.balancer import BalancerConfig, resolve_direction
+
+STRATS = ["vertex", "twc", "edge_lb", "alb"]
+MODES = ["host", "spmd"]
+DIRECTIONS = ["pull", "adaptive"]
+
+GRAPH = G.rmat(8, 8, seed=3)
+SGRAPH = G.symmetrized(GRAPH)
+SRC = G.highest_out_degree_vertex(GRAPH)
+SOURCES = [SRC, 1, 5, 9]
+
+
+def _cfg(strategy: str, **kw) -> BalancerConfig:
+    return BalancerConfig(strategy=strategy, threshold=64, **kw)
+
+
+def _run(app: str, strategy: str, mode: str, direction):
+    if app == "bfs":
+        return bfs(GRAPH, SRC, _cfg(strategy), mode=mode,
+                   direction=direction)
+    if app == "sssp":
+        return sssp(GRAPH, SRC, _cfg(strategy), mode=mode,
+                    direction=direction)
+    return cc(SGRAPH, _cfg(strategy), mode=mode, direction=direction)
+
+
+@pytest.fixture(scope="module")
+def push_labels():
+    """Memoized push baselines per (app, strategy, mode)."""
+    cache: dict = {}
+
+    def get(app, strategy, mode):
+        key = (app, strategy, mode)
+        if key not in cache:
+            cache[key] = np.asarray(_run(app, strategy, mode,
+                                         "push").labels)
+        return cache[key]
+
+    return get
+
+
+# ---------------------------------------------------------------------------
+# parity matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("direction", DIRECTIONS)
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("strategy", STRATS)
+@pytest.mark.parametrize("app", ["bfs", "sssp", "cc"])
+def test_direction_parity(app, strategy, mode, direction, push_labels):
+    out = _run(app, strategy, mode, direction)
+    np.testing.assert_array_equal(np.asarray(out.labels),
+                                  push_labels(app, strategy, mode))
+
+
+@pytest.mark.parametrize("b", [1, 4])
+@pytest.mark.parametrize("direction", DIRECTIONS)
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("app", ["bfs", "sssp"])
+def test_batched_direction_parity(app, mode, direction, b):
+    driver = bfs_batch if app == "bfs" else sssp_batch
+    srcs = SOURCES[:b]
+    base = driver(GRAPH, srcs, _cfg("alb"), mode=mode)
+    out = driver(GRAPH, srcs, _cfg("alb"), mode=mode,
+                 direction=direction)
+    np.testing.assert_array_equal(np.asarray(out.labels),
+                                  np.asarray(base.labels))
+
+
+def test_pull_pallas_matches_xla_push(push_labels):
+    cfg = _cfg("alb", use_pallas=True)
+    for mode in MODES:
+        out = sssp(GRAPH, SRC, cfg, mode=mode, direction="pull")
+        np.testing.assert_array_equal(np.asarray(out.labels),
+                                      push_labels("sssp", "alb", mode))
+
+
+def test_served_equals_standalone_under_adaptive():
+    """A query served through the batched round loop with an adaptive
+    config equals its standalone push run (the serving-layer parity
+    criterion)."""
+    out = sssp_batch(GRAPH, SOURCES, _cfg("alb"), direction="adaptive")
+    for i, s in enumerate(SOURCES):
+        ref = np.asarray(sssp(GRAPH, s, _cfg("alb")).labels)
+        np.testing.assert_array_equal(np.asarray(out.labels[i]), ref)
+
+
+# ---------------------------------------------------------------------------
+# structural adaptivity gates (deterministic; no wall clock)
+# ---------------------------------------------------------------------------
+
+def test_resolve_direction_thresholds():
+    cfg = BalancerConfig(direction="adaptive", pull_alpha=14,
+                         pull_beta=24)
+    # dense by vertices: n_f * beta >= V
+    assert resolve_direction(cfg, 100, 0, 1000, 100000) == "pull"
+    # dense by frontier out-edges: m_f * alpha >= E
+    assert resolve_direction(cfg, 1, 999, 100000, 1000) == "pull"
+    # sparse both ways
+    assert resolve_direction(cfg, 1, 1, 1000, 10000) == "push"
+    # fixed directions ignore the counts
+    push_cfg = dataclasses.replace(cfg, direction="push")
+    pull_cfg = dataclasses.replace(cfg, direction="pull")
+    assert resolve_direction(push_cfg, 10**9, 10**9, 1, 1) == "push"
+    assert resolve_direction(pull_cfg, 0, 0, 10, 10) == "pull"
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_adaptive_selects_pull_on_full_frontier(mode):
+    """cc starts from a full frontier — round 1 must run as a pull."""
+    out = cc(SGRAPH, _cfg("alb"), mode=mode, direction="adaptive",
+             collect_stats=True)
+    assert out.stats[0].frontier_size == SGRAPH.num_vertices
+    assert out.stats[0].direction == "pull"
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_adaptive_selects_push_on_one_hot_frontier(mode):
+    """A one-hot frontier at a low-degree vertex must run as a push."""
+    g = G.road_grid(20, seed=0)             # V=400, degree <= 4
+    out = bfs(g, 0, _cfg("alb"), mode=mode, direction="adaptive",
+              collect_stats=True)
+    assert out.stats[0].frontier_size == 1
+    assert out.stats[0].direction == "push"
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_adaptive_trace_matches_threshold_rule(mode):
+    """The recorded per-round direction is exactly the threshold rule
+    replayed over the recorded per-round counts."""
+    cfg = _cfg("alb", direction="adaptive")
+    out = bfs(GRAPH, SRC, cfg, mode=mode, collect_stats=True)
+    v, e = GRAPH.num_vertices, GRAPH.num_edges
+    assert out.stats
+    for st in out.stats:
+        assert st.direction == resolve_direction(
+            cfg, st.frontier_size, st.frontier_edges, v, e)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_round_stats_record_fixed_directions(mode):
+    pull = sssp(GRAPH, SRC, _cfg("alb"), mode=mode, direction="pull",
+                collect_stats=True)
+    assert pull.stats and all(st.direction == "pull"
+                              for st in pull.stats)
+    push = sssp(GRAPH, SRC, _cfg("alb"), mode=mode,
+                collect_stats=True)
+    assert push.stats and all(st.direction == "push"
+                              for st in push.stats)
+
+
+def test_adaptive_round_count_never_exceeds_push():
+    """Each round relaxes the same candidate multiset in either
+    direction, so adaptive cannot take more rounds than push-only."""
+    push = bfs(GRAPH, SRC, _cfg("alb"))
+    ad = bfs(GRAPH, SRC, _cfg("alb"), direction="adaptive")
+    assert ad.rounds <= push.rounds
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def test_direction_requires_push_min_combine_operator():
+    with pytest.raises(ValueError, match="min-combine"):
+        kcore(SGRAPH, 4, _cfg("alb", direction="pull"))   # add-combine
+    with pytest.raises(ValueError, match="min-combine"):
+        pagerank(GRAPH, cfg=_cfg("alb", direction="adaptive"),
+                 max_rounds=2)                            # natural pull
+
+
+def test_distributed_runtime_rejects_direction_configs():
+    """The distributed runtime is push-only (partitions cut along
+    out-edges) — it must refuse direction-optimized configs instead of
+    silently running push."""
+    from repro.core import gluon
+    with pytest.raises(ValueError, match="push-only"):
+        gluon.run_distributed(None, None, ops.SSSP_RELAX, None, None,
+                              cfg=_cfg("alb", direction="adaptive"))
+    with pytest.raises(ValueError, match="push-only"):
+        gluon.pagerank_distributed(None, None, None,
+                                   cfg=_cfg("alb", direction="pull"))
+
+
+def test_as_pull_memoized_twin():
+    twin = ops.as_pull(ops.BFS_HOP)
+    assert twin is ops.as_pull(ops.BFS_HOP)
+    assert twin.direction == "pull"
+    assert twin.combine == ops.BFS_HOP.combine
+    with pytest.raises(ValueError):
+        ops.as_pull(ops.PR_PULL)
+    with pytest.raises(ValueError):
+        ops.as_pull(ops.KCORE_DEC)
+
+
+def test_bad_direction_config_rejected():
+    with pytest.raises(AssertionError):
+        BalancerConfig(direction="sideways")

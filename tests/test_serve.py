@@ -420,3 +420,84 @@ def test_service_stats_accounting(rmat_g):
     s = st.summary()
     assert s["queries_served"] == 7
     assert s["cache_hit_rate"] == pytest.approx(1 / 7, abs=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# published results are read-only shared state
+# ---------------------------------------------------------------------------
+
+def test_published_results_are_readonly(rmat_g):
+    """The LRU entry, the primary's ``poll().result`` and every
+    coalesced follower share ONE ndarray — mutating a polled result
+    must raise, and a later re-poll / cache hit must be unchanged
+    (before the fix, the write succeeded and silently corrupted every
+    future hit)."""
+    svc = QueryService(num_slots=2, cfg=CFG)
+    svc.register_graph("g", rmat_g)
+    src = _sources(rmat_g, 1, seed=11)[0]
+    qid = svc.submit("g", "bfs", src)
+    svc.run()
+    res = svc.poll(qid).result
+    expected = res.copy()
+    with pytest.raises(ValueError):
+        res[0] = -1
+    # re-poll: unchanged object, unchanged contents
+    np.testing.assert_array_equal(svc.poll(qid).result, expected)
+    # cache hit: served from the same shared (still intact) array
+    qid2 = svc.submit("g", "bfs", src)
+    hit = svc.poll(qid2)
+    assert hit.from_cache
+    np.testing.assert_array_equal(hit.result, expected)
+    with pytest.raises(ValueError):
+        hit.result[:] = 0
+
+
+def test_cache_put_freezes_array():
+    """ResultCache.put publishes the array as shared state: the same
+    object comes back from get, read-only."""
+    cache = ResultCache(capacity=4)
+    arr = np.arange(5, dtype=np.int32)
+    cache.put("g", "bfs", 0, CFG, arr)
+    got = cache.get("g", "bfs", 0, CFG)
+    assert got is arr
+    with pytest.raises(ValueError):
+        got[0] = 99
+    np.testing.assert_array_equal(cache.get("g", "bfs", 0, CFG),
+                                  np.arange(5))
+
+
+def test_follower_results_are_readonly(rmat_g):
+    """Coalesced followers receive the shared primary array — also
+    frozen."""
+    svc = QueryService(num_slots=1, cfg=CFG)
+    svc.register_graph("g", rmat_g)
+    src = _sources(rmat_g, 1, seed=13)[0]
+    qid1 = svc.submit("g", "bfs", src)
+    qid2 = svc.submit("g", "bfs", src)      # coalesces onto qid1
+    svc.run()
+    r1, r2 = svc.poll(qid1).result, svc.poll(qid2).result
+    assert r1 is r2
+    with pytest.raises(ValueError):
+        r2[0] = 1
+
+
+# ---------------------------------------------------------------------------
+# traversal direction through the serving engine (DESIGN.md section 9)
+# ---------------------------------------------------------------------------
+
+def test_served_query_matches_standalone_adaptive_direction(rmat_g):
+    """A service configured with adaptive direction still serves every
+    query bitwise equal to its standalone (push) run, and the direction
+    field keeps cache entries of different direction configs apart."""
+    adaptive_cfg = BalancerConfig(strategy="alb", threshold=32,
+                                  direction="adaptive")
+    svc = QueryService(num_slots=2, cfg=adaptive_cfg)
+    svc.register_graph("g", rmat_g)
+    sources = _sources(rmat_g, 3, seed=17)
+    qids = [svc.submit("g", "bfs", s) for s in sources]
+    svc.run()
+    for s, qid in zip(sources, qids):
+        ref = np.asarray(bfs(rmat_g, s, CFG).labels)
+        np.testing.assert_array_equal(svc.poll(qid).result, ref)
+    assert svc.cache.key("g", "bfs", sources[0], adaptive_cfg) \
+        != svc.cache.key("g", "bfs", sources[0], CFG)

@@ -79,6 +79,8 @@ def np_kcore(g, k):
 
 
 def np_pagerank(g, damping=0.85, iters=30):
+    """Power iteration with dangling (out-degree 0) mass redistributed
+    uniformly each round, so sum(rank) == 1 on graphs with sinks."""
     rp, ci, w, src = np_csr(g)
     n = g.num_vertices
     outdeg = rp[1:] - rp[:-1]
@@ -87,7 +89,8 @@ def np_pagerank(g, damping=0.85, iters=30):
     for _ in range(iters):
         acc = np.zeros(n)
         np.add.at(acc, ci, rank[src] * inv[src])
-        rank = (1 - damping) / n + damping * acc
+        dangling = rank[outdeg == 0].sum()
+        rank = (1 - damping) / n + damping * (acc + dangling / n)
     return rank
 
 
@@ -148,6 +151,58 @@ def test_pagerank_strategies(graph, strategy):
     out = pagerank(graph, cfg=cfg, max_rounds=30, tol=0.0)
     np.testing.assert_allclose(np.asarray(out.labels),
                                np_pagerank(graph, iters=30), rtol=2e-4)
+
+
+def test_pagerank_conserves_mass_with_sinks():
+    """Regression (dangling vertices): ranks must sum to 1 on a graph
+    with sinks.  Before the fix, ``inv_out=0`` rows contributed
+    nothing, mass leaked every round and ``tol`` was checked against
+    deflated values."""
+    # vertices 2 and 3 are sinks (no out-edges)
+    g = G.from_edge_list(np.array([0, 0, 1]), np.array([1, 2, 2]), 4)
+    out = pagerank(g, max_rounds=60, tol=0.0)
+    rank = np.asarray(out.labels)
+    assert abs(float(rank.sum()) - 1.0) < 1e-4
+    np.testing.assert_allclose(rank, np_pagerank(g, iters=60), rtol=2e-4)
+
+
+def test_pagerank_unchanged_without_sinks():
+    """On a sink-free graph the dangling term is exactly zero, so the
+    fix must not perturb results (and mass is conserved as before)."""
+    n = 16
+    src = np.arange(n)
+    g = G.from_edge_list(src, (src + 1) % n, n)     # directed ring
+    out = pagerank(g, max_rounds=30, tol=0.0)
+    rank = np.asarray(out.labels)
+    assert abs(float(rank.sum()) - 1.0) < 1e-4
+    np.testing.assert_allclose(rank, np_pagerank(g, iters=30), rtol=2e-4)
+
+
+def test_driver_loops_make_no_extra_frontier_sync(monkeypatch):
+    """Regression (perf): the driver loop must converge from the
+    round's own fused host counts (``return_active``) — a separate
+    blocking ``jnp.any(frontier)`` per round is one extra device
+    round-trip for every host-mode app."""
+    from repro.core.apps import drivers as drv
+    real_jnp = drv.jnp
+    calls = []
+
+    class _SpyJnp:
+        def __getattr__(self, name):
+            if name == "any":
+                calls.append(name)
+            return getattr(real_jnp, name)
+
+    monkeypatch.setattr(drv, "jnp", _SpyJnp())
+    g = G.road_grid(8, seed=0)
+    out = bfs(g, 0)
+    assert calls == [], "driver loop still issues jnp.any per round"
+    np.testing.assert_array_equal(np.asarray(out.labels), np_bfs(g, 0))
+    sg = symmetrize(g)
+    calls.clear()
+    kc = kcore(sg, 2)
+    assert calls == []
+    np.testing.assert_array_equal(np.asarray(kc.labels), np_kcore(sg, 2))
 
 
 def test_cyclic_blocked_same_fixpoint(graph):
