@@ -1,0 +1,167 @@
+"""Incremental recompute vs full recompute under streaming updates
+(DESIGN.md section 10).
+
+A live serving deployment absorbs edge updates continuously; the
+question this harness answers is how much relax work the incremental
+repair path (``stream_update``: seed the frontier from changed edges,
+resume the round loop) saves over recomputing every query from
+scratch.  For each graph class we replay an insert-only trace and a
+mixed insert/delete/reweight trace, reporting per-update rounds and
+wall clock for both policies, plus how often the mixed trace fell back
+to a full recompute.
+
+Rows: ``update_<app>_<graph>_<trace>_<policy>,us_per_update,
+rounds_per_update=R [fallback_share=F]``.
+
+Run directly (also wired as the ``update`` selector of
+benchmarks.run):
+
+    PYTHONPATH=src python -m benchmarks.fig_update          # sweep
+    PYTHONPATH=src python -m benchmarks.fig_update --smoke  # CI
+
+``--smoke`` shrinks the inputs and gates on STRUCTURAL invariants only
+(never wall clock):
+
+1. parity — after every batch of every trace, the incremental labels
+   are bitwise equal to a from-scratch run on the mutated graph;
+2. work — on the insert-only traces, total incremental repair rounds
+   never exceed total full-recompute rounds (inserts never trigger
+   the delete fallback, so repair must be pure savings).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.core import streaming as S
+from repro.core.balancer import BalancerConfig
+
+from .common import emit
+
+APPS = ["bfs", "sssp"]
+
+
+def _inputs(smoke: bool) -> dict:
+    if smoke:
+        return {"rmat": G.rmat(8, 6, seed=1),
+                "road": G.road_grid(12, seed=1)}
+    return {"rmat": G.rmat(11, 8, seed=1),
+            "road": G.road_grid(40, seed=1)}
+
+
+def _traces(g: G.Graph, smoke: bool) -> dict:
+    """Two traces per graph: insert-only (pure improvements — the
+    incremental sweet spot) and mixed (deletes/reweights included, so
+    the tight-edge fallback gets exercised).  Batches are built at one
+    capacity so the whole trace reuses one seeding-scatter shape."""
+    rng = np.random.default_rng(7)
+    nv = g.num_vertices
+    n_batches, per_batch, cap = (4, 8, 16) if smoke else (12, 24, 32)
+    edges = dict(S.edge_map(g))
+
+    inserts = []
+    for _ in range(n_batches):
+        ups = []
+        while len(ups) < per_batch:
+            u, v = int(rng.integers(nv)), int(rng.integers(nv))
+            ups.append(("insert", u, v, int(rng.integers(1, 20))))
+        inserts.append(S.make_batch(ups, capacity=cap))
+
+    mixed = []
+    for _ in range(n_batches):
+        ups = []
+        for _ in range(per_batch):
+            r = float(rng.random())
+            keys = list(edges)
+            if r < 0.5 or not keys:
+                u, v = int(rng.integers(nv)), int(rng.integers(nv))
+                ups.append(("insert", u, v, int(rng.integers(1, 20))))
+                edges[(u, v)] = min(edges.get((u, v), 99),
+                                    int(ups[-1][3]))
+            elif r < 0.75:
+                u, v = keys[int(rng.integers(len(keys)))]
+                ups.append(("delete", u, v))
+                edges.pop((u, v), None)
+            else:
+                u, v = keys[int(rng.integers(len(keys)))]
+                w = int(rng.integers(1, 20))
+                ups.append(("reweight", u, v, w))
+                edges[(u, v)] = w
+        mixed.append(S.make_batch(ups, capacity=cap))
+    return {"ins": inserts, "mix": mixed}
+
+
+def _replay(g0, app, cfg, batches, incremental: bool):
+    """Run one (policy, trace) cell: returns (labels_after_each_batch,
+    total_rounds, total_seconds, fallbacks).  The full-recompute
+    policy still routes updates through apply_updates (same fixed-shape
+    CSR path) but recomputes labels from scratch every batch."""
+    src = None if app == "cc" else G.highest_out_degree_vertex(g0)
+    st = S.stream_init(S.streaming_graph(g0), app, source=src, cfg=cfg)
+    labels_seq, rounds, fallbacks = [], 0, 0
+    t0 = time.perf_counter()
+    for batch in batches:
+        if incremental:
+            rep = S.stream_update(st, batch)
+            rounds += rep.rounds
+            fallbacks += int(rep.full_recompute)
+        else:
+            st.g = S.apply_updates(st.g, batch)
+            res = S._full_compute(st.g, app, src, cfg, st.mode)
+            st.labels = res.labels
+            rounds += res.rounds
+        labels_seq.append(st.real_labels.copy())
+    return labels_seq, rounds, time.perf_counter() - t0, fallbacks
+
+
+def run(smoke: bool = False) -> int:
+    cfg = BalancerConfig(strategy="alb", threshold=64)
+    failures = 0
+    for gname, g in _inputs(smoke).items():
+        traces = _traces(g, smoke)
+        for app in APPS:
+            for tname, batches in traces.items():
+                cells = {}
+                for policy, inc in (("incr", True), ("full", False)):
+                    labels, rounds, secs, fb = _replay(
+                        g, app, cfg, batches, incremental=inc)
+                    cells[policy] = (labels, rounds, fb)
+                    per_update = rounds / len(batches)
+                    extra = f"rounds_per_update={per_update:.1f}"
+                    if inc and tname == "mix":
+                        extra += (f" fallback_share="
+                                  f"{fb / len(batches):.2f}")
+                    emit(f"update_{app}_{gname}_{tname}_{policy}",
+                         secs / len(batches), extra)
+                # ---- structural gates (no wall clock) ----------------
+                inc_l, inc_r, _ = cells["incr"]
+                full_l, full_r, _ = cells["full"]
+                for i, (a, b) in enumerate(zip(inc_l, full_l)):
+                    if not np.array_equal(a, b):
+                        print(f"FAIL: {app}/{gname}/{tname} batch {i}: "
+                              f"incremental labels != full recompute",
+                              file=sys.stderr)
+                        failures += 1
+                if tname == "ins" and inc_r > full_r:
+                    print(f"FAIL: {app}/{gname}/ins: incremental took "
+                          f"{inc_r} rounds > full's {full_r}",
+                          file=sys.stderr)
+                    failures += 1
+    return failures
+
+
+def main() -> int:
+    smoke = "--smoke" in sys.argv[1:]
+    failures = run(smoke=smoke)
+    if failures:
+        return 1
+    if smoke:
+        print("smoke OK: incremental/full parity + insert-trace rounds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

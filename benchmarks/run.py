@@ -34,6 +34,11 @@ Selectors and what each script reproduces:
   traversal direction per round (DESIGN.md section 9): wall clock,
   round counts, adaptive's pull share; ``--smoke`` gates parity and
   the adaptive direction trace structurally (no timing gate).
+* ``update``   (fig_update.py)          — streaming edge updates:
+  incremental label repair vs full recompute, rounds and wall clock
+  per update on insert-only and mixed traces (DESIGN.md section 10);
+  ``--smoke`` gates incremental/full parity and that insert-only
+  repair rounds never exceed full-recompute rounds (no timing gate).
 * ``roofline`` (roofline.py)            — kernel roofline estimates
   from dry-run artifacts (skipped when artifacts are absent).
 
@@ -48,7 +53,7 @@ import sys
 def main() -> None:
     which = set(sys.argv[1:]) or {"table2", "table2sim", "fig5", "fig6",
                                   "fig8", "fig9", "qps", "serve",
-                                  "direction", "roofline"}
+                                  "direction", "update", "roofline"}
     print("name,us_per_call,derived")
     if "table2" in which:
         from . import table2_strategies
@@ -79,6 +84,12 @@ def main() -> None:
         if fig_direction.run():
             # structural gate failures (parity / adaptive trace) must
             # fail the aggregate run too, not just the --smoke entry
+            sys.exit(1)
+    if "update" in which:
+        from . import fig_update
+        if fig_update.run():
+            # parity between incremental repair and full recompute is
+            # a correctness property — fail the aggregate run
             sys.exit(1)
     if "roofline" in which:
         from . import roofline

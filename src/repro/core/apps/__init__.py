@@ -1,7 +1,7 @@
 from .drivers import (bfs, sssp, cc, pagerank, kcore, bfs_batch,
                       sssp_batch, AppResult, relax_round, step_batch,
-                      QUERY_APPS)
+                      resume_loop, QUERY_APPS)
 
 __all__ = ["bfs", "sssp", "cc", "pagerank", "kcore", "bfs_batch",
            "sssp_batch", "AppResult", "relax_round", "step_batch",
-           "QUERY_APPS"]
+           "resume_loop", "QUERY_APPS"]

@@ -124,6 +124,32 @@ QUERY_APPS = {
 }
 
 
+def resume_loop(g, labels, frontier, cfg, op, max_rounds: int = 10_000,
+                collect_stats: bool = False, mode: str = "host",
+                direction: Optional[str] = None) -> "AppResult":
+    """Continue a min-combine data-driven loop from explicit
+    labels/frontier state until the worklist drains.
+
+    This is the incremental-repair entry point of the streaming layer
+    (DESIGN.md section 10): ``repro.core.streaming.stream_update``
+    seeds ``frontier`` from the endpoints of changed edges and resumes
+    the ordinary round loop over the current labels — the exact loop
+    :func:`bfs`/:func:`sssp`/:func:`cc` run, so every strategy,
+    backend, execution mode, and traversal direction applies to repair
+    rounds unchanged.  Only ``min``-combine operators are monotone
+    under resumption (labels can only improve), so others are
+    rejected."""
+    if op.combine != "min":
+        raise ValueError(f"resume_loop repairs min-combine fixpoints; "
+                         f"got {op.name} (combine={op.combine!r})")
+    cfg = _with_direction(cfg, direction)
+    labels, rounds, secs, stats = _loop(
+        g, lambda l: l, labels, frontier, cfg, op, max_rounds,
+        collect_stats, next_frontier=lambda old, new, f: new < old,
+        mode=mode)
+    return AppResult(labels, rounds, secs, stats)
+
+
 def _loop(g: Graph, values_of, labels, frontier, cfg, op,
           max_rounds: int, collect_stats: bool,
           next_frontier, post_round=None, mode: str = "host"):

@@ -650,13 +650,21 @@ def _build_pull_enum(g: Graph, cfg: BalancerConfig) -> _PullEnum:
 
 def _pull_enum(g: Graph, cfg: BalancerConfig) -> _PullEnum:
     """Cached :func:`_build_pull_enum` (on the Graph object, keyed by
-    the plan-relevant cfg fields)."""
+    ``g.version`` plus the plan-relevant cfg fields).
+
+    The version component is the invalidation hook for streaming
+    mutations (DESIGN.md section 10): an in-place topology change bumps
+    ``g.version``, so every enumeration built for the old topology
+    misses and is dropped — without it a pull round after a mutation
+    would keep binning the stale reverse CSR."""
     cache = g.__dict__.get("_pull_enum_cache")
     if cache is None:
         cache = {}
         object.__setattr__(g, "_pull_enum_cache", cache)
-    key = _pull_plan_key(cfg)
+    key = (g.version,) + _pull_plan_key(cfg)
     if key not in cache:
+        for stale in [k for k in cache if k[0] != g.version]:
+            del cache[stale]          # unreachable versions: drop
         cache[key] = _build_pull_enum(g, cfg)
     return cache[key]
 

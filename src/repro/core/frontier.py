@@ -78,6 +78,23 @@ def union_frontier(frontier: jax.Array) -> jax.Array:
     return frontier if frontier.ndim == 1 else jnp.any(frontier, axis=0)
 
 
+@partial(jax.jit, static_argnames=("num_vertices",))
+def seed_from_edges(src: jax.Array, dst: jax.Array, mask: jax.Array,
+                    num_vertices: int) -> jax.Array:
+    """Dense ``bool[V]`` frontier seeded from the endpoints of changed
+    edges — the worklist an incremental label repair starts from
+    (DESIGN.md section 10).  ``src``/``dst``/``mask`` are the
+    fixed-capacity ``[K]`` arrays of an update delta (``mask`` False =
+    padding slot); both endpoints of every live entry are set, so the
+    repair round re-relaxes every edge whose shape or weight changed.
+    Fixed ``K`` means one jit trace serves every batch of a stream."""
+    off = jnp.zeros((num_vertices,), dtype=bool)
+    ssafe = jnp.where(mask, src, num_vertices)     # sentinel: dropped
+    dsafe = jnp.where(mask, dst, num_vertices)
+    return off.at[ssafe].set(True, mode="drop") \
+              .at[dsafe].set(True, mode="drop")
+
+
 def full_frontier(num_vertices: int) -> jax.Array:
     return jnp.ones((num_vertices,), dtype=bool)
 

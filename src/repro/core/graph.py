@@ -55,6 +55,28 @@ class Graph:
     def num_edges(self) -> int:
         return self.col_idx.shape[0]
 
+    @property
+    def version(self) -> int:
+        """Monotonically increasing topology version (DESIGN.md
+        section 10).  Every derived structure memoized on the Graph —
+        the reverse CSR below, the pull enumerations in
+        ``repro.core.balancer``, the host edge map in
+        ``repro.core.streaming`` — keys its cache entry on this value,
+        so a version bump (``bump_version``, issued by the streaming
+        update path) atomically invalidates all of them.  Stored
+        outside the pytree: a traced Graph never sees it and version
+        bumps never change jit cache keys."""
+        return self.__dict__.get("_version", 0)
+
+    def bump_version(self) -> None:
+        """Advance :attr:`version` after an in-place topology change
+        (``repro.core.streaming.apply_updates(..., in_place=True)``).
+        Must be called by ANY code that swaps this object's CSR arrays
+        underneath existing references — the memoized ``reverse()`` /
+        pull-enumeration caches check the version on every lookup, so
+        the bump is what keeps them from serving the old topology."""
+        object.__setattr__(self, "_version", self.version + 1)
+
     def out_degrees(self) -> jax.Array:
         return self.row_ptr[1:] - self.row_ptr[:-1]
 
@@ -68,12 +90,18 @@ class Graph:
         Pull-direction rounds (DESIGN.md section 9) traverse it every
         round, so the host-side transpose is built once per Graph
         object and cached (the cache is an ordinary attribute, not a
-        pytree leaf — a jit-traced Graph never sees it)."""
-        rg = self.__dict__.get("_reverse_cache")
-        if rg is None:
-            rg = reverse_graph(self)
-            object.__setattr__(self, "_reverse_cache", rg)
-        return rg
+        pytree leaf — a jit-traced Graph never sees it).
+
+        The cache entry is keyed on :attr:`version`: an in-place
+        topology change (DESIGN.md section 10) bumps the version, so a
+        stale transpose can never be served — without the key, a pull
+        round after a mutation would silently traverse the old
+        topology."""
+        cached = self.__dict__.get("_reverse_cache")
+        if cached is None or cached[0] != self.version:
+            cached = (self.version, reverse_graph(self))
+            object.__setattr__(self, "_reverse_cache", cached)
+        return cached[1]
 
 
 # ---------------------------------------------------------------------------
@@ -190,20 +218,46 @@ def to_coo(g: Graph) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     The one place the ``row_ptr``-to-source expansion lives; the
     partitioner (which slices edges by owner), ``reverse_graph`` and the
     benchmark symmetrizer all consume it.
+
+    Only the ``row_ptr[-1]`` edges owned by some vertex are expanded:
+    a padded graph (``pad_graph``, or the streaming shapes of
+    DESIGN.md section 10) stores sentinel-targeting filler beyond that
+    point, which belongs to no vertex and is not part of the semantic
+    edge set.
     """
     row_ptr = np.asarray(g.row_ptr).astype(np.int64)
-    dst = np.asarray(g.col_idx).astype(np.int64)
-    w = np.asarray(g.edge_w)
+    e_real = int(row_ptr[-1])
+    dst = np.asarray(g.col_idx)[:e_real].astype(np.int64)
+    w = np.asarray(g.edge_w)[:e_real]
     src = np.repeat(np.arange(g.num_vertices, dtype=np.int64),
                     row_ptr[1:] - row_ptr[:-1])
     return src, dst, w
 
 
 def reverse_graph(g: Graph) -> Graph:
-    """CSC view (incoming edges) as a CSR graph — used by pull operators."""
+    """CSC view (incoming edges) as a CSR graph — used by pull operators.
+
+    Shape-preserving: when ``g`` carries edge padding (its ``col_idx``
+    is longer than ``row_ptr[-1]``), the transpose is padded back to
+    the same edge capacity with the same sentinel-targeting filler, so
+    pull rounds over a streaming graph (DESIGN.md section 10) see
+    fixed shapes across versions, exactly like push rounds over the
+    forward CSR."""
     src, dst, w = to_coo(g)
-    return from_edge_list(dst, src, g.num_vertices, weights=w,
-                          dedup=False)
+    rg = from_edge_list(dst, src, g.num_vertices, weights=w,
+                        dedup=False)
+    ecap, e = g.num_edges, rg.num_edges
+    if ecap > e:
+        vp = g.num_vertices
+        rg = Graph(
+            row_ptr=rg.row_ptr,
+            col_idx=jnp.concatenate(
+                [rg.col_idx, jnp.full((ecap - e,), vp - 1, jnp.int32)]),
+            edge_w=jnp.concatenate(
+                [rg.edge_w, jnp.full((ecap - e,), INF, jnp.int32)]))
+    if "_v_real" in g.__dict__:
+        object.__setattr__(rg, "_v_real", g.__dict__["_v_real"])
+    return rg
 
 
 def symmetrized(g: Graph) -> Graph:

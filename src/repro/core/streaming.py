@@ -1,0 +1,527 @@
+"""Streaming graph mutations with incremental label repair
+(DESIGN.md section 10).
+
+The paper's balancer assumes a static CSR; this module makes the CSR a
+*versioned* container that absorbs batched edge updates at **fixed
+array shapes**, so the jitted round functions compiled for a graph
+keep serving it across arbitrarily many mutations — no recompiles, no
+shape churn.  Three layers:
+
+* **Update batches** — :class:`UpdateBatch` is a fixed-capacity
+  ``int32[K]`` quadruple (op, src, dst, w); ops are insert / delete /
+  reweight, padding slots are no-ops.  :func:`make_batch` builds one
+  from Python tuples, bucketing K so a stream of batches reuses one
+  shape.
+* **Versioned application** — :func:`streaming_graph` prepares a Graph
+  for updates (sentinel padded vertex, bucketed edge capacity, host
+  edge map); :func:`apply_updates` replays a batch into the host edge
+  map and rebuilds the CSR *at the same shapes*, bumping
+  :attr:`Graph.version` so every memoized derived structure (the
+  ``reverse()`` transpose, the balancer's pull enumerations) is
+  invalidated atomically.  :func:`diff_batch` reports the **net**
+  topology delta a batch would cause — the unit both the repair seeds
+  and the serve-layer cache eviction consume.
+* **Incremental repair** — :func:`stream_init` / :func:`stream_update`
+  maintain a label fixpoint for a monotone app (bfs/sssp/cc) across
+  updates.  Improvements (inserted edges, sssp weight decreases) are
+  repaired *incrementally*: the changed edges' endpoints become a
+  frontier (``frontier.seed_from_edges``) and the ordinary round loop
+  resumes from the current labels (``drivers.resume_loop``) — the
+  exact relax machinery of a from-scratch run, so every strategy,
+  backend, execution mode and traversal direction applies unchanged.
+  Degradations (a deleted or weight-increased edge that is *tight*,
+  i.e. currently supports some label) fall back to a full recompute,
+  because min-combine resumption can only lower labels.
+
+Correctness contract, enforced by ``tests/test_streaming.py``: after
+every update the real-vertex slice of the maintained labels is bitwise
+equal to a from-scratch run on the mutated graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph, INF, to_coo
+from .frontier import next_bucket, seed_from_edges
+from .balancer import BalancerConfig
+from . import operators as ops
+from .apps import drivers
+
+# UpdateBatch op codes.  0 must be the padding no-op so a zeroed array
+# is a valid (empty) batch.
+OP_PAD = 0
+OP_INSERT = 1
+OP_DELETE = 2
+OP_REWEIGHT = 3
+
+_OP_NAMES = {"insert": OP_INSERT, "delete": OP_DELETE,
+             "reweight": OP_REWEIGHT}
+
+# The monotone (min-combine) applications the repair path maintains.
+# bfs and cc are weight-blind (uses_weight=False): reweights never
+# change their fixpoint, so the classifier ignores them outright.
+STREAM_APPS = {
+    "bfs": ops.BFS_HOP,
+    "sssp": ops.SSSP_RELAX,
+    "cc": ops.CC_MIN,
+}
+
+
+class UpdateBatch(NamedTuple):
+    """Fixed-shape batch of edge updates: four ``int32[K]`` host
+    arrays.  ``op[k]`` is one of :data:`OP_PAD` (slot unused),
+    :data:`OP_INSERT`, :data:`OP_DELETE`, :data:`OP_REWEIGHT`;
+    ``src``/``dst`` name the edge and ``w`` carries the new weight
+    (ignored for deletes).  K is the batch *capacity* — a stream that
+    sticks to one capacity hands the jitted seeding scatter one shape
+    forever (DESIGN.md section 10)."""
+    op: np.ndarray
+    src: np.ndarray
+    dst: np.ndarray
+    w: np.ndarray
+
+    @property
+    def capacity(self) -> int:
+        """The fixed slot count K (live entries + padding)."""
+        return int(self.op.shape[0])
+
+    @property
+    def num_updates(self) -> int:
+        """How many live (non-padding) entries the batch carries."""
+        return int(np.count_nonzero(self.op))
+
+
+def make_batch(updates: Iterable[tuple],
+               capacity: Optional[int] = None) -> UpdateBatch:
+    """Build an :class:`UpdateBatch` from Python tuples.
+
+    Each update is ``("insert", u, v, w)``, ``("delete", u, v)`` or
+    ``("reweight", u, v, w)``; unweighted streams pass ``w=1``.
+    ``capacity`` fixes K explicitly (a stream should pick one capacity
+    and keep it — mixed capacities re-trace the seeding scatter);
+    by default K is bucketed to the smallest power of two >= max(n,
+    16), so nearby batch sizes share a shape.  Entries beyond ``n`` are
+    :data:`OP_PAD` no-ops.
+    """
+    parsed = []
+    for t in updates:
+        kind = t[0]
+        if kind not in _OP_NAMES:
+            raise ValueError(f"unknown update kind {kind!r} "
+                             f"(have {sorted(_OP_NAMES)})")
+        if kind == "delete":
+            u, v = t[1], t[2]
+            w = 0
+        else:
+            if len(t) != 4:
+                raise ValueError(f"{kind} update needs (kind, u, v, w); "
+                                 f"got {t!r}")
+            u, v, w = t[1], t[2], t[3]
+        parsed.append((_OP_NAMES[kind], int(u), int(v), int(w)))
+    n = len(parsed)
+    cap = next_bucket(n, minimum=16) if capacity is None else int(capacity)
+    if n > cap:
+        raise ValueError(f"{n} updates exceed batch capacity {cap}")
+    op = np.zeros((cap,), np.int32)
+    src = np.zeros((cap,), np.int32)
+    dst = np.zeros((cap,), np.int32)
+    w = np.zeros((cap,), np.int32)
+    for i, (o, u, v, wt) in enumerate(parsed):
+        op[i], src[i], dst[i], w[i] = o, u, v, wt
+    return UpdateBatch(op=op, src=src, dst=dst, w=w)
+
+
+# ---------------------------------------------------------------------------
+# Versioned CSR application.
+# ---------------------------------------------------------------------------
+
+def real_vertices(g: Graph) -> int:
+    """The live vertex count of a (possibly streaming-padded) graph:
+    vertices ``>= real_vertices(g)`` are structural padding whose
+    labels carry no meaning.  Equals ``num_vertices`` for graphs never
+    passed through :func:`streaming_graph`."""
+    return g.__dict__.get("_v_real", g.num_vertices)
+
+
+def edge_map(g: Graph) -> Dict[Tuple[int, int], int]:
+    """The graph's live edge set as a host dict ``(u, v) -> w``,
+    memoized per :attr:`Graph.version` (a mutation invalidates it with
+    the other derived structures).  Padded edges — those leaving a
+    padded source vertex — are excluded, so the dict is exactly the
+    semantic edge set :func:`apply_updates` rebuilds the CSR from.
+    Treat the returned dict as read-only; it IS the cache entry.
+    """
+    cached = g.__dict__.get("_edge_map_cache")
+    if cached is not None and cached[0] == g.version:
+        return cached[1]
+    v_real = real_vertices(g)
+    src, dst, w = to_coo(g)
+    live = src < v_real                 # padded vertices have no real edges
+    edges = {(int(u), int(v)): int(wt)
+             for u, v, wt in zip(src[live], dst[live], w[live])}
+    object.__setattr__(g, "_edge_map_cache", (g.version, edges))
+    return edges
+
+
+def unpadded(g: Graph) -> Graph:
+    """The semantic (un-padded) graph a streaming-shaped graph
+    represents: real vertices only, live edges only, no sentinel.  Use
+    this to hand a mutated graph to consumers that assume exact shapes
+    — the partitioner, benchmark symmetrizers — at the cost of losing
+    the fixed-shape/no-recompile property (it is a fresh Graph at
+    version 0)."""
+    v_real = real_vertices(g)
+    edges = edge_map(g)
+    n = len(edges)
+    src = np.fromiter((k[0] for k in edges), np.int64, count=n)
+    dst = np.fromiter((k[1] for k in edges), np.int64, count=n)
+    w = np.fromiter(edges.values(), np.int64, count=n)
+    from .graph import from_edge_list
+    return from_edge_list(src, dst, v_real, weights=w, dedup=False)
+
+
+def streaming_graph(g: Graph, edge_capacity: Optional[int] = None) -> Graph:
+    """Prepare a graph for :func:`apply_updates`: returns a copy padded
+    to *streaming shape* — vertex count rounded up past a sentinel
+    (``vp - 1``, the degree-0 target every padded edge aims at, per the
+    ``pad_graph`` invariant) and edge count bucketed to a power of two
+    with headroom, so later updates rebuild the CSR at these exact
+    shapes and jitted round functions never recompile.
+
+    ``edge_capacity`` fixes the edge headroom explicitly (it is
+    bucketed up); the default leaves ~50% growth room.  A batch that
+    overflows the capacity still applies — the CSR grows to the next
+    bucket — but that one application changes shapes and re-traces, so
+    size the capacity for the stream's lifetime.
+    """
+    v_real = g.num_vertices
+    edges = edge_map(g)
+    vp = -(-(v_real + 1) // 8) * 8      # >= v_real + 1, multiple of 8
+    want = len(edges) if edge_capacity is None else int(edge_capacity)
+    if want < len(edges):
+        raise ValueError(f"edge_capacity {want} < current edge count "
+                         f"{len(edges)}")
+    if edge_capacity is None:
+        want = len(edges) + max(64, len(edges) // 2)
+    ecap = next_bucket(want, minimum=1024)
+    out = _rebuild(edges, v_real, vp, ecap, version=0)
+    return out
+
+
+def _rebuild(edges: Dict[Tuple[int, int], int], v_real: int, vp: int,
+             ecap: int, version: int) -> Graph:
+    """Host-side CSR build of ``edges`` at fixed (vp, ecap) shapes.
+    Padded edges target the sentinel vertex ``vp - 1`` with weight INF
+    (the ``pad_graph`` invariant: weight-blind operators may relax
+    them, but only the sentinel's never-read label is written)."""
+    n = len(edges)
+    if n > ecap:
+        ecap = next_bucket(n, minimum=1024)     # documented re-trace
+    src = np.fromiter((k[0] for k in edges), np.int64, count=n)
+    dst = np.fromiter((k[1] for k in edges), np.int64, count=n)
+    w = np.fromiter(edges.values(), np.int64, count=n)
+    order = np.lexsort((dst, src))
+    src, dst, w = src[order], dst[order], w[order]
+    counts = np.bincount(src, minlength=vp).astype(np.int32)
+    row_ptr = np.zeros(vp + 1, dtype=np.int32)
+    np.cumsum(counts, out=row_ptr[1:])
+    col_idx = np.full((ecap,), vp - 1, dtype=np.int32)
+    col_idx[:n] = dst
+    edge_w = np.full((ecap,), INF, dtype=np.int32)
+    edge_w[:n] = w
+    out = Graph(row_ptr=jnp.asarray(row_ptr),
+                col_idx=jnp.asarray(col_idx),
+                edge_w=jnp.asarray(edge_w))
+    object.__setattr__(out, "_v_real", v_real)
+    object.__setattr__(out, "_version", version)
+    object.__setattr__(out, "_edge_map_cache", (version, edges))
+    return out
+
+
+def _apply_ops(edges: Dict[Tuple[int, int], int], batch: UpdateBatch,
+               v_real: int) -> Dict[Tuple[int, int], int]:
+    """Replay a batch into a COPY of the edge dict, slot order.
+    Semantics (deliberately closed over every input): insert keeps the
+    MIN of duplicate weights (the ``from_edge_list`` dedup rule);
+    delete of an absent edge is a no-op; reweight sets the weight
+    exactly — including increases — but only if the edge exists."""
+    out = dict(edges)
+    for i in range(batch.capacity):
+        o = int(batch.op[i])
+        if o == OP_PAD:
+            continue
+        u, v, w = int(batch.src[i]), int(batch.dst[i]), int(batch.w[i])
+        if not (0 <= u < v_real and 0 <= v < v_real):
+            raise ValueError(f"update slot {i}: edge ({u}, {v}) out of "
+                             f"range [0, {v_real})")
+        if o == OP_DELETE:
+            out.pop((u, v), None)
+            continue
+        if not 1 <= w < int(INF):
+            raise ValueError(f"update slot {i}: weight {w} outside "
+                             f"[1, INF)")
+        if o == OP_INSERT:
+            cur = out.get((u, v))
+            out[(u, v)] = w if cur is None else min(cur, w)
+        elif o == OP_REWEIGHT:
+            if (u, v) in out:
+                out[(u, v)] = w
+        else:
+            raise ValueError(f"update slot {i}: unknown op code {o}")
+    return out
+
+
+def apply_updates(g: Graph, batch: UpdateBatch,
+                  in_place: bool = False) -> Graph:
+    """Apply one :class:`UpdateBatch` to a streaming-shaped graph.
+
+    The host edge map is updated and the CSR rebuilt at the graph's
+    existing (V, E) shapes — col_idx/edge_w padding targets the
+    sentinel vertex — so every jitted function traced for the graph is
+    reused verbatim; only an edge-capacity overflow grows E (to the
+    next bucket, re-tracing once).  The result's :attr:`Graph.version`
+    is the input's plus one, which atomically invalidates the memoized
+    ``reverse()`` transpose, the balancer's pull enumerations, and the
+    edge map itself.
+
+    ``in_place=False`` (default) returns a NEW Graph and leaves ``g``
+    untouched — the serve layer relies on this to let in-flight
+    queries drain against the pre-update snapshot.  ``in_place=True``
+    swaps the arrays underneath ``g`` and bumps its version: every
+    existing reference observes the mutation (and, via the version
+    key, never a stale derived cache).
+
+    Requires a graph produced by :func:`streaming_graph` (or a prior
+    ``apply_updates``): without the sentinel vertex there is nowhere
+    safe to aim edge padding.
+    """
+    if "_v_real" not in g.__dict__:
+        raise ValueError("graph is not streaming-enabled; wrap it with "
+                         "streaming_graph(g) first")
+    v_real = real_vertices(g)
+    edges = _apply_ops(edge_map(g), batch, v_real)
+    new = _rebuild(edges, v_real, g.num_vertices, g.num_edges,
+                   version=g.version + 1)
+    if not in_place:
+        return new
+    object.__setattr__(g, "row_ptr", new.row_ptr)
+    object.__setattr__(g, "col_idx", new.col_idx)
+    object.__setattr__(g, "edge_w", new.edge_w)
+    g.bump_version()
+    object.__setattr__(g, "_edge_map_cache", (g.version, edges))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Net topology deltas.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NetDelta:
+    """The NET effect a batch has on the edge set — final state vs
+    pre-batch state per (u, v) pair, so in-batch churn (insert then
+    delete, duplicate inserts, no-op reweights) collapses away.
+
+    ``added``      — ``(u, v, w_new)`` edges absent before, present after;
+    ``removed``    — ``(u, v, w_pre)`` edges present before, absent after;
+    ``reweighted`` — ``(u, v, w_pre, w_new)`` edges present in both with
+    a changed weight.
+    """
+    added: List[Tuple[int, int, int]]
+    removed: List[Tuple[int, int, int]]
+    reweighted: List[Tuple[int, int, int, int]]
+
+    def is_empty(self) -> bool:
+        """True when the batch was a semantic no-op."""
+        return not (self.added or self.removed or self.reweighted)
+
+    def sources(self) -> List[int]:
+        """Sorted unique source endpoints of every changed edge — the
+        serve layer's eviction probe (DESIGN.md section 10): a change
+        at edge (u, v) can affect labels-from-s only if u lies in s's
+        reachable region, so cache entries whose region tag misses all
+        of these vertices provably survive the update."""
+        vs = {u for (u, _, _) in self.added}
+        vs |= {u for (u, _, _) in self.removed}
+        vs |= {u for (u, _, _, _) in self.reweighted}
+        return sorted(vs)
+
+
+def diff_batch(g: Graph, batch: UpdateBatch) -> NetDelta:
+    """Classify the net delta ``batch`` would cause on ``g`` WITHOUT
+    applying it (pure).  Call before :func:`apply_updates` (the serve
+    layer does) to know which cache regions to probe; the repair path
+    uses the same classification to choose seeds vs fallback."""
+    before = edge_map(g)
+    after = _apply_ops(before, batch, real_vertices(g))
+    touched = set()
+    for i in range(batch.capacity):
+        if int(batch.op[i]) != OP_PAD:
+            touched.add((int(batch.src[i]), int(batch.dst[i])))
+    added, removed, reweighted = [], [], []
+    for k in sorted(touched):
+        b, a = before.get(k), after.get(k)
+        if b is None and a is not None:
+            added.append((k[0], k[1], a))
+        elif b is not None and a is None:
+            removed.append((k[0], k[1], b))
+        elif b is not None and a is not None and b != a:
+            reweighted.append((k[0], k[1], b, a))
+    return NetDelta(added=added, removed=removed, reweighted=reweighted)
+
+
+# ---------------------------------------------------------------------------
+# Incremental label repair.
+# ---------------------------------------------------------------------------
+
+def _tight(app: str, lab: np.ndarray, u: int, v: int, w: int) -> bool:
+    """Does edge (u, v, w) currently *support* label[v]?  At a
+    min-combine fixpoint every edge satisfies lab[v] <= msg(lab[u]);
+    the edge is tight when equality holds — removing or worsening it
+    may invalidate lab[v], so the repair must fall back to a full
+    recompute (resumption can only lower labels, never raise them)."""
+    lu, lv = int(lab[u]), int(lab[v])
+    if app == "bfs":
+        return lu < int(INF) and lu + 1 == lv
+    if app == "sssp":
+        return lu < int(INF) and lu + w == lv
+    return lu == lv                     # cc: min-label propagation
+
+
+@dataclasses.dataclass
+class UpdateReport:
+    """What one :func:`stream_update` did: ``rounds`` of relax work
+    (0 for a semantic no-op), whether it had to ``full_recompute``
+    (a tight edge was removed/worsened), how many changed edges
+    ``seeds`` the incremental frontier started from, and the graph
+    ``version`` the labels now correspond to."""
+    rounds: int
+    full_recompute: bool
+    seeds: int
+    version: int
+
+
+@dataclasses.dataclass
+class StreamState:
+    """A live label fixpoint riding a mutating graph: the graph, the
+    app (key into :data:`STREAM_APPS`), the current labels (full
+    padded ``[V]``; the semantic slice is ``real_labels``), the query
+    source (None for cc), and the balancer config / execution mode the
+    repair rounds run with — identical knobs to a from-scratch driver
+    run, which is what parity is asserted against."""
+    g: Graph
+    app: str
+    labels: jax.Array
+    source: Optional[int]
+    cfg: BalancerConfig
+    mode: str
+    version: int
+
+    @property
+    def real_labels(self) -> np.ndarray:
+        """Host copy of the labels over REAL vertices only — padding
+        (including the sentinel) is repair scratch and is excluded
+        from every parity guarantee."""
+        return np.asarray(self.labels)[: real_vertices(self.g)]
+
+
+def _full_compute(g: Graph, app: str, source: Optional[int],
+                  cfg: BalancerConfig, mode: str):
+    """From-scratch driver run — both ``stream_init`` and the delete
+    fallback go through here, so incremental and fallback labels come
+    from the same machinery."""
+    if app == "bfs":
+        return drivers.bfs(g, source, cfg, mode=mode)
+    if app == "sssp":
+        return drivers.sssp(g, source, cfg, mode=mode)
+    if app == "cc":
+        return drivers.cc(g, cfg, mode=mode)
+    raise ValueError(f"unknown streaming app {app!r} "
+                     f"(have {sorted(STREAM_APPS)})")
+
+
+def stream_init(g: Graph, app: str, source: Optional[int] = None,
+                cfg: BalancerConfig = BalancerConfig(),
+                mode: str = "host") -> StreamState:
+    """Start maintaining ``app`` labels over a mutating graph: wraps
+    ``g`` to streaming shape if needed, runs the from-scratch driver
+    once, and returns the :class:`StreamState` that
+    :func:`stream_update` advances per batch.  ``source`` is required
+    for bfs/sssp and must be omitted for cc."""
+    if app not in STREAM_APPS:
+        raise ValueError(f"unknown streaming app {app!r} "
+                         f"(have {sorted(STREAM_APPS)})")
+    if (source is None) != (app == "cc"):
+        raise ValueError("bfs/sssp require a source; cc forbids one")
+    if "_v_real" not in g.__dict__:
+        g = streaming_graph(g)
+    res = _full_compute(g, app, source, cfg, mode)
+    return StreamState(g=g, app=app, labels=res.labels, source=source,
+                       cfg=cfg, mode=mode, version=g.version)
+
+
+def stream_update(state: StreamState, batch: UpdateBatch,
+                  in_place: bool = False,
+                  max_rounds: int = 10_000) -> UpdateReport:
+    """Apply a batch to the state's graph and repair its labels to the
+    new fixpoint.  Mutates ``state`` (graph, labels, version) and
+    returns an :class:`UpdateReport`.
+
+    Classification per the net delta (DESIGN.md section 10):
+
+    * any removed edge — or, for sssp, weight-increased edge — that is
+      *tight* under the current labels forces a **full recompute**;
+    * otherwise the added edges (plus sssp weight decreases) seed a
+      frontier via ``seed_from_edges`` and the ordinary round loop
+      resumes from the current labels (**incremental repair**);
+    * a semantic no-op batch costs zero rounds.
+
+    bfs and cc are weight-blind, so reweights never affect them.
+    ``in_place`` is forwarded to :func:`apply_updates` (the serve
+    layer keeps it False to preserve pre-update snapshots).
+    """
+    delta = diff_batch(state.g, batch)
+    g2 = apply_updates(state.g, batch, in_place=in_place)
+    app = state.app
+    lab = np.asarray(state.labels)
+
+    full = any(_tight(app, lab, u, v, w) for (u, v, w) in delta.removed)
+    seeds = [(u, v) for (u, v, _) in delta.added]
+    if app == "sssp" and not full:
+        for (u, v, wp, wn) in delta.reweighted:
+            if wn > wp and _tight("sssp", lab, u, v, wp):
+                full = True
+                break
+            if wn < wp:
+                seeds.append((u, v))
+
+    if full:
+        res = _full_compute(g2, app, state.source, state.cfg, state.mode)
+        labels, rounds = res.labels, res.rounds
+    elif seeds:
+        k = batch.capacity              # one shape per stream capacity
+        s = np.zeros((k,), np.int32)
+        d = np.zeros((k,), np.int32)
+        m = np.zeros((k,), bool)
+        for i, (u, v) in enumerate(seeds):
+            s[i], d[i], m[i] = u, v, True
+        frontier = seed_from_edges(jnp.asarray(s), jnp.asarray(d),
+                                   jnp.asarray(m), g2.num_vertices)
+        op = STREAM_APPS[app]
+        res = drivers.resume_loop(g2, state.labels, frontier, state.cfg,
+                                  op, max_rounds=max_rounds,
+                                  mode=state.mode)
+        labels, rounds = res.labels, res.rounds
+    else:
+        labels, rounds = state.labels, 0
+
+    state.g = g2
+    state.labels = labels
+    state.version = g2.version
+    return UpdateReport(rounds=rounds, full_recompute=full,
+                        seeds=len(seeds), version=g2.version)

@@ -12,6 +12,14 @@ deployments coexist (DESIGN.md section 8).
 
 Re-registering a graph id invalidates every entry for that id — the
 binding ``graph_id -> CSR`` changed, so cached labels may be stale.
+Streaming updates (DESIGN.md section 10) are finer-grained: each entry
+may carry a **region tag** — the query's reachable set ``labels <
+INF`` — and :meth:`invalidate_delta` evicts only entries whose region
+intersects the update's changed-edge sources.  An edge change at
+``(u, v)`` can alter labels-from-``s`` only if ``u`` is reachable from
+``s``, so an entry whose tag misses every changed source provably
+still holds for the NEW graph version and survives the bump — the
+serving hit rate never resets to zero on a localized mutation.
 
 Published arrays are **read-only**: ``put`` freezes the ndarray
 (``setflags(write=False)``) before it becomes shared state.  The same
@@ -57,20 +65,29 @@ class ResultCache:
             return None
         self._entries.move_to_end(k)
         self.hits += 1
-        return self._entries[k]
+        return self._entries[k][0]
 
     def put(self, graph_id: str, app: str, source: int,
-            strategy: Hashable, labels: np.ndarray) -> None:
+            strategy: Hashable, labels: np.ndarray,
+            region: Optional[np.ndarray] = None) -> None:
         """Insert/refresh an entry, evicting the least recently used
         entry when over capacity.  The array is frozen
         (``setflags(write=False)``) — it becomes shared state served to
         every future hit, so in-place mutation must raise rather than
-        corrupt the cache."""
+        corrupt the cache.
+
+        ``region`` optionally tags the entry with the query's
+        reachability summary (``bool[V]``, typically ``labels < INF``)
+        for :meth:`invalidate_delta`; an untagged entry is treated as
+        reaching everywhere, i.e. evicted by every delta."""
         if self.capacity == 0:
             return
         labels.setflags(write=False)
+        if region is not None:
+            region = np.asarray(region, dtype=bool)
+            region.setflags(write=False)
         k = self.key(graph_id, app, source, strategy)
-        self._entries[k] = labels
+        self._entries[k] = (labels, region)
         self._entries.move_to_end(k)
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
@@ -79,6 +96,26 @@ class ResultCache:
         """Drop every entry of ``graph_id`` (its CSR binding changed);
         returns how many entries were dropped."""
         stale = [k for k in self._entries if k[0] == graph_id]
+        for k in stale:
+            del self._entries[k]
+        return len(stale)
+
+    def invalidate_delta(self, graph_id: str, delta_vertices) -> int:
+        """Fine-grained streaming eviction (DESIGN.md section 10):
+        drop only the ``graph_id`` entries whose region tag intersects
+        ``delta_vertices`` (the changed-edge source endpoints, e.g.
+        ``NetDelta.sources()``).  Entries without a region tag are
+        conservatively evicted; entries whose tag misses every delta
+        vertex remain valid for the mutated graph and are KEPT.
+        Returns how many entries were dropped."""
+        delta = np.asarray(list(delta_vertices), dtype=np.int64)
+        stale = []
+        for k, (_, region) in self._entries.items():
+            if k[0] != graph_id:
+                continue
+            if region is None or (len(delta) and
+                                  bool(region[delta].any())):
+                stale.append(k)
         for k in stale:
             del self._entries[k]
         return len(stale)

@@ -34,25 +34,32 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import Graph
+from repro.core.graph import Graph, INF
 from repro.core.balancer import BalancerConfig
 from repro.core.frontier import rows_active, refill_rows, load_rows
 from repro.core.apps.drivers import QUERY_APPS, step_batch
+from repro.core.streaming import UpdateBatch, apply_updates, diff_batch
 
 from .queue import Query, QueryQueue, QUEUED, RUNNING, DONE
-from .scheduler import Scheduler, SlotView
+from .scheduler import Scheduler, SlotView, Decision
 from .cache import ResultCache
 from .stats import ServiceStats
 
 
 class _SlotBank:
     """Device state of one (graph_id, app) batch: ``[B, V]`` labels +
-    frontier, plus the host-side slot -> query map."""
+    frontier, plus the host-side slot -> query map.
+
+    ``stale=True`` marks a bank pinned to a superseded graph version
+    (DESIGN.md section 10): it admits and preempts nothing, its
+    occupants drain to completion against the pre-update snapshot it
+    holds in ``self.g``, and the engine deletes it once empty."""
 
     def __init__(self, g: Graph, app: str, num_slots: int) -> None:
         self.g = g
         self.app = app
         self.op, self.fill = QUERY_APPS[app]
+        self.stale = False
         v = g.num_vertices
         self.labels = jnp.full((num_slots, v), self.fill, jnp.int32)
         self.frontier = jnp.zeros((num_slots, v), dtype=bool)
@@ -135,6 +142,44 @@ class QueryService:
                 del self._banks[key]
         self._graphs[graph_id] = g
 
+    def apply_updates(self, graph_id: str, batch: UpdateBatch) -> int:
+        """Mutate a registered graph with a streaming
+        :class:`~repro.core.streaming.UpdateBatch` (DESIGN.md
+        section 10), WITHOUT quiescing the service.  Returns how many
+        cache entries the update evicted.
+
+        Unlike :meth:`register_graph`, this is legal while queries are
+        in flight — the binding advances *functionally*:
+
+        * the new CSR (same shapes, version + 1) replaces the binding
+          for all FUTURE admissions;
+        * busy slot banks keep their pre-update ``Graph`` snapshot and
+          are marked stale: they stop admitting and preempting, drain
+          their occupants against the topology those queries were
+          submitted under, and are deleted once empty (queued work for
+          the bank then admits into a fresh bank on the new version);
+        * cache eviction is fine-grained: only entries whose
+          reachability tag intersects the update's changed-edge
+          sources are dropped (:meth:`ResultCache.invalidate_delta`),
+          so untouched regions keep their hit rate across the bump;
+        * single-flight coalescing keys on the graph version, so a
+          post-update submitter never attaches to (or is answered by)
+          a pre-update in-flight computation.
+        """
+        if graph_id not in self._graphs:
+            raise ValueError(f"unknown graph {graph_id!r}")
+        g = self._graphs[graph_id]
+        delta = diff_batch(g, batch)
+        self._graphs[graph_id] = apply_updates(g, batch, in_place=False)
+        evicted = self.cache.invalidate_delta(graph_id, delta.sources())
+        for key in [k for k in self._banks if k[0] == graph_id]:
+            bank = self._banks[key]
+            if bank.busy():
+                bank.stale = True
+            else:
+                del self._banks[key]
+        return evicted
+
     # ---- submit / poll ---------------------------------------------------
 
     def submit(self, graph_id: str, app: str, source: int) -> int:
@@ -156,11 +201,17 @@ class QueryService:
             raise ValueError(f"source {source} out of range "
                              f"[0, {g.num_vertices})")
         cached = self.cache.get(graph_id, app, source, self.cfg)
-        key = self.cache.key(graph_id, app, source, self.cfg)
+        # single-flight keys include the graph VERSION (DESIGN.md
+        # section 10): a submission after apply_updates never coalesces
+        # onto a computation still draining against the old topology
+        key = self.cache.key(graph_id, app, source, self.cfg) \
+            + (g.version,)
         primary = None if cached is not None else self._inflight.get(key)
         q = self.queue.submit(
             graph_id, app, source, step=self._step,
             enqueue=cached is None and primary is None)
+        q.version = g.version
+        q.inflight_key = key
         if cached is not None:
             self._finish(q, cached, from_cache=True)
         elif primary is not None:
@@ -231,8 +282,8 @@ class QueryService:
         q.slot = None
         q.saved_state = None
         self.stats.record_done(q.rounds_in_system, from_cache)
-        key = self.cache.key(q.graph_id, q.app, q.source, self.cfg)
-        if self._inflight.get(key) == q.qid:
+        key = q.inflight_key
+        if key is not None and self._inflight.get(key) == q.qid:
             del self._inflight[key]
         for f in self._followers.pop(q.qid, ()):
             self._finish(f, labels, from_cache=True)
@@ -242,9 +293,16 @@ class QueryService:
         graph_id, app = key
         b = bank.num_slots
 
-        # 1. plan admissions/preemptions against current occupancy
-        decision = self.scheduler.plan(
-            bank.views(), self.queue.pending_count(graph_id, app))
+        # 1. plan admissions/preemptions against current occupancy.
+        #    A stale bank (superseded graph version) plans NOTHING: no
+        #    admissions — queued work waits for a fresh bank on the new
+        #    version — and no preemptions, so its occupants run to
+        #    completion on the snapshot they started on.
+        if bank.stale:
+            decision = Decision(preempt=(), admit=())
+        else:
+            decision = self.scheduler.plan(
+                bank.views(), self.queue.pending_count(graph_id, app))
 
         # 2. preempt: snapshot rows to host, requeue at the back
         #    (whole-array device_get — cheaper to dispatch than a
@@ -272,6 +330,20 @@ class QueryService:
             q.status = RUNNING
             q.slot = slot
             q.slot_rounds = 0
+            if q.version != bank.g.version:
+                # the graph mutated while this query queued: rebind it
+                # to the version this bank actually computes against —
+                # re-key its single-flight registration and drop any
+                # preemption snapshot (taken on the old topology)
+                if (q.inflight_key is not None and
+                        self._inflight.get(q.inflight_key) == q.qid):
+                    del self._inflight[q.inflight_key]
+                q.version = bank.g.version
+                if q.inflight_key is not None:
+                    q.inflight_key = (q.inflight_key[:-1]
+                                      + (bank.g.version,))
+                    self._inflight.setdefault(q.inflight_key, q.qid)
+                q.saved_state = None
             bank.slot_q[slot] = q
             self.admission_log.append((self._step, q.qid, slot))
             (resumed if q.saved_state is not None else fresh).append(
@@ -319,10 +391,20 @@ class QueryService:
                 if q is not None and not act[slot]]
         if done:
             l_host = np.asarray(bank.labels)
+            cur = self._graphs.get(graph_id)
             for slot in done:
                 q = bank.slot_q[slot]
                 labels = l_host[slot].copy()
-                self.cache.put(graph_id, app, q.source, self.cfg, labels)
+                # cache only results for the CURRENT graph version (a
+                # stale bank's drain products answer their submitters
+                # but must not poison future hits), tagged with the
+                # query's reachable region so streaming updates can
+                # evict at delta granularity (DESIGN.md section 10)
+                if cur is not None and q.version == cur.version:
+                    self.cache.put(graph_id, app, q.source, self.cfg,
+                                   labels, region=labels < INF)
                 self._finish(q, labels, from_cache=False)
                 bank.slot_q[slot] = None
+        if bank.stale and not bank.busy():
+            del self._banks[key]
         return True

@@ -43,6 +43,14 @@ class Query:
     preemptions: int = 0
     # preemption snapshot: (labels_row[V], frontier_row[V]) host copies
     saved_state: Optional[tuple] = None
+    # graph version the query is bound to: stamped at submission,
+    # rebound at admission if the graph mutated while it queued
+    # (DESIGN.md section 10) — results are cached only when this
+    # matches the graph's current version
+    version: int = 0
+    # single-flight registration key (includes the version), popped by
+    # the engine when the query completes or is rebound
+    inflight_key: Optional[tuple] = None
 
     @property
     def rounds_in_system(self) -> Optional[int]:

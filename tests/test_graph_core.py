@@ -150,3 +150,65 @@ def test_highest_out_degree_vertex():
     v = G.highest_out_degree_vertex(g)
     deg = np.asarray(g.out_degrees())
     assert deg[v] == deg.max()
+
+
+# ---------------------------------------------------------------------------
+# Versioned memoization (DESIGN.md section 10).
+# ---------------------------------------------------------------------------
+
+def test_reverse_cache_invalidated_by_version_bump():
+    """Regression: ``reverse()`` used to memoize with no invalidation
+    hook, so an in-place topology change kept serving the OLD
+    transpose.  The cache is now keyed on ``Graph.version``."""
+    from repro.core import streaming as S
+    g = S.streaming_graph(G.rmat(5, 4, seed=2))
+    rg_before = g.reverse()
+    assert g.reverse() is rg_before            # memoized while static
+    far = int(np.argmax(np.asarray(g.col_idx)[:1]))  # any real vertex
+    S.apply_updates(g, S.make_batch([("insert", 0, 1, 7)]),
+                    in_place=True)
+    rg_after = g.reverse()
+    assert rg_after is not rg_before
+    # the new transpose must contain the inserted edge reversed
+    em = S.edge_map(rg_after)
+    assert em.get((1, 0)) == 7 or (1, 0) in em
+
+
+def test_pull_after_mutation_matches_push():
+    """Regression for the stale ``_pull_enum`` hazard: a pull-direction
+    run AFTER an in-place mutation must agree with push on the mutated
+    graph (it used to traverse the pre-mutation enumeration)."""
+    from repro.core import streaming as S
+    from repro.core.balancer import BalancerConfig
+    from repro.core.apps import drivers
+
+    g = S.streaming_graph(G.rmat(5, 4, seed=2))
+    push = BalancerConfig(strategy="alb", threshold=64,
+                          direction="push")
+    pull = BalancerConfig(strategy="alb", threshold=64,
+                          direction="pull")
+    # populate both the reverse() and _pull_enum caches pre-mutation
+    drivers.bfs(g, 0, pull)
+    # mutate in place: add a shortcut that changes bfs levels
+    lab0 = np.asarray(drivers.bfs(g, 0, push).labels)
+    far = int(np.argmax(lab0[: S.real_vertices(g)]))
+    S.apply_updates(g, S.make_batch([("insert", 0, far, 1)]),
+                    in_place=True)
+    got_pull = np.asarray(drivers.bfs(g, 0, pull).labels)
+    got_push = np.asarray(drivers.bfs(g, 0, push).labels)
+    nv = S.real_vertices(g)
+    np.testing.assert_array_equal(got_pull[:nv], got_push[:nv])
+    assert got_pull[far] == 1                  # the mutation took
+
+
+def test_version_starts_at_zero_and_bumps():
+    g = G.rmat(4, 4, seed=0)
+    assert g.version == 0
+    g.bump_version()
+    assert g.version == 1
+    # pytree round-trips never carry the version (it lives outside
+    # the flattened leaves, so jit cache keys are unaffected)
+    import jax
+    leaves, treedef = jax.tree_util.tree_flatten(g)
+    g2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert g2.version == 0

@@ -501,3 +501,162 @@ def test_served_query_matches_standalone_adaptive_direction(rmat_g):
         np.testing.assert_array_equal(svc.poll(qid).result, ref)
     assert svc.cache.key("g", "bfs", sources[0], adaptive_cfg) \
         != svc.cache.key("g", "bfs", sources[0], CFG)
+
+
+# ---------------------------------------------------------------------------
+# Streaming updates through the service (DESIGN.md section 10).
+# ---------------------------------------------------------------------------
+
+def _two_component_graph():
+    """Two disjoint 10-vertex cycles: queries from component A (0-9)
+    can never reach component B (10-19), so their cached regions are
+    provably disjoint."""
+    src, dst = [], []
+    for base in (0, 10):
+        for i in range(10):
+            src.append(base + i)
+            dst.append(base + (i + 1) % 10)
+    from repro.core import streaming as S
+    return S.streaming_graph(
+        G.from_edge_list(np.asarray(src), np.asarray(dst), 20))
+
+
+def test_region_tagged_eviction_preserves_hit_rate_floor():
+    """A streaming update inside component B evicts B-region entries
+    but KEEPS component-A entries: the post-update resubmission of the
+    A query is a cache hit (the hit-rate floor), while the B query is
+    recomputed against the new topology."""
+    from repro.core import streaming as S
+    from repro.core.apps import bfs as bfs_app
+
+    g = _two_component_graph()
+    svc = QueryService(num_slots=4, cfg=CFG)
+    svc.register_graph("g", g)
+    qa0 = svc.submit("g", "bfs", 0)       # component A
+    qb0 = svc.submit("g", "bfs", 10)      # component B
+    svc.run()
+    assert len(svc.cache) == 2
+
+    # mutate inside component B only
+    evicted = svc.apply_updates(
+        "g", S.make_batch([("insert", 15, 17, 1)]))
+    assert evicted == 1                   # B evicted, A survived
+    assert len(svc.cache) == 1
+
+    qa1 = svc.submit("g", "bfs", 0)
+    qb1 = svc.submit("g", "bfs", 10)
+    svc.run()
+    assert svc.poll(qa1).from_cache       # the hit-rate floor
+    assert not svc.poll(qb1).from_cache   # intersecting entry evicted
+    g2 = svc._graphs["g"]
+    nv = S.real_vertices(g2)
+    for qid, s in ((qa1, 0), (qb1, 10)):
+        ref = np.asarray(bfs_app(g2, s, CFG).labels)[:nv]
+        np.testing.assert_array_equal(
+            np.asarray(svc.poll(qid).result)[:nv], ref)
+    # and the surviving entry really is byte-identical to a fresh run
+    assert svc.poll(qa1).result is svc.poll(qa0).result
+
+
+def test_untagged_entries_evicted_conservatively():
+    """Entries without a region tag (e.g. put directly) are evicted by
+    ANY delta — correctness never depends on the tag being present."""
+    cache = ResultCache(capacity=8)
+    lab = np.zeros(20, np.int32)
+    cache.put("g", "bfs", 0, CFG, lab)                  # no region
+    cache.put("g", "bfs", 1, CFG, np.ones(20, np.int32),
+              region=np.zeros(20, bool))                # empty region
+    assert cache.invalidate_delta("g", [5]) == 1        # untagged dies
+    assert cache.get("g", "bfs", 1, CFG) is not None    # tagged lives
+
+
+def test_single_flight_keys_on_graph_version():
+    """A submitter arriving AFTER apply_updates never coalesces onto a
+    pre-update in-flight computation: the stale primary answers only
+    its pre-update submitters (snapshot isolation), and the new
+    submitter is computed on the new topology."""
+    from repro.core import streaming as S
+    from repro.core.apps import sssp as sssp_app
+
+    g = S.streaming_graph(G.rmat(6, 4, seed=2))
+    svc = QueryService(num_slots=2, cfg=CFG)
+    svc.register_graph("g", g)
+
+    qa = svc.submit("g", "sssp", 0)       # primary, version 0
+    qa2 = svc.submit("g", "sssp", 0)      # coalesces onto qa
+    assert svc.poll(qa2).status == QUEUED
+    svc.step()                            # qa now running
+
+    snapshot = svc._banks[("g", "sssp")].g
+    svc.apply_updates("g", S.make_batch([("insert", 0, 9, 1)]))
+    qb = svc.submit("g", "sssp", 0)       # same query, NEW version
+    assert svc.poll(qb).version == svc._graphs["g"].version
+    assert svc.poll(qb).version != svc.poll(qa).version
+    svc.run()
+
+    nv = S.real_vertices(g)
+    ref_old = np.asarray(sssp_app(snapshot, 0, CFG).labels)[:nv]
+    ref_new = np.asarray(sssp_app(svc._graphs["g"], 0, CFG).labels)[:nv]
+    assert not np.array_equal(ref_old, ref_new)  # update was visible
+    np.testing.assert_array_equal(
+        np.asarray(svc.poll(qa).result)[:nv], ref_old)
+    np.testing.assert_array_equal(          # follower got qa's labels
+        np.asarray(svc.poll(qa2).result)[:nv], ref_old)
+    assert svc.poll(qa2).from_cache
+    np.testing.assert_array_equal(          # post-update submitter: new
+        np.asarray(svc.poll(qb).result)[:nv], ref_new)
+    assert not svc.poll(qb).from_cache
+
+
+def test_stale_bank_drains_and_is_replaced():
+    """apply_updates while a bank is busy: the bank finishes its
+    occupants on the old snapshot (no admissions, no preemptions),
+    then disappears; queued work admits into a fresh bank bound to the
+    new version, and results cached during the drain never poison the
+    new version's cache."""
+    from repro.core import streaming as S
+
+    g = S.streaming_graph(G.rmat(6, 4, seed=2))
+    svc = QueryService(num_slots=1, cfg=CFG)   # force queueing
+    svc.register_graph("g", g)
+    qa = svc.submit("g", "bfs", 0)
+    qb = svc.submit("g", "bfs", 1)             # waits for the one slot
+    svc.step()                                 # qa admitted
+    svc.apply_updates("g", S.make_batch([("insert", 1, 2, 1)]))
+    bank = svc._banks[("g", "bfs")]
+    assert bank.stale and bank.busy() == 1
+    svc.run()
+    # qa drained on the snapshot; its result was NOT cached (stale
+    # version) — only qb, computed on the new graph, was
+    assert svc.poll(qa).status == DONE
+    assert svc.poll(qb).status == DONE
+    assert svc.cache.get("g", "bfs", 1, CFG) is not None
+    got = svc.cache.get("g", "bfs", 0, CFG)
+    assert got is None or svc.poll(qb).version == svc._graphs["g"].version
+    # the replacement bank is bound to the current graph version
+    assert svc._banks[("g", "bfs")].g.version == svc._graphs["g"].version
+
+
+def test_queued_query_rebinds_to_new_version_at_admission():
+    """A query submitted pre-update but admitted post-update computes
+    on the NEW graph (late binding) and its result is cacheable for
+    the new version."""
+    from repro.core import streaming as S
+    from repro.core.apps import bfs as bfs_app
+
+    g = S.streaming_graph(G.rmat(6, 4, seed=2))
+    svc = QueryService(num_slots=1, cfg=CFG)
+    svc.register_graph("g", g)
+    qa = svc.submit("g", "bfs", 0)
+    qb = svc.submit("g", "bfs", 3)             # queued behind qa
+    svc.step()
+    svc.apply_updates("g", S.make_batch([("insert", 3, 5, 1)]))
+    svc.run()
+    assert svc.poll(qb).version == svc._graphs["g"].version
+    nv = S.real_vertices(g)
+    ref = np.asarray(bfs_app(svc._graphs["g"], 3, CFG).labels)[:nv]
+    np.testing.assert_array_equal(
+        np.asarray(svc.poll(qb).result)[:nv], ref)
+    # and a repeat is a hit on the new version
+    qc = svc.submit("g", "bfs", 3)
+    assert svc.poll(qc).from_cache

@@ -1,0 +1,452 @@
+"""Differential mutation-testing harness for the streaming layer
+(DESIGN.md section 10).
+
+The headline guarantee of the streaming subsystem is *bitwise parity*:
+after any sequence of edge updates, the incrementally repaired labels
+must equal a from-scratch run on the mutated graph — and both must
+equal an independent numpy oracle that never touches the jax relax
+machinery at all.  The harness replays seeded random mutation traces
+(inserts, deletes, reweights, no-ops, in-batch duplicates, padded
+slots) through ``stream_update`` across the full strategy x backend x
+mode matrix, checking all three sides after every batch.
+
+Also here: the jit cache-miss-counting test (``apply_updates`` and the
+repair rounds must never re-trace across batches — the fixed-shape
+contract), and the 4-device mirror-sync streaming parity case for the
+multidev CI job.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.core import graph as G
+from repro.core import balancer as B
+from repro.core import frontier as F
+from repro.core import streaming as S
+from repro.core.apps import drivers
+from repro.core.balancer import BalancerConfig
+
+INF = int(G.INF)
+STRATS = ["vertex", "twc", "edge_lb", "alb"]
+CAP = 16                      # one batch capacity for every trace
+CFG = BalancerConfig(strategy="alb", threshold=64)
+
+
+# ---------------------------------------------------------------------------
+# The oracle: an independent host-side fixpoint over an edge dict.  It
+# shares NO code with repro.core — separate label dtype, separate
+# iteration scheme, and its own replay of the update tuples — so a bug
+# in streaming.py (or in the relax machinery it resumes) cannot cancel
+# out of the comparison.
+# ---------------------------------------------------------------------------
+
+def oracle_apply(edges, updates):
+    """Replay raw update tuples into an edge dict: insert keeps the min
+    of duplicates, delete of an absent edge is a no-op, reweight only
+    touches existing edges (the documented batch semantics)."""
+    for t in updates:
+        kind, u, v = t[0], t[1], t[2]
+        if kind == "insert":
+            w = t[3]
+            edges[(u, v)] = min(edges.get((u, v), w), w)
+        elif kind == "delete":
+            edges.pop((u, v), None)
+        elif kind == "reweight":
+            if (u, v) in edges:
+                edges[(u, v)] = t[3]
+        else:                                          # pragma: no cover
+            raise AssertionError(t)
+    return edges
+
+
+def oracle_labels(edges, nv, app, source=None):
+    """From-scratch min-combine fixpoint on the host (int64 labels,
+    dense sweeps via ``np.minimum.at``)."""
+    if app == "cc":
+        lab = np.arange(nv, dtype=np.int64)
+    else:
+        lab = np.full(nv, INF, np.int64)
+        lab[source] = 0
+    if not edges:
+        return lab
+    es = np.array([k[0] for k in edges], np.int64)
+    ed = np.array([k[1] for k in edges], np.int64)
+    ew = np.array(list(edges.values()), np.int64)
+    while True:
+        if app == "bfs":
+            msg = np.where(lab[es] < INF, lab[es] + 1, INF)
+        elif app == "sssp":
+            msg = np.where(lab[es] < INF, lab[es] + ew, INF)
+        else:
+            msg = lab[es]
+        new = lab.copy()
+        np.minimum.at(new, ed, msg)
+        if np.array_equal(new, lab):
+            return lab
+        lab = new
+
+
+# ---------------------------------------------------------------------------
+# Seeded random mutation traces.
+# ---------------------------------------------------------------------------
+
+def random_trace(rng, edges0, nv, n_batches, max_updates=12):
+    """A list of batches, each a list of raw update tuples.  The mix
+    deliberately includes semantic no-ops (deleting absent edges,
+    reweighting absent edges, re-inserting an edge at a worse weight)
+    and in-batch duplicates, and every batch under-fills its capacity
+    so padding slots are always exercised."""
+    edges = dict(edges0)
+    trace = []
+    for _ in range(n_batches):
+        ups = []
+        for _ in range(int(rng.integers(1, max_updates + 1))):
+            r = float(rng.random())
+            keys = list(edges)
+            if r < 0.40 or not keys:
+                u, v = int(rng.integers(nv)), int(rng.integers(nv))
+                ups.append(("insert", u, v, int(rng.integers(1, 20))))
+            elif r < 0.60:
+                u, v = keys[int(rng.integers(len(keys)))]
+                ups.append(("delete", u, v))
+            elif r < 0.75:
+                u, v = keys[int(rng.integers(len(keys)))]
+                ups.append(("reweight", u, v, int(rng.integers(1, 20))))
+            elif r < 0.85:
+                # no-op: delete / reweight an (almost surely) absent edge
+                u, v = int(rng.integers(nv)), int(rng.integers(nv))
+                if (u, v) in edges:
+                    continue
+                kind = "delete" if rng.random() < 0.5 else "reweight"
+                ups.append((kind, u, v) if kind == "delete"
+                           else (kind, u, v, int(rng.integers(1, 20))))
+            else:
+                # in-batch duplicate of the previous update's edge
+                if ups:
+                    prev = ups[-1]
+                    ups.append(("insert", prev[1], prev[2],
+                                int(rng.integers(1, 20))))
+        edges = oracle_apply(edges, ups)
+        trace.append(ups)
+    return trace
+
+
+@pytest.fixture(scope="module")
+def base_graph():
+    return G.rmat(5, 3, seed=7)          # 32 vertices, ~60 edges
+
+
+@pytest.fixture(scope="module")
+def traces(base_graph):
+    """One fixed trace per app, shared by every matrix cell so the 48
+    configurations are compared on identical mutation sequences."""
+    out = {}
+    for i, app in enumerate(S.STREAM_APPS):
+        g = G.symmetrized(base_graph) if app == "cc" else base_graph
+        rng = np.random.default_rng(100 + i)
+        out[app] = random_trace(rng, S.edge_map(g), g.num_vertices,
+                                n_batches=3)
+    return out
+
+
+def _replay_and_check(g0, app, cfg, mode, trace):
+    """The differential core: replay a trace through stream_update,
+    asserting after EVERY batch that the maintained labels match (a)
+    the numpy oracle and (b) a from-scratch driver run on the mutated
+    graph — bitwise, over the real-vertex slice."""
+    nv = g0.num_vertices
+    source = None if app == "cc" else G.highest_out_degree_vertex(g0)
+    st = S.stream_init(S.streaming_graph(g0), app, source=source,
+                       cfg=cfg, mode=mode)
+    edges = dict(S.edge_map(st.g))
+    for ups in trace:
+        batch = S.make_batch(ups, capacity=CAP)
+        report = S.stream_update(st, batch)
+        edges = oracle_apply(edges, ups)
+        want = oracle_labels(edges, nv, app, source)
+        got = st.real_labels.astype(np.int64)
+        np.testing.assert_array_equal(got, want)
+        ref = S._full_compute(st.g, app, source, cfg, mode).labels
+        np.testing.assert_array_equal(
+            st.real_labels, np.asarray(ref)[:nv])
+        assert report.version == st.g.version
+
+
+# ---------------------------------------------------------------------------
+# The 48-cell matrix: 3 apps x 4 strategies x {xla, pallas} x
+# {host, spmd}.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["host", "spmd"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("strategy", STRATS)
+@pytest.mark.parametrize("app", sorted(S.STREAM_APPS))
+def test_differential_matrix(base_graph, traces, app, strategy,
+                             use_pallas, mode):
+    g0 = G.symmetrized(base_graph) if app == "cc" else base_graph
+    cfg = BalancerConfig(strategy=strategy, threshold=64,
+                         use_pallas=use_pallas)
+    _replay_and_check(g0, app, cfg, mode, traces[app])
+
+
+@pytest.mark.parametrize("mode", ["host", "spmd"])
+@pytest.mark.parametrize("direction", ["pull", "adaptive"])
+@pytest.mark.parametrize("app", ["bfs", "sssp"])
+def test_differential_directions(base_graph, traces, app, direction,
+                                 mode):
+    """Repair rounds under pull/adaptive traversal (push is the matrix
+    default above): the version-keyed reverse()/pull-enum caches must
+    rebuild per mutation, or these would relax the stale transpose."""
+    cfg = BalancerConfig(strategy="alb", threshold=64,
+                         direction=direction)
+    _replay_and_check(base_graph, app, cfg, mode, traces[app])
+
+
+# ---------------------------------------------------------------------------
+# Directed edge cases (single config: they exercise streaming.py
+# classification logic, which is strategy-independent).
+# ---------------------------------------------------------------------------
+
+def test_empty_batch_is_zero_rounds(base_graph):
+    st = S.stream_init(S.streaming_graph(base_graph), "bfs", source=0,
+                       cfg=CFG)
+    v0 = st.version
+    before = st.real_labels.copy()
+    rep = S.stream_update(st, S.make_batch([], capacity=CAP))
+    assert rep.rounds == 0 and rep.seeds == 0 and not rep.full_recompute
+    assert st.version == v0 + 1           # version still advances
+    np.testing.assert_array_equal(st.real_labels, before)
+
+
+def test_noop_batch_is_zero_rounds(base_graph):
+    st = S.stream_init(S.streaming_graph(base_graph), "sssp", source=0,
+                       cfg=CFG)
+    em = S.edge_map(st.g)
+    (u, v), w = next(iter(em.items()))
+    absent = next((a, b) for a in range(st.g.num_vertices)
+                  for b in range(st.g.num_vertices)
+                  if (a, b) not in em)
+    rep = S.stream_update(st, S.make_batch([
+        ("insert", u, v, w + 5),          # worse duplicate: min keeps w
+        ("delete", absent[0], absent[1]),  # absent: no-op
+        ("reweight", absent[0], absent[1], 3),
+    ], capacity=CAP))
+    assert rep.rounds == 0 and rep.seeds == 0 and not rep.full_recompute
+
+
+def test_reweight_is_noop_for_weight_blind_apps(base_graph):
+    g = G.symmetrized(base_graph)
+    for app, source in (("bfs", 0), ("cc", None)):
+        st = S.stream_init(S.streaming_graph(g), app, source=source,
+                           cfg=CFG)
+        em = S.edge_map(st.g)
+        (u, v), w = next(iter(em.items()))
+        rep = S.stream_update(st, S.make_batch(
+            [("reweight", u, v, w + 17)], capacity=CAP))
+        assert rep.rounds == 0 and not rep.full_recompute, app
+
+
+def test_tight_delete_forces_full_recompute(base_graph):
+    src = G.highest_out_degree_vertex(base_graph)
+    st = S.stream_init(S.streaming_graph(base_graph), "sssp",
+                       source=src, cfg=CFG)
+    lab = st.real_labels
+    em = S.edge_map(st.g)
+    tight = next((u, v) for (u, v), w in em.items()
+                 if lab[u] < INF and lab[u] + w == lab[v])
+    rep = S.stream_update(st, S.make_batch(
+        [("delete", tight[0], tight[1])], capacity=CAP))
+    assert rep.full_recompute
+    ref = drivers.sssp(st.g, src, CFG).labels
+    np.testing.assert_array_equal(
+        st.real_labels, np.asarray(ref)[:base_graph.num_vertices])
+
+
+def test_slack_delete_stays_incremental(base_graph):
+    src = G.highest_out_degree_vertex(base_graph)
+    st = S.stream_init(S.streaming_graph(base_graph), "sssp",
+                       source=src, cfg=CFG)
+    lab = st.real_labels
+    em = S.edge_map(st.g)
+    slack = next(((u, v) for (u, v), w in em.items()
+                  if not (lab[u] < INF and lab[u] + w == lab[v])), None)
+    if slack is None:
+        pytest.skip("no slack edge in this graph")
+    rep = S.stream_update(st, S.make_batch(
+        [("delete", slack[0], slack[1])], capacity=CAP))
+    assert not rep.full_recompute and rep.rounds == 0
+    ref = drivers.sssp(st.g, src, CFG).labels
+    np.testing.assert_array_equal(
+        st.real_labels, np.asarray(ref)[:base_graph.num_vertices])
+
+
+def test_update_validation(base_graph):
+    g = S.streaming_graph(base_graph)
+    nv_real = S.real_vertices(g)
+    with pytest.raises(ValueError, match="out of range"):
+        S.apply_updates(g, S.make_batch([("insert", 0, nv_real, 1)]))
+    with pytest.raises(ValueError, match="weight"):
+        S.apply_updates(g, S.make_batch([("insert", 0, 1, 0)]))
+    with pytest.raises(ValueError, match="streaming-enabled"):
+        S.apply_updates(base_graph, S.make_batch([("insert", 0, 1, 1)]))
+    with pytest.raises(ValueError, match="capacity"):
+        S.make_batch([("insert", 0, 1, 1)] * 5, capacity=4)
+
+
+def test_in_place_update_bumps_version_and_repairs(base_graph):
+    """in_place=True mutates the SAME Graph object: every reference
+    observes the new topology and the bumped version."""
+    st = S.stream_init(S.streaming_graph(base_graph), "bfs", source=0,
+                       cfg=CFG)
+    g_ref = st.g
+    v0 = g_ref.version
+    far = int(np.argmax(st.real_labels))  # worst-reached vertex
+    S.stream_update(st, S.make_batch([("insert", 0, far, 1)],
+                                     capacity=CAP), in_place=True)
+    assert st.g is g_ref and g_ref.version == v0 + 1
+    assert (far, ) and st.real_labels[far] == 1
+    ref = drivers.bfs(g_ref, 0, CFG).labels
+    np.testing.assert_array_equal(
+        st.real_labels, np.asarray(ref)[:base_graph.num_vertices])
+
+
+def test_capacity_overflow_grows_edge_array():
+    # 64 vertices so >1024 distinct edges exist to overflow the
+    # minimum edge bucket
+    g = S.streaming_graph(G.uniform_random(64, avg_degree=4, seed=3))
+    ecap0 = g.num_edges
+    nv = S.real_vertices(g)
+    rng = np.random.default_rng(3)
+    ups = []
+    seen = set(S.edge_map(g))
+    while len(seen) < ecap0 + 1:                 # force past capacity
+        u, v = int(rng.integers(nv)), int(rng.integers(nv))
+        if (u, v) not in seen:
+            seen.add((u, v))
+            ups.append(("insert", u, v, 1))
+    g2 = S.apply_updates(g, S.make_batch(ups))
+    assert g2.num_edges > ecap0
+    assert len(S.edge_map(g2)) == len(seen)
+
+
+# ---------------------------------------------------------------------------
+# The fixed-shape contract: update/repair cycles never re-trace.
+# ---------------------------------------------------------------------------
+
+def test_apply_updates_never_recompiles(base_graph):
+    """After warmup, arbitrarily many update/repair cycles — hitting
+    both the incremental path and the full-recompute fallback, in both
+    execution modes — add ZERO entries to any jitted round function's
+    trace cache: the acceptance criterion of DESIGN.md section 10."""
+    src = G.highest_out_degree_vertex(base_graph)
+    states = [S.stream_init(S.streaming_graph(base_graph), "sssp",
+                            source=src, cfg=CFG, mode=m)
+              for m in ("host", "spmd")]
+    rng = np.random.default_rng(42)
+    nv = base_graph.num_vertices
+
+    def cycle(st):
+        trace = random_trace(rng, S.edge_map(st.g), nv, n_batches=2)
+        for ups in trace:
+            S.stream_update(st, S.make_batch(ups, capacity=CAP))
+
+    for st in states:                     # warmup traces every shape
+        cycle(st)
+        # force the delete-fallback path once too
+        lab = st.real_labels
+        em = S.edge_map(st.g)
+        tight = next(((u, v) for (u, v), w in em.items()
+                      if lab[u] < INF and lab[u] + w == lab[v]), None)
+        if tight is not None:
+            S.stream_update(st, S.make_batch([("delete", *tight)],
+                                             capacity=CAP))
+
+    watched = {
+        "host_round_counts": B._host_round_counts,
+        "bin_pass": B._bin_pass,
+        "lb_pass": B._lb_pass,
+        "gather_bin": B._gather_bin,
+        "relax_spmd": B.relax_spmd,
+        "compact": F.compact,
+        "seed_from_edges": F.seed_from_edges,
+    }
+    sizes = {k: f._cache_size() for k, f in watched.items()}
+    assert sizes["seed_from_edges"] >= 1  # the seeding scatter traced
+
+    for _ in range(3):
+        for st in states:
+            cycle(st)
+
+    after = {k: f._cache_size() for k, f in watched.items()}
+    assert after == sizes, (sizes, after)
+
+
+# ---------------------------------------------------------------------------
+# Optional hypothesis sweep (the container may not ship hypothesis;
+# the seeded-RNG matrix above is the tier-1 guarantee either way).
+# ---------------------------------------------------------------------------
+
+def test_hypothesis_random_updates(base_graph):
+    hyp = pytest.importorskip(
+        "hypothesis", reason="hypothesis not installed")
+    from hypothesis import given, settings, strategies as hst
+
+    nv = base_graph.num_vertices
+    update = hst.one_of(
+        hst.tuples(hst.just("insert"), hst.integers(0, nv - 1),
+                   hst.integers(0, nv - 1), hst.integers(1, 30)),
+        hst.tuples(hst.just("delete"), hst.integers(0, nv - 1),
+                   hst.integers(0, nv - 1)),
+        hst.tuples(hst.just("reweight"), hst.integers(0, nv - 1),
+                   hst.integers(0, nv - 1), hst.integers(1, 30)))
+
+    @settings(max_examples=20, deadline=None)
+    @given(hst.lists(hst.lists(update, max_size=CAP), max_size=3))
+    def check(trace):
+        st = S.stream_init(S.streaming_graph(base_graph), "sssp",
+                           source=0, cfg=CFG)
+        edges = dict(S.edge_map(st.g))
+        for ups in trace:
+            S.stream_update(st, S.make_batch(ups, capacity=CAP))
+            edges = oracle_apply(edges, ups)
+            np.testing.assert_array_equal(
+                st.real_labels.astype(np.int64),
+                oracle_labels(edges, nv, "sssp", 0))
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# 4-device mirror-sync streaming parity (multidev CI job).
+# ---------------------------------------------------------------------------
+
+NDEV = 4
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < NDEV,
+    reason=f"needs {NDEV} devices (CI sets "
+           f"XLA_FLAGS=--xla_force_host_platform_device_count={NDEV})")
+
+
+@multidevice
+@pytest.mark.parametrize("policy", ["oec", "cvc"])
+def test_streaming_labels_match_mirror_sync(base_graph, traces, policy):
+    """After a mutation trace, the incrementally maintained labels must
+    equal a distributed mirror-sync BFS over the mutated graph: the
+    streaming layer and the Gluon substrate agree on what the current
+    topology's fixpoint is."""
+    from repro.core.partition import partition
+    from repro.core import gluon
+
+    src = G.highest_out_degree_vertex(base_graph)
+    st = S.stream_init(S.streaming_graph(base_graph), "bfs",
+                       source=src, cfg=CFG)
+    for ups in traces["bfs"]:
+        S.stream_update(st, S.make_batch(ups, capacity=CAP))
+
+    mesh = gluon.device_mesh(NDEV)
+    sg, meta = partition(S.unpadded(st.g), NDEV, policy)
+    labels, _, _, _ = gluon.bfs_distributed(
+        sg, mesh, src, CFG, collect_stats=True, sync="mirror", meta=meta)
+    nv = base_graph.num_vertices
+    np.testing.assert_array_equal(np.asarray(labels)[:nv],
+                                  st.real_labels)
