@@ -6,7 +6,10 @@ boundary exchange, DESIGN.md section 6).
 Besides the CSV rows, writes ``benchmarks/out/fig6_scaling.json`` with
 per-round communication volume (``bytes_synced``, summed over devices)
 so the perf trajectory tracks what actually crosses the interconnect,
-not just wall clock.
+not just wall clock.  Each row also carries ``mode`` (host vs fused
+round loop, DESIGN.md section 11) and ``host_transfers`` — the number
+of blocking device->host sync points the traversal performed (one per
+round for the host loop, zero for the fused ``lax.while_loop``).
 
 Re-execs itself with a forced host device count so the multi-device
 run never contaminates the parent process's single-device state.
@@ -44,7 +47,7 @@ def inner():
     from repro.core import graph as G
     from repro.core.partition import partition
     from repro.core import gluon
-    from repro.core.balancer import BalancerConfig
+    from repro.core.balancer import BalancerConfig, host_transfer_count
     from .common import emit
 
     g = G.rmat(13, 16, seed=1)
@@ -56,15 +59,8 @@ def inner():
         for strat in ["twc", "alb"]:
             cfg = BalancerConfig(strategy=strat, threshold=1024)
             for sync in ["replicated", "mirror"]:
-                # warmup (compile)
-                gluon.sssp_distributed(sg, mesh, src, cfg, max_rounds=200,
-                                       sync=sync, meta=meta)
-                t0 = time.perf_counter()
-                labels, rounds, _ = gluon.sssp_distributed(
-                    sg, mesh, src, cfg, max_rounds=200,
-                    sync=sync, meta=meta)
-                secs = time.perf_counter() - t0
                 # separate instrumented run: comm volume per round
+                # (host mode only — fused + collect_stats is rejected)
                 _, _, _, stats = gluon.sssp_distributed(
                     sg, mesh, src, cfg, max_rounds=200,
                     collect_stats=True, sync=sync, meta=meta)
@@ -72,14 +68,29 @@ def inner():
                     int(sum(st.bytes_synced for st in per_round))
                     for per_round in stats]
                 total_bytes = sum(bytes_per_round)
-                emit(f"fig6/sssp/{strat}/gpus{ndev}/{sync}", secs,
-                     f"rounds={rounds};bytes_total={total_bytes}")
-                rows.append(dict(
-                    app="sssp", strategy=strat, num_devices=ndev,
-                    sync=sync, seconds=secs, rounds=rounds,
-                    bytes_synced_per_round=bytes_per_round,
-                    bytes_synced_total=total_bytes,
-                    replication_factor=meta.replication_factor))
+                for mode in ["host", "fused"]:
+                    # warmup (compile)
+                    gluon.sssp_distributed(sg, mesh, src, cfg,
+                                           max_rounds=200, sync=sync,
+                                           meta=meta, mode=mode)
+                    t_sync = host_transfer_count()
+                    t0 = time.perf_counter()
+                    labels, rounds, _ = gluon.sssp_distributed(
+                        sg, mesh, src, cfg, max_rounds=200,
+                        sync=sync, meta=meta, mode=mode)
+                    secs = time.perf_counter() - t0
+                    ht = host_transfer_count() - t_sync
+                    emit(f"fig6/sssp/{strat}/gpus{ndev}/{sync}/{mode}",
+                         secs,
+                         f"rounds={rounds};bytes_total={total_bytes};"
+                         f"ht={ht}")
+                    rows.append(dict(
+                        app="sssp", strategy=strat, num_devices=ndev,
+                        sync=sync, mode=mode, seconds=secs,
+                        rounds=rounds, host_transfers=ht,
+                        bytes_synced_per_round=bytes_per_round,
+                        bytes_synced_total=total_bytes,
+                        replication_factor=meta.replication_factor))
     os.makedirs(os.path.dirname(OUT_JSON), exist_ok=True)
     with open(OUT_JSON, "w") as f:
         json.dump(dict(

@@ -1,0 +1,165 @@
+"""Device-resident planning: fused vs host round loops (DESIGN.md
+section 11).
+
+``mode="host"`` drivers run the inspector on the host: every round
+pays one blocking device->host transfer to read the fused counts
+before the next round can launch.  ``mode="fused"`` moves the whole
+plan on device — bin selection, the huge-bin LB trigger, and the
+Beamer push/pull rule run as traced ``lax.cond``s inside ONE
+``lax.while_loop``, so a full traversal costs zero per-round host
+syncs.  This harness times both modes per (app x graph) and reports
+the round counts plus the ``host_transfers`` counter each traversal
+actually performed.
+
+Rows: ``fused_<app>_<graph>_<mode>,us_per_run,rounds=N ht=K``.
+
+Run directly (also wired as the ``fused`` selector of benchmarks.run):
+
+    PYTHONPATH=src python -m benchmarks.fig_fused          # sweep
+    PYTHONPATH=src python -m benchmarks.fig_fused --smoke  # CI
+
+``--smoke`` shrinks the input and gates on STRUCTURAL invariants only
+(never wall clock — fused wins by removing sync latency, which CI
+timers cannot measure reliably):
+
+1. parity — fused labels are bitwise equal to host labels and the
+   round counts match, per app x graph;
+2. zero-sync — the fused traversal reports ``host_transfers == 0``
+   (the loop never blocked on a device value), both on the
+   :class:`repro.core.apps.AppResult` and on every per-round stat
+   materialized from the device-accumulated buffers, while the host
+   traversal reports at least one transfer per round;
+3. trace — the fused run's recorded per-round direction equals
+   :func:`repro.core.balancer.resolve_direction` replayed on the host
+   over the device-recorded per-round counts (frontier size and
+   out-edge total), i.e. the on-device ``lax.cond`` made exactly the
+   decisions the host threshold rule would have.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.apps import bfs, cc, pagerank, sssp
+from repro.core.balancer import BalancerConfig, resolve_direction
+
+from .common import timed, emit
+
+MODES = ["host", "fused"]
+
+
+def _inputs(smoke: bool) -> dict:
+    if smoke:
+        return {"rmat": G.rmat(9, 8, seed=1),
+                "road": G.road_grid(16, seed=1)}
+    return {"rmat": G.rmat(12, 16, seed=1),
+            "road": G.road_grid(64, seed=1)}
+
+
+def _gate_traversal(tag: str, host, fused, cfg, v: int, e: int) -> int:
+    """The three structural gates for one app x graph cell; returns
+    the number of failures (0 = all invariants hold)."""
+    failures = 0
+    # 1. parity: fused is an execution strategy, not an approximation
+    if not np.array_equal(np.asarray(fused.labels),
+                          np.asarray(host.labels)):
+        print(f"FAIL: {tag}: fused labels != host labels",
+              file=sys.stderr)
+        failures += 1
+    if fused.rounds != host.rounds:
+        print(f"FAIL: {tag}: fused ran {fused.rounds} rounds, host "
+              f"ran {host.rounds}", file=sys.stderr)
+        failures += 1
+    # 2. zero-sync: the while_loop never blocked on a device value
+    if fused.host_transfers != 0:
+        print(f"FAIL: {tag}: fused traversal performed "
+              f"{fused.host_transfers} host transfers (want 0)",
+              file=sys.stderr)
+        failures += 1
+    if any(st.host_transfers != 0 for st in fused.stats):
+        print(f"FAIL: {tag}: a fused per-round stat claims a host "
+              f"transfer", file=sys.stderr)
+        failures += 1
+    if host.host_transfers < host.rounds:
+        print(f"FAIL: {tag}: host traversal reports "
+              f"{host.host_transfers} transfers for {host.rounds} "
+              f"rounds — instrumentation broke", file=sys.stderr)
+        failures += 1
+    # 3. trace: replay the host threshold rule over the counts the
+    #    device accumulated; the on-device lax.cond must agree
+    for i, st in enumerate(fused.stats):
+        want = resolve_direction(cfg, st.frontier_size,
+                                 st.frontier_edges, v, e)
+        if st.direction != want:
+            print(f"FAIL: {tag} round {i}: device picked "
+                  f"{st.direction}, threshold rule over the recorded "
+                  f"counts says {want}", file=sys.stderr)
+            failures += 1
+    return failures
+
+
+def run(smoke: bool = False) -> int:
+    cfg = BalancerConfig(strategy="alb", threshold=64,
+                         direction="adaptive")
+    apps = {"bfs": bfs, "sssp": sssp}
+    failures = 0
+    for gname, g in _inputs(smoke).items():
+        src = G.highest_out_degree_vertex(g)
+        v, e = g.num_vertices, g.num_edges
+        for app_name, driver in apps.items():
+            results = {}
+            for mode in MODES:
+                out = driver(g, src, cfg, direction="adaptive",
+                             collect_stats=True, mode=mode)
+                secs = timed(lambda m=mode: driver(g, src, cfg,
+                                                   direction="adaptive",
+                                                   mode=m))
+                emit(f"fused_{app_name}_{gname}_{mode}", secs,
+                     f"rounds={out.rounds} ht={out.host_transfers}")
+                results[mode] = out
+            failures += _gate_traversal(f"{app_name}/{gname}",
+                                        results["host"],
+                                        results["fused"], cfg, v, e)
+        # vertex programs without a source: parity + zero-sync only
+        # (cc runs on the symmetrized graph; pagerank is push-only)
+        if not smoke or gname == "road":
+            sg = G.symmetrized(g)
+            ch = cc(sg, cfg, collect_stats=True)
+            cf = cc(sg, cfg, collect_stats=True, mode="fused")
+            emit(f"fused_cc_{gname}_host", 0.0,
+                 f"rounds={ch.rounds} ht={ch.host_transfers}")
+            emit(f"fused_cc_{gname}_fused", 0.0,
+                 f"rounds={cf.rounds} ht={cf.host_transfers}")
+            failures += _gate_traversal(f"cc/{gname}", ch, cf, cfg,
+                                        sg.num_vertices, sg.num_edges)
+            pcfg = BalancerConfig(strategy="alb", threshold=64)
+            ph = pagerank(g, cfg=pcfg)
+            pf = pagerank(g, cfg=pcfg, mode="fused")
+            if not np.array_equal(np.asarray(pf.labels),
+                                  np.asarray(ph.labels)):
+                print(f"FAIL: pagerank/{gname}: fused ranks != host "
+                      f"ranks", file=sys.stderr)
+                failures += 1
+            if pf.host_transfers != 0:
+                print(f"FAIL: pagerank/{gname}: fused performed "
+                      f"{pf.host_transfers} host transfers",
+                      file=sys.stderr)
+                failures += 1
+    return failures
+
+
+def main() -> int:
+    smoke = "--smoke" in sys.argv[1:]
+    failures = run(smoke=smoke)
+    if failures:
+        return 1
+    if smoke:
+        print("smoke OK: fused parity + zero host syncs + direction "
+              "trace replay")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,8 +25,9 @@ queue has work.  This harness measures both effects:
 
 Rows: ``serve_qps_{continuous|static}_b<B>``, ``serve_cached_b<B>``
 (derived: hit rate), ``serve_qps_nocache_{continuous|static}_b<B>``,
-``serve_steps_b<B>``, ``serve_poisson_r<rate>`` (derived:
-p50/p95/occupancy).
+``serve_steps_b<B>``, ``serve_transfers_b<B>`` (derived: blocking
+host transfers, host vs fused stepping), ``serve_poisson_r<rate>``
+(derived: p50/p95/occupancy).
 
 Run directly (also the ``serve`` selector of benchmarks.run):
 
@@ -36,7 +37,9 @@ Run directly (also the ``serve`` selector of benchmarks.run):
 ``--smoke`` shrinks the input and exits non-zero unless (a) service
 queries/sec on the Zipf workload >= the static-batch baseline and
 (b) cache-off continuous serving needs no more rounds than the
-baseline — the acceptance gates for the serving layer.
+baseline, and (c) fused-mode serving (DESIGN.md section 11) pays
+strictly fewer blocking host transfers than host-mode stepping —
+the acceptance gates for the serving layer.
 """
 from __future__ import annotations
 
@@ -67,10 +70,11 @@ def _traffic(sources: list, n: int, seed: int = 7) -> list:
     return [sources[i] for i in order]
 
 
-def _serve_all(g, sources, cfg, b, app="sssp", cache_capacity=0):
+def _serve_all(g, sources, cfg, b, app="sssp", cache_capacity=0,
+               mode="host"):
     """Saturated continuous serving: submit everything, drain."""
     svc = QueryService(num_slots=b, cfg=cfg,
-                       cache_capacity=cache_capacity)
+                       cache_capacity=cache_capacity, mode=mode)
     svc.register_graph("g", g)
     for s in sources:
         svc.submit("g", app, s)
@@ -177,6 +181,20 @@ def run(smoke: bool = False) -> dict:
          f"continuous={steps_c};static={rounds_s};"
          f"occupancy={svc.stats.occupancy:.3f}")
 
+    # ---- fused stepping: sync points, not timers ---------------------
+    # the fused engine runs chunks of fused_rounds balancer rounds per
+    # service step inside one lax.while_loop, paying one blocking
+    # observation per chunk instead of one per round (DESIGN.md
+    # section 11); deterministic — labels are bitwise those of host
+    # stepping, so only the transfer counts differ
+    svcf = _serve_all(g, distinct, cfg, b, mode="fused")
+    results["summary_host"] = svc.stats.summary()
+    results["summary_fused"] = svcf.stats.summary()
+    emit(f"serve_transfers_b{b}", 0.0,
+         f"host={svc.stats.host_transfers};"
+         f"fused={svcf.stats.host_transfers};"
+         f"fused_steps={svcf.stats.steps}")
+
     # ---- latency vs Poisson arrival rate ------------------------------
     rates = [0.5, 2.0] if smoke else [0.25, 0.5, 1.0, 2.0, 4.0]
     for rate in rates:
@@ -206,6 +224,13 @@ def main() -> int:
             print(f"FAIL: continuous serving took {sc} rounds vs the "
                   f"baseline's {rs} (slot packing regressed)",
                   file=sys.stderr)
+            ok = False
+        ht_h = results["summary_host"]["host_transfers"]
+        ht_f = results["summary_fused"]["host_transfers"]
+        if ht_f >= ht_h:
+            print(f"FAIL: fused serving paid {ht_f} host transfers vs "
+                  f"host stepping's {ht_h} (chunked fused stepping "
+                  f"should amortize sync points)", file=sys.stderr)
             ok = False
         if not ok:
             return 1

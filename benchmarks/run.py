@@ -39,8 +39,17 @@ Selectors and what each script reproduces:
   per update on insert-only and mixed traces (DESIGN.md section 10);
   ``--smoke`` gates incremental/full parity and that insert-only
   repair rounds never exceed full-recompute rounds (no timing gate).
+* ``fused``    (fig_fused.py)           — device-resident planning
+  (DESIGN.md section 11): host vs fused round loops per app x graph;
+  ``--smoke`` gates fused/host label parity, ``host_transfers == 0``
+  per fused traversal, and the on-device direction trace against the
+  host threshold rule replayed over device-recorded counts (no
+  timing gate).
 * ``roofline`` (roofline.py)            — kernel roofline estimates
   from dry-run artifacts (skipped when artifacts are absent).
+
+``-h``/``--help`` prints this selector table; an unknown selector is
+an error (exit 2), not a silent no-op.
 
 All inputs are synthetic analogues of the paper's graph classes (see
 benchmarks/common.py: rmat = power-law, road = grid, uniform = flat).
@@ -50,10 +59,23 @@ from __future__ import annotations
 import sys
 
 
+SELECTORS = ("table2", "table2sim", "fig5", "fig6", "fig8", "fig9",
+             "qps", "serve", "direction", "update", "fused",
+             "roofline")
+
+
 def main() -> None:
-    which = set(sys.argv[1:]) or {"table2", "table2sim", "fig5", "fig6",
-                                  "fig8", "fig9", "qps", "serve",
-                                  "direction", "update", "roofline"}
+    argv = sys.argv[1:]
+    if "-h" in argv or "--help" in argv:
+        print(__doc__)
+        return
+    unknown = [a for a in argv if a not in SELECTORS]
+    if unknown:
+        print(f"unknown selector(s): {', '.join(sorted(unknown))}\n"
+              f"valid selectors: {', '.join(SELECTORS)} "
+              f"(see --help)", file=sys.stderr)
+        sys.exit(2)
+    which = set(argv) or set(SELECTORS)
     print("name,us_per_call,derived")
     if "table2" in which:
         from . import table2_strategies
@@ -90,6 +112,12 @@ def main() -> None:
         if fig_update.run():
             # parity between incremental repair and full recompute is
             # a correctness property — fail the aggregate run
+            sys.exit(1)
+    if "fused" in which:
+        from . import fig_fused
+        if fig_fused.run():
+            # fused/host parity and the zero-sync property are
+            # correctness properties — fail the aggregate run
             sys.exit(1)
     if "roofline" in which:
         from . import roofline

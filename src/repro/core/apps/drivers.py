@@ -7,14 +7,19 @@ balancer round so every application automatically benefits from
 whichever load-balancing strategy is configured — the compiler-level
 reuse the paper gets from IrGL.
 
-``mode`` selects the round implementation (DESIGN.md section 3):
+``mode`` selects the round implementation (DESIGN.md sections 3, 11):
 
 * ``"host"`` — ``balancer.relax``: per-round host decisions + bucketed
   jit shapes (the single-device wall-clock configuration);
 * ``"spmd"`` — ``balancer.relax_spmd``: the fully-jit static-capacity
   round used inside ``shard_map`` by the distributed runtime, here run
   on one device so its behaviour (including the jit-safe RoundStats)
-  can be measured and tested against the host round.
+  can be measured and tested against the host round;
+* ``"fused"`` — ``balancer.run_fused``: the whole traversal as ONE
+  ``lax.while_loop`` with the inspector and the direction rule on
+  device — zero host syncs between the initial dispatch and the final
+  label fetch (``AppResult.host_transfers == 0``).  Labels, rounds,
+  and per-round stats are bitwise those of ``"host"`` mode.
 
 ``bfs_batch`` / ``sssp_batch`` serve B independent sources from ONE
 shared convergence loop (DESIGN.md section 7): labels and frontier
@@ -36,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from functools import partial
 from typing import List, Optional
 
 import jax
@@ -45,19 +51,26 @@ import numpy as np
 from ..graph import Graph, INF
 from ..frontier import full_frontier, single_source, multi_source_state
 from ..balancer import (BalancerConfig, RoundStats, relax,
-                        relax_spmd_directed)
+                        relax_spmd_directed, relax_fused_round,
+                        run_fused, fused_stats_host,
+                        host_transfer_count, _fused_stats_init,
+                        _note_host_transfer)
 from .. import operators as ops
 
 
 @dataclasses.dataclass
 class AppResult:
     """What every driver returns: final labels, round count, wall-clock
-    seconds, and (with ``collect_stats=True``) per-round
-    :class:`RoundStats`."""
+    seconds, (with ``collect_stats=True``) per-round
+    :class:`RoundStats`, and the number of blocking device->host sync
+    points the traversal's round loop performed (0 in fused mode —
+    the assertable form of the zero-sync property, DESIGN.md
+    section 11)."""
     labels: jax.Array
     rounds: int
     seconds: float
     stats: Optional[List[RoundStats]] = None
+    host_transfers: int = 0
 
 
 def relax_round(g, values, labels, frontier, cfg, op,
@@ -83,7 +96,9 @@ def relax_round(g, values, labels, frontier, cfg, op,
                      collect_stats=collect_stats,
                      return_active=return_active)
     if mode != "spmd":
-        raise ValueError(f"unknown mode {mode!r} (host|spmd)")
+        raise ValueError(f"unknown round mode {mode!r} (host|spmd — "
+                         f"'fused' is a loop-level mode, not a "
+                         f"single-round one)")
     return relax_spmd_directed(g, values, labels, frontier, cfg, op,
                                collect_stats=collect_stats,
                                return_active=return_active)
@@ -143,11 +158,11 @@ def resume_loop(g, labels, frontier, cfg, op, max_rounds: int = 10_000,
         raise ValueError(f"resume_loop repairs min-combine fixpoints; "
                          f"got {op.name} (combine={op.combine!r})")
     cfg = _with_direction(cfg, direction)
-    labels, rounds, secs, stats = _loop(
+    labels, rounds, secs, stats, syncs = _loop(
         g, lambda l: l, labels, frontier, cfg, op, max_rounds,
         collect_stats, next_frontier=lambda old, new, f: new < old,
         mode=mode)
-    return AppResult(labels, rounds, secs, stats)
+    return AppResult(labels, rounds, secs, stats, syncs)
 
 
 def _loop(g: Graph, values_of, labels, frontier, cfg, op,
@@ -155,12 +170,33 @@ def _loop(g: Graph, values_of, labels, frontier, cfg, op,
           next_frontier, post_round=None, mode: str = "host"):
     """Generic data-driven loop with explicit current/next worklists.
 
-    Convergence is driven by the round's own ``return_active`` liveness
-    (in host mode a slice of the fused count transfer the round already
-    pays for) rather than a separate blocking ``jnp.any(frontier)``, so
-    a host-mode round costs exactly ONE device->host transfer; an empty
-    frontier is detected by the same probe, before any work launches.
+    In host/spmd mode, convergence is driven by the round's own
+    ``return_active`` liveness (in host mode a slice of the fused count
+    transfer the round already pays for) rather than a separate
+    blocking ``jnp.any(frontier)``, so a host-mode round costs exactly
+    ONE device->host transfer; an empty frontier is detected by the
+    same probe, before any work launches.  ``mode="fused"`` hands the
+    whole loop to :func:`repro.core.balancer.run_fused` instead — one
+    ``lax.while_loop``, no per-round transfers at all.
+
+    Returns ``(labels, rounds, seconds, stats, host_transfers)``;
+    ``host_transfers`` is measured as the delta of the balancer's sync
+    counter across the loop, so it is 0 for fused mode by construction
+    *and* by observation.
     """
+    t_sync = host_transfer_count()
+    if mode == "fused":
+        # fused mode fuses the min-combine `new < old` frontier update;
+        # loops needing a post_round hook keep their own fused variant
+        assert post_round is None
+        t0 = time.perf_counter()
+        labels, _, r, st_dev = run_fused(g, labels, frontier, cfg, op,
+                                         max_rounds, collect_stats)
+        jax.block_until_ready(labels)
+        secs = time.perf_counter() - t0
+        stats = fused_stats_host(st_dev, int(r)) if collect_stats else None
+        return (labels, int(r), secs, stats,
+                host_transfer_count() - t_sync)
     stats = [] if collect_stats else None
     t0 = time.perf_counter()
     rounds = 0
@@ -179,7 +215,8 @@ def _loop(g: Graph, values_of, labels, frontier, cfg, op,
             stats.append(st)
         rounds += 1
     jax.block_until_ready(labels)
-    return labels, rounds, time.perf_counter() - t0, stats
+    return (labels, rounds, time.perf_counter() - t0, stats,
+            host_transfer_count() - t_sync)
 
 
 # ---------------------------------------------------------------------------
@@ -203,11 +240,11 @@ def sssp(g: Graph, source: int, cfg: BalancerConfig = BalancerConfig(),
     cfg = _with_direction(cfg, direction)
     dist = jnp.full((g.num_vertices,), INF, dtype=jnp.int32).at[source].set(0)
     frontier = single_source(g.num_vertices, source)
-    labels, rounds, secs, stats = _loop(
+    labels, rounds, secs, stats, syncs = _loop(
         g, lambda l: l, dist, frontier, cfg, ops.SSSP_RELAX, max_rounds,
         collect_stats, next_frontier=lambda old, new, f: new < old,
         mode=mode)
-    return AppResult(labels, rounds, secs, stats)
+    return AppResult(labels, rounds, secs, stats, syncs)
 
 
 def bfs(g: Graph, source: int, cfg: BalancerConfig = BalancerConfig(),
@@ -219,11 +256,11 @@ def bfs(g: Graph, source: int, cfg: BalancerConfig = BalancerConfig(),
     cfg = _with_direction(cfg, direction)
     level = jnp.full((g.num_vertices,), INF, dtype=jnp.int32).at[source].set(0)
     frontier = single_source(g.num_vertices, source)
-    labels, rounds, secs, stats = _loop(
+    labels, rounds, secs, stats, syncs = _loop(
         g, lambda l: l, level, frontier, cfg, ops.BFS_HOP, max_rounds,
         collect_stats, next_frontier=lambda old, new, f: new < old,
         mode=mode)
-    return AppResult(labels, rounds, secs, stats)
+    return AppResult(labels, rounds, secs, stats, syncs)
 
 
 # ---- batched multi-source queries (DESIGN.md section 7) -------------------
@@ -235,11 +272,11 @@ def _batch_loop(g: Graph, labels, frontier, cfg, op, max_rounds,
     is ONE balancer invocation serving the whole batch, and queries
     whose frontier row has emptied are retired implicitly (they no
     longer contribute to the union the round plans over)."""
-    labels, rounds, secs, stats = _loop(
+    labels, rounds, secs, stats, syncs = _loop(
         g, lambda l: l, labels, frontier, cfg, op, max_rounds,
         collect_stats, next_frontier=lambda old, new, f: new < old,
         mode=mode)
-    return AppResult(labels, rounds, secs, stats)
+    return AppResult(labels, rounds, secs, stats, syncs)
 
 
 def sssp_batch(g: Graph, sources, cfg: BalancerConfig = BalancerConfig(),
@@ -283,11 +320,45 @@ def cc(g: Graph, cfg: BalancerConfig = BalancerConfig(),
     cfg = _with_direction(cfg, direction)
     comp = jnp.arange(g.num_vertices, dtype=jnp.int32)
     frontier = full_frontier(g.num_vertices)
-    labels, rounds, secs, stats = _loop(
+    labels, rounds, secs, stats, syncs = _loop(
         g, lambda l: l, comp, frontier, cfg, ops.CC_MIN, max_rounds,
         collect_stats, next_frontier=lambda old, new, f: new < old,
         mode=mode)
-    return AppResult(labels, rounds, secs, stats)
+    return AppResult(labels, rounds, secs, stats, syncs)
+
+
+@partial(jax.jit, static_argnames=("k", "cfg", "max_rounds",
+                                   "collect_stats"))
+def _kcore_fused(g: Graph, deg, frontier, dead_acc, k: int,
+                 cfg: BalancerConfig, max_rounds: int,
+                 collect_stats: bool):
+    """kcore's whole peeling loop as ONE ``lax.while_loop`` (zero
+    per-round host syncs): the balancer round is the device-resident
+    :func:`repro.core.balancer.relax_fused_round`, and the
+    newly-dead bookkeeping — the host loop's ``post_round`` logic —
+    moves into the loop body unchanged."""
+    st0 = (_fused_stats_init(max_rounds, 1, cfg.num_tiles)
+           if collect_stats else None)
+
+    def cond(carry):
+        r, deg, dead, fr, st = carry
+        return (r < max_rounds) & jnp.any(fr)
+
+    def body(carry):
+        r, deg, dead, fr, st = carry
+        new_deg, _, _, _, row = relax_fused_round(
+            g, None, None, deg[None], deg[None], fr[None], cfg,
+            ops.KCORE_DEC, None, collect_stats)
+        new_deg = new_deg[0]
+        newly_dead = (new_deg < k) & ~dead
+        if collect_stats:
+            st = jax.tree_util.tree_map(
+                lambda buf, x: buf.at[r].set(x), st, row)
+        return r + 1, new_deg, dead | newly_dead, newly_dead, st
+
+    r, deg, dead, fr, st = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), deg, dead_acc, frontier, st0))
+    return (~dead).astype(jnp.int32), r, st
 
 
 def kcore(g: Graph, k: int, cfg: BalancerConfig = BalancerConfig(),
@@ -303,7 +374,22 @@ def kcore(g: Graph, k: int, cfg: BalancerConfig = BalancerConfig(),
     alive = deg >= k
     frontier = ~alive & (deg > 0)          # initially-dead vertices push
     dead_acc = frontier | ~alive
+    if mode == "fused":
+        # validate direction x operator exactly like the per-round modes
+        if cfg.direction != "push":
+            ops.as_pull(ops.KCORE_DEC)     # raises: add-combine op
+        t_sync = host_transfer_count()
+        t0 = time.perf_counter()
+        in_core, r, st_dev = _kcore_fused(g, deg, frontier, dead_acc,
+                                          int(k), cfg, max_rounds,
+                                          collect_stats)
+        jax.block_until_ready(in_core)
+        secs = time.perf_counter() - t0
+        stats = fused_stats_host(st_dev, int(r)) if collect_stats else None
+        return AppResult(in_core, int(r), secs, stats,
+                         host_transfer_count() - t_sync)
     stats = [] if collect_stats else None
+    t_sync = host_transfer_count()
     t0 = time.perf_counter()
     rounds = 0
     while rounds < max_rounds:
@@ -321,7 +407,69 @@ def kcore(g: Graph, k: int, cfg: BalancerConfig = BalancerConfig(),
         rounds += 1
     jax.block_until_ready(deg)
     in_core = (~dead_acc).astype(jnp.int32)
-    return AppResult(in_core, rounds, time.perf_counter() - t0, stats)
+    return AppResult(in_core, rounds, time.perf_counter() - t0, stats,
+                     host_transfer_count() - t_sync)
+
+
+@partial(jax.jit, static_argnames=("damping",))
+def _pr_round_math(rank, inv_out, sink, acc, damping: float):
+    """The scalar arithmetic around PageRank's relax round, shared by
+    the host loop and the fused while_loop so both take the SAME fusion
+    decisions (an enclosing jit would otherwise contract the update
+    into an FMA and perturb the last f32 bit).  Called with ``acc=None``
+    for the pre-round pieces, with the scattered ``acc`` for the
+    post-round update + residual."""
+    n = rank.shape[0]
+    if acc is None:
+        contrib = rank * inv_out
+        dangling = jnp.sum(jnp.where(sink, rank, 0.0))
+        return contrib, dangling
+    dangling = jnp.sum(jnp.where(sink, rank, 0.0))
+    new_rank = (1.0 - damping) / n + damping * (acc + dangling / n)
+    delta = jnp.max(jnp.abs(new_rank - rank))
+    return new_rank, delta
+
+
+@partial(jax.jit, static_argnames=("damping", "tol", "cfg",
+                                   "max_rounds", "collect_stats"))
+def _pagerank_fused(rg: Graph, inv_out, sink, damping: float,
+                    tol: float, cfg: BalancerConfig, max_rounds: int,
+                    collect_stats: bool):
+    """PageRank's whole power iteration as ONE ``lax.while_loop``:
+    the residual check that used to block the host every round
+    (``float(jnp.max(...))``) becomes part of the loop condition on
+    device.  The per-round arithmetic goes through ``_pr_round_math``
+    — the same jitted subgraph the host loop calls — so f32 rounding
+    is bitwise-identical between the two modes."""
+    n = inv_out.shape[0]
+    rank0 = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+    frontier = full_frontier(n)
+    st0 = (_fused_stats_init(max_rounds, 1, cfg.num_tiles)
+           if collect_stats else None)
+
+    def cond(carry):
+        r, rank, delta, st = carry
+        return (r < max_rounds) & (delta >= tol)
+
+    def body(carry):
+        r, rank, delta, st = carry
+        contrib, _ = _pr_round_math(rank, inv_out, sink, None, damping)
+        acc = jnp.zeros((n,), jnp.float32)
+        # pull: gather contrib at in-neighbours, scatter-add at anchor
+        acc, _, _, _, row = relax_fused_round(
+            rg, None, None, contrib[None], acc[None], frontier[None],
+            cfg, ops.PR_PULL, None, collect_stats)
+        acc = acc[0]
+        new_rank, delta = _pr_round_math(rank, inv_out, sink, acc,
+                                         damping)
+        if collect_stats:
+            st = jax.tree_util.tree_map(
+                lambda buf, x: buf.at[r].set(x), st, row)
+        return r + 1, new_rank, delta, st
+
+    r, rank, _, st = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), rank0, jnp.float32(jnp.inf), st0))
+    return rank, r, st
 
 
 def pagerank(g: Graph, damping: float = 0.85, tol: float = 1e-6,
@@ -340,20 +488,37 @@ def pagerank(g: Graph, damping: float = 0.85, tol: float = 1e-6,
     outdeg = g.out_degrees().astype(jnp.float32)
     inv_out = jnp.where(outdeg > 0, 1.0 / jnp.maximum(outdeg, 1.0), 0.0)
     sink = outdeg == 0
+    if mode == "fused":
+        if cfg.direction != "push":
+            ops.as_pull(ops.PR_PULL)       # raises: not a push-min op
+        t_sync = host_transfer_count()
+        t0 = time.perf_counter()
+        rank, r, st_dev = _pagerank_fused(rg, inv_out, sink,
+                                          float(damping), float(tol),
+                                          cfg, max_rounds,
+                                          collect_stats)
+        jax.block_until_ready(rank)
+        secs = time.perf_counter() - t0
+        stats = fused_stats_host(st_dev, int(r)) if collect_stats else None
+        return AppResult(rank, int(r), secs, stats,
+                         host_transfer_count() - t_sync)
     rank = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
     frontier = full_frontier(n)
     stats = [] if collect_stats else None
+    t_sync = host_transfer_count()
     t0 = time.perf_counter()
     rounds = 0
     while rounds < max_rounds:
-        contrib = rank * inv_out
-        dangling = jnp.sum(jnp.where(sink, rank, 0.0))
+        contrib, _ = _pr_round_math(rank, inv_out, sink, None,
+                                    float(damping))
         acc = jnp.zeros((n,), jnp.float32)
         # pull: gather contrib at in-neighbours, scatter-add at anchor
         acc, st = _round(rg, contrib, acc, frontier, cfg, ops.PR_PULL,
                          collect_stats, mode)
-        new_rank = (1.0 - damping) / n + damping * (acc + dangling / n)
-        delta = float(jnp.max(jnp.abs(new_rank - rank)))
+        new_rank, delta_dev = _pr_round_math(rank, inv_out, sink, acc,
+                                             float(damping))
+        delta = float(delta_dev)
+        _note_host_transfer()          # the residual check blocks
         rank = new_rank
         if collect_stats and st is not None:
             stats.append(st)
@@ -361,4 +526,5 @@ def pagerank(g: Graph, damping: float = 0.85, tol: float = 1e-6,
         if delta < tol:
             break
     jax.block_until_ready(rank)
-    return AppResult(rank, rounds, time.perf_counter() - t0, stats)
+    return AppResult(rank, rounds, time.perf_counter() - t0, stats,
+                     host_transfer_count() - t_sync)

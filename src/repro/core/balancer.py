@@ -77,6 +77,7 @@ fact the engine reads from the updated frontier).
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from functools import partial
 from typing import Callable, NamedTuple, Optional
 
@@ -108,15 +109,26 @@ class BalancerConfig:
     direction: str = "push"          # push | pull | adaptive (sec. 9)
     pull_alpha: int = 14             # adaptive: pull when m_f*alpha >= E
     pull_beta: int = 24              # adaptive: pull when n_f*beta >= V
+    backend: Optional[str] = None    # xla | pallas | merge_path | None
+    #                                  (None: derived from use_pallas)
 
     def __post_init__(self):
         assert self.strategy in ("vertex", "twc", "edge_lb", "alb")
         assert self.distribution in ("cyclic", "blocked")
         assert self.direction in ("push", "pull", "adaptive")
+        assert self.backend in (None, "xla", "pallas", "merge_path")
 
     @property
     def executor(self) -> str:
-        """Registry name of the backend this config routes through."""
+        """Registry name of the backend this config routes through.
+
+        An explicit ``backend`` wins; otherwise ``use_pallas`` selects
+        between the classic ``xla`` and ``pallas`` pairs.  The third
+        registered backend, ``merge_path``, replaces the whole
+        plan/inspector machinery with equal-work edge tiles (see
+        :func:`effective_plan`)."""
+        if self.backend is not None:
+            return self.backend
         return "pallas" if self.use_pallas else "xla"
 
 
@@ -206,6 +218,22 @@ def make_plan(cfg: BalancerConfig) -> RoundPlan:
                       BinSpec("large", lw, mw, th - 1, th)), "huge", d)
 
 
+def effective_plan(cfg: BalancerConfig) -> RoundPlan:
+    """The plan a round actually executes.
+
+    Normally :func:`make_plan`'s strategy bins; under the
+    ``merge_path`` backend the plan collapses to ``RoundPlan((),
+    "all")`` regardless of strategy — merge-path partitions the
+    frontier's whole edge range into equal-work tiles by co-ranked
+    binary search over the CSR prefix sums, so it needs no degree bins
+    and no huge-bin inspector.  Every frontier edge is still processed
+    exactly once (the LB mask covers all ``deg > 0`` members), so
+    add-combine operators stay exact."""
+    if cfg.executor == "merge_path":
+        return RoundPlan((), "all", cfg.direction)
+    return make_plan(cfg)
+
+
 def resolve_direction(cfg: BalancerConfig, frontier_size: int,
                       frontier_edges: int, num_vertices: int,
                       num_edges: int) -> str:
@@ -227,6 +255,57 @@ def resolve_direction(cfg: BalancerConfig, frontier_size: int,
     if frontier_edges * cfg.pull_alpha >= num_edges:
         return "pull"
     return "push"
+
+
+def resolve_direction_device(cfg: BalancerConfig, frontier_size,
+                             frontier_edges, num_vertices: int,
+                             num_edges: int) -> jax.Array:
+    """jit-traceable twin of :func:`resolve_direction`: the same Beamer
+    thresholds over *device* int32 scalars, returning a bool scalar
+    (True = pull) instead of a string — the branch selector the fused
+    round feeds to ``lax.cond``.  Fixed directions fold to constants at
+    trace time; the integer threshold arithmetic is exact, so the
+    device choice is always identical to the host choice made from the
+    fused count transfer.  (Counts are int32 on device — frontier sizes
+    or edge totals beyond ``2**31 / max(alpha, beta)`` would need the
+    x64 mode this repo does not enable.)"""
+    if cfg.direction == "push":
+        return jnp.asarray(False)
+    if cfg.direction == "pull":
+        return jnp.asarray(True)
+    return ((frontier_size * cfg.pull_beta >= num_vertices)
+            | (frontier_edges * cfg.pull_alpha >= num_edges))
+
+
+# ---------------------------------------------------------------------------
+# host-sync accounting: the per-round blocking device->host transfers
+# each execution mode performs, as an assertable number (the structural
+# realization of the "zero per-round host syncs" property of the fused
+# mode — no wall-clock measurement involved)
+# ---------------------------------------------------------------------------
+
+_HOST_TRANSFERS = [0]
+
+
+def _note_host_transfer(n: int = 1) -> None:
+    """Record ``n`` blocking per-round device->host sync points.
+
+    Called at every site that materializes device values on the host
+    *inside* a round loop (the fused count vector of :func:`relax`, the
+    liveness/stat fetch of :func:`relax_spmd_directed`, the per-round
+    probes of the distributed and serving loops).  One-time amortized
+    setup (e.g. the cached pull enumeration) and the final label fetch
+    are deliberately NOT counted — ``host_transfers`` measures the
+    per-round round-trip cost the fused mode eliminates."""
+    _HOST_TRANSFERS[0] += n
+
+
+def host_transfer_count() -> int:
+    """Monotonic process-wide count of per-round device->host sync
+    points (see :func:`_note_host_transfer`).  Callers measure a
+    traversal's syncs as the delta across it; ``mode="fused"`` must
+    leave the counter unchanged between dispatch and final fetch."""
+    return _HOST_TRANSFERS[0]
 
 
 # ---------------------------------------------------------------------------
@@ -269,15 +348,26 @@ def register_executor(pair: ExecutorPair) -> None:
 
 
 def get_executor(name: str) -> ExecutorPair:
-    """Look up a backend by name (``"xla"`` | ``"pallas"``); the Pallas
-    pair is registered lazily on first use to keep its import cost off
-    the common path."""
-    if name not in _REGISTRY and name == "pallas":
+    """Look up a backend by name (``"xla"`` | ``"pallas"`` |
+    ``"merge_path"``); the Pallas-backed pairs are registered lazily on
+    first use to keep their import cost off the common path.
+
+    ``merge_path`` routes every frontier edge through the co-ranked
+    equal-work kernel (``kernels/merge_path.py``) — its plan has no
+    bins (see :func:`effective_plan`), so its bin entries are
+    unreachable and raise if ever called."""
+    if name not in _REGISTRY and name in ("pallas", "merge_path"):
         from repro.kernels import ops as kops   # lazy: pallas import cost
         register_executor(ExecutorPair(
             "pallas",
             bin_host=kops.twc_bin_apply, bin_jit=kops.twc_bin_apply_static,
             lb_host=kops.edge_lb_apply, lb_jit=kops.edge_lb_apply_static))
+        register_executor(ExecutorPair(
+            "merge_path",
+            bin_host=kops.merge_path_no_bins,
+            bin_jit=kops.merge_path_no_bins,
+            lb_host=kops.merge_path_apply,
+            lb_jit=kops.merge_path_apply_static))
     return _REGISTRY[name]
 
 
@@ -305,6 +395,9 @@ class RoundStats(NamedTuple):
     frontier_edges: int = 0  # union-frontier out-edge total (the push-
     #                          side m_f the direction choice is made on;
     #                          0 where the round had no host counts)
+    host_transfers: int = 0  # blocking device->host sync points this
+    #                          round performed (1 for host/spmd rounds,
+    #                          0 for rounds inside the fused loop)
 
     @classmethod
     def from_device(cls, s: "RoundStatsDev") -> "RoundStats":
@@ -320,13 +413,18 @@ class RoundStats(NamedTuple):
                    mirrors_synced=int(s.mirrors_synced),
                    bytes_synced=int(s.bytes_synced),
                    frontier_per_query=np.asarray(s.frontier_per_query,
-                                                 dtype=np.int64))
+                                                 dtype=np.int64),
+                   direction="pull" if bool(s.is_pull) else "push",
+                   frontier_edges=int(s.frontier_edges))
 
 
 class RoundStatsDev(NamedTuple):
     """jit-safe RoundStats: every field is a device array, so the
     structure can cross ``jit`` / ``shard_map`` boundaries (the SPMD
-    realization of the Fig 1/5 instrumentation)."""
+    realization of the Fig 1/5 instrumentation).  The fused round loop
+    (:func:`run_fused`) accumulates one of these per round into
+    ``[max_rounds]``-leading buffers on device and transfers the whole
+    structure once at convergence (:func:`fused_stats_host`)."""
     frontier_size: jax.Array     # int32 scalar (union size when batched)
     edges_twc: jax.Array         # int32 scalar
     edges_lb: jax.Array          # int32 scalar
@@ -336,6 +434,8 @@ class RoundStatsDev(NamedTuple):
     mirrors_synced: jax.Array    # int32 scalar (filled in by gluon.py)
     bytes_synced: jax.Array      # int32 scalar (filled in by gluon.py)
     frontier_per_query: jax.Array = np.zeros((1,), np.int32)  # int32[B]
+    frontier_edges: jax.Array = np.int32(0)   # push-side m_f (union)
+    is_pull: jax.Array = np.zeros((), bool)   # direction this round ran
 
 
 # ---------------------------------------------------------------------------
@@ -508,8 +608,8 @@ def _lb_tile_loads(total, num_tiles: int):
 # host-driven round (per-round "kernel launches", bucketed jit)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cap", "fcap", "v"))
-def _gather_bin(mask, fidx, deg, row_start, cap: int, fcap: int, v: int):
+def _gather_bin_impl(mask, fidx, deg, row_start, cap: int, fcap: int,
+                     v: int):
     """Compact a bin mask into (vidx, deg, row) at capacity ``cap``
     (slots past the bin size become out-of-range sentinels).  One fused
     kernel per (cap, fcap) bucket: the compaction and the three
@@ -522,6 +622,37 @@ def _gather_bin(mask, fidx, deg, row_start, cap: int, fcap: int, v: int):
     return (jnp.where(take, fidx[sel_safe], v),
             jnp.where(take, deg[sel_safe], 0),
             jnp.where(take, row_start[sel_safe], 0))
+
+
+# bucketed capacities keep the number of distinct (cap, fcap, v) keys
+# small for any ONE graph, but a long-lived process touching many
+# graphs/configs (the serving deployment, the benchmark sweeps) used to
+# grow one compiled executable per key forever; the LRU bound below
+# caps that at the _GATHER_BIN_CACHE_CAP hottest buckets
+_GATHER_BIN_CACHE_CAP = 64
+_GATHER_BIN_CACHE: "OrderedDict[tuple, Callable]" = OrderedDict()
+
+
+def _gather_bin(mask, fidx, deg, row_start, cap: int, fcap: int, v: int):
+    """LRU-bounded jit front of :func:`_gather_bin_impl`: one jitted
+    closure per (cap, fcap, v) shape bucket, evicting the least
+    recently used bucket (and its compiled executables) past
+    ``_GATHER_BIN_CACHE_CAP`` entries."""
+    key = (cap, fcap, v)
+    fn = _GATHER_BIN_CACHE.pop(key, None)
+    if fn is None:
+        fn = jax.jit(partial(_gather_bin_impl, cap=cap, fcap=fcap, v=v))
+        while len(_GATHER_BIN_CACHE) >= _GATHER_BIN_CACHE_CAP:
+            _GATHER_BIN_CACHE.popitem(last=False)
+    _GATHER_BIN_CACHE[key] = fn                    # most recently used
+    return fn(mask, fidx, deg, row_start)
+
+
+# the recompile-count gates (tests/test_streaming.py) watch jitted
+# fns via _cache_size(); keep that introspection working across the
+# LRU front by summing the live closures' trace counts
+_gather_bin._cache_size = (                        # type: ignore[attr-defined]
+    lambda: sum(f._cache_size() for f in _GATHER_BIN_CACHE.values()))
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -544,7 +675,7 @@ def _host_round_counts(g: Graph, frontier: jax.Array, cfg: BalancerConfig):
     """
     deg = g.row_ptr[1:] - g.row_ptr[:-1]
     union = union_frontier(frontier)
-    plan = make_plan(cfg)
+    plan = effective_plan(cfg)
     vals = [count(union)]
     for spec in plan.bins:
         m = spec.mask(deg, union)
@@ -594,10 +725,14 @@ class _PullEnum(NamedTuple):
 
 def _pull_plan_key(cfg: BalancerConfig) -> tuple:
     """The cfg fields a pull enumeration depends on (the plan's bins +
-    LB mask); direction/backend/deal fields deliberately excluded so
-    push/adaptive/pallas variants share one cache entry."""
+    LB mask); direction/deal fields deliberately excluded so
+    push/adaptive variants share one cache entry.  The xla and pallas
+    backends share entries too (same plan), but ``merge_path`` replaces
+    the plan (no bins, LB = all — :func:`effective_plan`), so its
+    enumeration is keyed separately."""
     return (cfg.strategy, cfg.threshold, cfg.small_width,
-            cfg.medium_width, cfg.large_width)
+            cfg.medium_width, cfg.large_width,
+            cfg.executor == "merge_path")
 
 
 def _assemble_bins(cnt: np.ndarray, plan: RoundPlan,
@@ -643,7 +778,7 @@ def _build_pull_enum(g: Graph, cfg: BalancerConfig) -> _PullEnum:
     fcap = next_bucket(int(cnt[0]))
     fidx = compact(union, fcap)
     deg, row_start, valid = _frontier_meta(rg, fidx)
-    bins, lb = _assemble_bins(cnt, make_plan(cfg), cfg, fidx, deg,
+    bins, lb = _assemble_bins(cnt, effective_plan(cfg), cfg, fidx, deg,
                               row_start, valid, fcap, v)
     return _PullEnum(rg, emask, bins, lb)
 
@@ -743,12 +878,13 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
         values, labels, frontier = (values[None], labels[None],
                                     frontier[None])
     b, v = labels.shape
-    plan = make_plan(cfg)
+    plan = effective_plan(cfg)
     # validate direction x operator up front (even when adaptive ends
     # up resolving to push every round, a bad pairing is a config bug)
     pull_op = as_pull(op) if cfg.direction != "push" else None
     cnt, union = _host_round_counts(g, frontier, cfg)
     cnt = np.asarray(cnt)
+    _note_host_transfer()              # THE per-round host sync point
     nf = int(cnt[0])                                   # union size
     active = cnt[-b:] > 0
     if nf == 0:
@@ -764,7 +900,8 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
                  tile_loads_lb=np.zeros(cfg.num_tiles, np.int64),
                  frontier_per_query=cnt[-b:].astype(np.int64),
                  direction=direction,
-                 frontier_edges=m_f) if collect_stats else None
+                 frontier_edges=m_f,
+                 host_transfers=1) if collect_stats else None
 
     if direction == "pull":
         pe = _pull_enum(g, cfg)
@@ -787,12 +924,11 @@ def relax(g: Graph, values: jax.Array, labels: jax.Array,
 # fully-jit SPMD round (for shard_map / distributed execution)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cfg", "op", "collect_stats",
-                                   "return_dirty"))
-def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
-               frontier: jax.Array, cfg: BalancerConfig, op: Operator,
-               collect_stats: bool = False, return_dirty: bool = False,
-               emask: Optional[jax.Array] = None):
+def _relax_spmd_impl(g: Graph, values: jax.Array, labels: jax.Array,
+                     frontier: jax.Array, cfg: BalancerConfig,
+                     op: Operator, collect_stats: bool = False,
+                     return_dirty: bool = False,
+                     emask: Optional[jax.Array] = None):
     """Static-shape ALB round: capacities fixed at V/E, LB path guarded
     by ``lax.cond``, unbounded bins driven by ``lax.while_loop`` — the
     SPMD realization of the inspector-executor split.  Runs the same
@@ -823,7 +959,9 @@ def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
     executors still gather per-query activity from ``frontier``.
     ``None`` (the default, and every push round) enumerates the union
     frontier as before.  :func:`relax_spmd_directed` wraps this with
-    the host-side direction resolution.
+    the per-round direction resolution, and the fused traversal loop
+    (:func:`run_fused`) inlines this body — it is a plain traceable
+    function; ``relax_spmd`` is its top-level jitted form.
     """
     batched = labels.ndim == 2
     if not batched:
@@ -836,7 +974,7 @@ def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
     deg, row_start, valid = _frontier_meta(g, fidx)
 
     ex = get_executor(cfg.executor)
-    plan = make_plan(cfg)
+    plan = effective_plan(cfg)
     edges_twc = jnp.int32(0)
     tl_twc = jnp.zeros((cfg.num_tiles,), jnp.int32)
 
@@ -914,61 +1052,231 @@ def relax_spmd(g: Graph, values: jax.Array, labels: jax.Array,
     return outs[0] if len(outs) == 1 else outs
 
 
+relax_spmd = partial(jax.jit, static_argnames=(
+    "cfg", "op", "collect_stats", "return_dirty"))(_relax_spmd_impl)
+
+
+# ---------------------------------------------------------------------------
+# device-resident planning: direction resolved by lax.cond over the
+# on-device counts, whole traversals fused into one lax.while_loop
+# ---------------------------------------------------------------------------
+
+def relax_fused_round(g: Graph, rg: Optional[Graph],
+                      emask: Optional[jax.Array], values: jax.Array,
+                      labels: jax.Array, frontier: jax.Array,
+                      cfg: BalancerConfig, op: Operator,
+                      pull_op: Optional[Operator] = None,
+                      collect_stats: bool = False):
+    """One balancer round with the *entire* inspector on device — the
+    trace-safe round primitive of the fused traversal loop (DESIGN.md
+    section 11).
+
+    The union-frontier count ``n_f`` and out-edge total ``m_f`` are
+    computed as device scalars, the Beamer direction rule becomes a
+    ``lax.cond`` branch selector (:func:`resolve_direction_device`),
+    and each branch inlines the static-shape SPMD round
+    (:func:`_relax_spmd_impl`) — push on ``g``, pull on the cached
+    reverse CSR ``rg`` with its in-degree ``emask``.  Nothing here
+    touches the host, so the caller can wrap any number of these rounds
+    in one ``lax.while_loop``.
+
+    Inputs are batched ``[B, V]`` (callers canonicalize); ``rg`` /
+    ``emask`` / ``pull_op`` may be None for ``direction="push"``
+    configs.  Returns ``(labels, is_pull, n_f, m_f, stats)`` — all
+    device values; ``stats`` is a :class:`RoundStatsDev` with
+    ``frontier_edges`` / ``is_pull`` filled in (None unless
+    ``collect_stats``)."""
+    v = labels.shape[-1]
+    deg = g.row_ptr[1:] - g.row_ptr[:-1]
+    union = union_frontier(frontier)
+    nf = count(union)
+    m_f = jnp.sum(jnp.where(union, deg, 0)).astype(jnp.int32)
+    is_pull = resolve_direction_device(cfg, nf, m_f, v, g.num_edges)
+    if cfg.direction == "push":
+        out = _relax_spmd_impl(g, values, labels, frontier, cfg, op,
+                               collect_stats=collect_stats)
+    elif cfg.direction == "pull":
+        out = _relax_spmd_impl(rg, values, labels, frontier, cfg,
+                               pull_op, collect_stats=collect_stats,
+                               emask=emask)
+    else:
+        out = jax.lax.cond(
+            is_pull,
+            lambda val, lab, fr: _relax_spmd_impl(
+                rg, val, lab, fr, cfg, pull_op,
+                collect_stats=collect_stats, emask=emask),
+            lambda val, lab, fr: _relax_spmd_impl(
+                g, val, lab, fr, cfg, op, collect_stats=collect_stats),
+            values, labels, frontier)
+    if collect_stats:
+        labels_out, st = out
+        st = st._replace(frontier_edges=m_f, is_pull=is_pull)
+    else:
+        labels_out, st = out, None
+    return labels_out, is_pull, nf, m_f, st
+
+
+def _fused_stats_init(max_rounds: int, b: int, num_tiles: int
+                      ) -> RoundStatsDev:
+    """Device-resident per-round stat buffers of a fused traversal:
+    a :class:`RoundStatsDev` whose every leaf gained a leading
+    ``[max_rounds]`` round axis, zero-filled."""
+    z = partial(jnp.zeros, dtype=jnp.int32)
+    return RoundStatsDev(
+        frontier_size=z((max_rounds,)),
+        edges_twc=z((max_rounds,)), edges_lb=z((max_rounds,)),
+        lb_invoked=jnp.zeros((max_rounds,), bool),
+        tile_loads_twc=z((max_rounds, num_tiles)),
+        tile_loads_lb=z((max_rounds, num_tiles)),
+        mirrors_synced=z((max_rounds,)), bytes_synced=z((max_rounds,)),
+        frontier_per_query=z((max_rounds, b)),
+        frontier_edges=z((max_rounds,)),
+        is_pull=jnp.zeros((max_rounds,), bool))
+
+
+@partial(jax.jit, static_argnames=("cfg", "op", "pull_op", "max_rounds",
+                                   "collect_stats"))
+def _run_fused_loop(g: Graph, rg, emask, labels, frontier,
+                    cfg: BalancerConfig, op: Operator, pull_op,
+                    max_rounds: int, collect_stats: bool):
+    """The fused min-combine convergence loop: ONE ``lax.while_loop``
+    whose body is :func:`relax_fused_round` plus the ``new < old``
+    frontier update; stats rows are written into the device buffers at
+    the round index.  The loop condition probes the union frontier on
+    device, so between dispatch and the caller's final fetch no value
+    ever crosses to the host."""
+    st0 = (_fused_stats_init(max_rounds, labels.shape[0], cfg.num_tiles)
+           if collect_stats else None)
+
+    def cond(carry):
+        r, lab, fr, st = carry
+        return (r < max_rounds) & jnp.any(fr)
+
+    def body(carry):
+        r, lab, fr, st = carry
+        new, _, _, _, row = relax_fused_round(
+            g, rg, emask, lab, lab, fr, cfg, op, pull_op, collect_stats)
+        if collect_stats:
+            st = jax.tree_util.tree_map(
+                lambda buf, x: buf.at[r].set(x), st, row)
+        return r + 1, new, new < lab, st
+
+    r, labels, frontier, st = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), labels, frontier, st0))
+    return labels, frontier, r, st
+
+
+def run_fused(g: Graph, labels: jax.Array, frontier: jax.Array,
+              cfg: BalancerConfig, op: Operator,
+              max_rounds: int = 10_000, collect_stats: bool = False):
+    """Run a whole min-combine traversal as ONE fused device loop —
+    zero per-round host syncs (DESIGN.md section 11).
+
+    Bin selection, the huge-bin inspector, and the push/pull direction
+    rule all run on device (:func:`relax_fused_round`), so the
+    multi-round loop needs no host round-trips: the only transfers are
+    the dispatch of this call and whatever the caller fetches from the
+    result.  Accepts ``[V]`` or batched ``[B, V]`` state like
+    :func:`relax`.  The one-time pull enumeration (``direction`` pull /
+    adaptive) is built before dispatch and cached per graph.
+
+    Returns ``(labels, frontier, rounds, stats)`` — ``rounds`` is a
+    device scalar and ``stats`` the device-accumulated
+    :class:`RoundStatsDev` buffers (None unless ``collect_stats``);
+    materialize them with :func:`fused_stats_host` once converged."""
+    if op.combine != "min":
+        raise ValueError(f"run_fused drives min-combine loops; got "
+                         f"{op.name} (combine={op.combine!r})")
+    batched = labels.ndim == 2
+    lab = labels if batched else labels[None]
+    fr = frontier if batched else frontier[None]
+    pull_op = as_pull(op) if cfg.direction != "push" else None
+    if cfg.direction != "push":
+        pe = _pull_enum(g, cfg)
+        rg, emask = pe.rg, pe.emask
+    else:
+        rg, emask = None, None
+    lab, fr, r, st = _run_fused_loop(g, rg, emask, lab, fr, cfg=cfg,
+                                     op=op, pull_op=pull_op,
+                                     max_rounds=int(max_rounds),
+                                     collect_stats=collect_stats)
+    if not batched:
+        lab, fr = lab[0], fr[0]
+    return lab, fr, r, st
+
+
+def fused_stats_host(st: Optional[RoundStatsDev], rounds: int):
+    """Materialize a fused traversal's device-accumulated stat buffers
+    as the usual per-round ``List[RoundStats]`` — ONE transfer for the
+    whole traversal, after convergence (vs one per round in host/spmd
+    mode).  ``rounds`` (the loop's round count) selects the filled
+    prefix of the ``[max_rounds]`` buffers; fused rounds report
+    ``host_transfers=0`` by construction."""
+    if st is None:
+        return None
+    host = jax.tree_util.tree_map(np.asarray, st)
+    return [RoundStats.from_device(
+                RoundStatsDev(*[leaf[r] for leaf in host]))
+            for r in range(int(rounds))]
+
+
+@partial(jax.jit, static_argnames=("cfg", "op", "pull_op",
+                                   "collect_stats"))
+def _directed_round_jit(g: Graph, rg, emask, values, labels, frontier,
+                        cfg: BalancerConfig, op: Operator, pull_op,
+                        collect_stats: bool):
+    """One device-directed round plus the per-row liveness of the
+    entering frontier — the jitted body behind
+    :func:`relax_spmd_directed`."""
+    labels_out, is_pull, nf, m_f, st = relax_fused_round(
+        g, rg, emask, values, labels, frontier, cfg, op, pull_op,
+        collect_stats)
+    return labels_out, is_pull, m_f, jnp.any(frontier, axis=-1), st
+
+
 def relax_spmd_directed(g: Graph, values: jax.Array, labels: jax.Array,
                         frontier: jax.Array, cfg: BalancerConfig,
                         op: Operator, collect_stats: bool = False,
                         return_active: bool = False):
-    """Direction-aware wrapper around :func:`relax_spmd` (DESIGN.md
-    section 9): resolves ``cfg.direction`` on the host per round and
-    dispatches the fully-jit round accordingly — the push form on the
-    graph as-is, or the pull form (pull twin of ``op``, reverse CSR,
-    in-degree ``emask``).  This is the round primitive behind
-    ``mode="spmd"`` in the app drivers.
+    """Direction-aware fully-jit round (DESIGN.md section 9): the round
+    primitive behind ``mode="spmd"`` in the app drivers.
+
+    The direction choice now lives on device — the same
+    ``lax.cond``-over-device-counts path the fused loop uses
+    (:func:`relax_fused_round`), so an ``adaptive`` config no longer
+    pays a host count transfer to *decide*; the host-driven loop around
+    this round still syncs once per round to *observe* liveness and
+    stats, and only when it asks for them (``return_active`` /
+    ``collect_stats``).
 
     Returns ``(labels, RoundStats|None)`` — host stats with
-    ``direction`` (and, where known, the push-side ``frontier_edges``)
-    filled in — extended by a host ``bool[B]`` liveness vector when
-    ``return_active=True``.  An ``adaptive`` config costs one fused
-    host-count transfer per round (the same vector the host round
-    reads; it doubles as the liveness source); fixed directions
-    transfer only the per-row liveness, and only when asked for.
-    """
+    ``direction`` and the push-side ``frontier_edges`` filled in —
+    extended by a host ``bool[B]`` liveness vector when
+    ``return_active=True``."""
     batched = labels.ndim == 2
-    f2 = frontier if batched else frontier[None]
-    b = f2.shape[0]
+    if not batched:
+        values, labels, frontier = (values[None], labels[None],
+                                    frontier[None])
     pull_op = as_pull(op) if cfg.direction != "push" else None
-    active = None
-    m_f = None
-    direction = cfg.direction
-    if cfg.direction == "adaptive":
-        cnt, _ = _host_round_counts(g, f2, cfg)
-        cnt = np.asarray(cnt)
-        active = cnt[-b:] > 0
-        m_f = _counts_frontier_edges(cnt, make_plan(cfg))
-        direction = resolve_direction(cfg, int(cnt[0]), m_f,
-                                      labels.shape[-1], g.num_edges)
-    elif return_active:
-        active = np.atleast_1d(np.asarray(
-            jax.device_get(jnp.any(f2, axis=-1))))
-    if active is not None and not active.any():
-        # empty frontier: skip the full static-capacity round entirely
-        # (mirrors the host round's nf == 0 early return)
-        result = (labels, None)
-        return result + (active,) if return_active else result
-    if direction == "pull":
+    if cfg.direction != "push":
         pe = _pull_enum(g, cfg)
-        out = relax_spmd(pe.rg, values, labels, frontier, cfg, pull_op,
-                         collect_stats=collect_stats, emask=pe.emask)
+        rg, emask = pe.rg, pe.emask
     else:
-        out = relax_spmd(g, values, labels, frontier, cfg, op,
-                         collect_stats=collect_stats)
-    if collect_stats:
-        labels_out, st_dev = out
-        st = RoundStats.from_device(st_dev)
-        fe = m_f if m_f is not None else (
-            st.edges_twc + st.edges_lb if direction == "push" else 0)
-        st = st._replace(direction=direction, frontier_edges=fe)
-    else:
-        labels_out, st = out, None
+        rg, emask = None, None
+    labels_out, is_pull, m_f, active_dev, st_dev = _directed_round_jit(
+        g, rg, emask, values, labels, frontier, cfg=cfg, op=op,
+        pull_op=pull_op, collect_stats=collect_stats)
+    st = active = None
+    if collect_stats or return_active:
+        # ONE blocking sync for everything the host loop observes
+        is_pull_h, m_f_h, active, st_h = jax.device_get(
+            (is_pull, m_f, active_dev, st_dev))
+        _note_host_transfer()
+        active = np.atleast_1d(active)
+        if collect_stats:
+            st = RoundStats.from_device(st_h)._replace(
+                direction="pull" if bool(is_pull_h) else "push",
+                frontier_edges=int(m_f_h), host_transfers=1)
+    labels_out = labels_out if batched else labels_out[0]
     result = (labels_out, st)
     return result + (active,) if return_active else result

@@ -54,7 +54,7 @@ from jax.experimental.shard_map import shard_map
 
 from .graph import Graph, INF
 from .balancer import (BalancerConfig, RoundStats, RoundStatsDev,
-                       relax_spmd, combine_neutral)
+                       relax_spmd, combine_neutral, _note_host_transfer)
 from .frontier import multi_source_state
 from .operators import Operator
 from .partition import PartitionMeta
@@ -133,6 +133,55 @@ def make_round_fn(mesh, cfg: BalancerConfig, op: Operator,
     return jax.jit(fn)
 
 
+def make_fused_traversal_fn(mesh, cfg: BalancerConfig, op: Operator,
+                            sync_delta: bool = False,
+                            max_rounds: int = 10_000,
+                            values_of=lambda l: l,
+                            next_frontier=lambda old, new, f: new < old):
+    """Build the fused replicated-sync traversal: the whole BSP loop
+    as ONE ``lax.while_loop`` *inside* ``shard_map`` (DESIGN.md
+    section 11 applied to the distributed runtime).
+
+    The per-round all-reduce keeps labels identical across devices, so
+    the derived frontier — and therefore the loop condition — is
+    uniform without any extra collective: between dispatch and the
+    final label fetch no value crosses to the host.  ``values_of`` /
+    ``next_frontier`` move inside the traced loop (the host loop
+    applies them between dispatches instead).  Returns
+    ``(labels, rounds)`` — both device values."""
+    def trav_fn(stacked_g: Graph, labels, frontier):
+        g = Graph(row_ptr=stacked_g.row_ptr[0],
+                  col_idx=stacked_g.col_idx[0],
+                  edge_w=stacked_g.edge_w[0])
+
+        def cond(carry):
+            r, lab, fr = carry
+            return (r < max_rounds) & jnp.any(fr)
+
+        def body(carry):
+            r, lab, fr = carry
+            values = values_of(lab)
+            if sync_delta:
+                delta = jnp.zeros_like(lab)
+                delta = relax_spmd(g, values, delta, fr, cfg, op)
+                new = lab + _sync(delta, "add")
+            else:
+                new = _sync(relax_spmd(g, values, lab, fr, cfg, op),
+                            op.combine)
+            return r + 1, new, next_frontier(lab, new, fr)
+
+        r, labels, _ = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), labels, frontier))
+        return labels, r
+
+    gspec = Graph(row_ptr=P("dev"), col_idx=P("dev"), edge_w=P("dev"))
+    fn = shard_map(trav_fn, mesh=mesh,
+                   in_specs=(gspec, P(), P()),
+                   out_specs=(P(), P()),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
 # ---- master/mirror substrate (DESIGN.md section 6) -------------------------
 
 def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
@@ -141,7 +190,9 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
                          collect_stats: bool = False,
                          values_of=lambda l: l,
                          next_frontier=lambda old, new, f: new < old,
-                         post_sync=None, global_of=None):
+                         post_sync=None, global_of=None,
+                         fused: bool = False, max_rounds: int = 10_000,
+                         tol: float | None = None):
     """One BSP round over owned state: local ALB round, then Gluon's
     reduce-to-master -> broadcast-to-mirrors pair over the padded mirror
     lists.
@@ -172,105 +223,155 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
     third argument to ``post_sync(labels, acc, glob)``.  PageRank uses
     it for the dangling-mass sum (no extra host traffic: the reduction
     rides the round's existing collectives).
+
+    ``fused=True`` wraps the same round body in a ``lax.while_loop``
+    *inside* ``shard_map`` (DESIGN.md section 11): the activity count
+    and residual that the host loop fetches every round become carried
+    loop state — the psum/pmax in the round body make them uniform
+    across devices, so the loop condition is collective-safe — and the
+    traversal returns ``(labels_dev, frontier_dev, rounds)`` after a
+    single dispatch.  Stats collection stays per-dispatch, so
+    ``fused`` requires ``collect_stats=False``.
     """
     ndev = meta.num_devices
     v = meta.num_vertices
+    if fused and collect_stats:
+        raise ValueError("fused mirror traversal does not collect "
+                         "per-round stats (one dispatch, no per-round "
+                         "host boundary)")
     if post_sync is None:
         post_sync = ((lambda lab, acc: lab + acc) if sync_delta
                      else (lambda lab, acc: acc))
 
     def round_fn(stacked_g: Graph, mirror_t, incoming_t, lo_t, hi_t,
-                 labels, frontier):
+                 labels0, frontier0):
         g = Graph(row_ptr=stacked_g.row_ptr[0],
                   col_idx=stacked_g.col_idx[0],
                   edge_w=stacked_g.edge_w[0])
         mirror_t = mirror_t[0]        # [D, L]: rows indexed by owner
         incoming_t = incoming_t[0]    # [D, L]: rows indexed by toucher
         lo, hi = lo_t[0], hi_t[0]     # my owned range
-        labels, frontier = labels[0], frontier[0]      # [B, V]
-        b = labels.shape[0]
+        labels0, frontier0 = labels0[0], frontier0[0]  # [B, V]
+        b = labels0.shape[0]
         me = jax.lax.axis_index("dev")
 
-        values = values_of(labels)
-        base = jnp.zeros_like(labels) if sync_delta else labels
-        out = relax_spmd(g, values, base, frontier, cfg, op,
-                         collect_stats=collect_stats, return_dirty=True)
-        if collect_stats:
-            new, st, dirty = out
-        else:
-            (new, dirty), st = out, None
-        dirty_v = jnp.any(dirty, axis=0)               # [V] any-query
-        # non-dirty mirror slots carry the combiner's identity so
-        # skipping them is exact (same rule as the balancer's scatter)
-        neutral = combine_neutral(op.combine, new.dtype)
-
-        perm_fwd = [[(i, (i + s) % ndev) for i in range(ndev)]
-                    for s in range(ndev)]
-        perm_bwd = [[(i, (i - s) % ndev) for i in range(ndev)]
-                    for s in range(ndev)]
-
-        # ---- reduce-to-master: each ring step s ships my dirty values
-        # for vertices mastered s hops ahead; the sentinel-V padding is
-        # dropped by the scatter, non-dirty slots carry the neutral.
-        acc = new
-        n_exch = jnp.int32(0)
-        for s in range(1, ndev):
-            out_idx = mirror_t[(me + s) % ndev]
-            safe = jnp.where(out_idx < v, out_idx, 0)
-            live = (out_idx < v) & dirty_v[safe]
-            payload = jnp.where(live[None], new[:, safe], neutral)
-            n_exch += jnp.sum(live.astype(jnp.int32))
-            recv = jax.lax.ppermute(payload, "dev", perm_fwd[s])
-            in_idx = incoming_t[(me - s) % ndev]
-            if op.combine == "min":
-                acc = acc.at[:, in_idx].min(recv, mode="drop")
+        def one_round(labels, frontier):
+            values = values_of(labels)
+            base = jnp.zeros_like(labels) if sync_delta else labels
+            out = relax_spmd(g, values, base, frontier, cfg, op,
+                             collect_stats=collect_stats,
+                             return_dirty=True)
+            if collect_stats:
+                new, st, dirty = out
             else:
-                acc = acc.at[:, in_idx].add(recv, mode="drop")
+                (new, dirty), st = out, None
+            dirty_v = jnp.any(dirty, axis=0)           # [V] any-query
+            # non-dirty mirror slots carry the combiner's identity so
+            # skipping them is exact (same rule as the balancer's
+            # scatter)
+            neutral = combine_neutral(op.combine, new.dtype)
 
-        if global_of is not None:
-            ovids = jnp.arange(v, dtype=jnp.int32)
-            omask = (ovids >= lo) & (ovids < hi)
-            glob = jax.lax.psum(global_of(labels, omask), "dev")
-            final = post_sync(labels, acc, glob)
-        else:
-            final = post_sync(labels, acc)
+            perm_fwd = [[(i, (i + s) % ndev) for i in range(ndev)]
+                        for s in range(ndev)]
+            perm_bwd = [[(i, (i - s) % ndev) for i in range(ndev)]
+                        for s in range(ndev)]
 
-        # ---- broadcast-to-mirrors: masters push the reduced values
-        # back along the reverse ring; mirrors overwrite their copies.
-        gdirty = jnp.any(final != labels, axis=0)      # [V]
-        for s in range(1, ndev):
-            out_idx = incoming_t[(me - s) % ndev]
-            safe = jnp.where(out_idx < v, out_idx, 0)
-            live = (out_idx < v) & gdirty[safe]
-            payload = final[:, safe]
-            n_exch += jnp.sum(live.astype(jnp.int32))
-            recv = jax.lax.ppermute(payload, "dev", perm_bwd[s])
-            in_idx = mirror_t[(me + s) % ndev]
-            final = final.at[:, in_idx].set(recv, mode="drop")
+            # ---- reduce-to-master: each ring step s ships my dirty
+            # values for vertices mastered s hops ahead; the sentinel-V
+            # padding is dropped by the scatter, non-dirty slots carry
+            # the neutral.
+            acc = new
+            n_exch = jnp.int32(0)
+            for s in range(1, ndev):
+                out_idx = mirror_t[(me + s) % ndev]
+                safe = jnp.where(out_idx < v, out_idx, 0)
+                live = (out_idx < v) & dirty_v[safe]
+                payload = jnp.where(live[None], new[:, safe], neutral)
+                n_exch += jnp.sum(live.astype(jnp.int32))
+                recv = jax.lax.ppermute(payload, "dev", perm_fwd[s])
+                in_idx = incoming_t[(me - s) % ndev]
+                if op.combine == "min":
+                    acc = acc.at[:, in_idx].min(recv, mode="drop")
+                else:
+                    acc = acc.at[:, in_idx].add(recv, mode="drop")
 
-        new_frontier = next_frontier(labels, final, frontier)
-        active = jax.lax.psum(
-            jnp.sum(new_frontier.astype(jnp.int32)), "dev")
-        vids = jnp.arange(v, dtype=jnp.int32)
-        owned = (vids >= lo) & (vids < hi)
-        resid = jax.lax.pmax(jnp.max(jnp.where(
-            owned[None],
-            jnp.abs(final.astype(jnp.float32) - labels.astype(jnp.float32)),
-            0.0)), "dev")
+            if global_of is not None:
+                ovids = jnp.arange(v, dtype=jnp.int32)
+                omask = (ovids >= lo) & (ovids < hi)
+                glob = jax.lax.psum(global_of(labels, omask), "dev")
+                final = post_sync(labels, acc, glob)
+            else:
+                final = post_sync(labels, acc)
 
-        outs = (final[None], new_frontier[None], active, resid)
-        if collect_stats:
-            st = st._replace(
-                mirrors_synced=n_exch,
-                bytes_synced=n_exch * jnp.int32(b * new.dtype.itemsize))
-            outs += (jax.tree_util.tree_map(lambda x: x[None], st),)
-        return outs
+            # ---- broadcast-to-mirrors: masters push the reduced
+            # values back along the reverse ring; mirrors overwrite
+            # their copies.
+            gdirty = jnp.any(final != labels, axis=0)  # [V]
+            for s in range(1, ndev):
+                out_idx = incoming_t[(me - s) % ndev]
+                safe = jnp.where(out_idx < v, out_idx, 0)
+                live = (out_idx < v) & gdirty[safe]
+                payload = final[:, safe]
+                n_exch += jnp.sum(live.astype(jnp.int32))
+                recv = jax.lax.ppermute(payload, "dev", perm_bwd[s])
+                in_idx = mirror_t[(me + s) % ndev]
+                final = final.at[:, in_idx].set(recv, mode="drop")
+
+            new_frontier = next_frontier(labels, final, frontier)
+            active = jax.lax.psum(
+                jnp.sum(new_frontier.astype(jnp.int32)), "dev")
+            vids = jnp.arange(v, dtype=jnp.int32)
+            owned = (vids >= lo) & (vids < hi)
+            resid = jax.lax.pmax(jnp.max(jnp.where(
+                owned[None],
+                jnp.abs(final.astype(jnp.float32)
+                        - labels.astype(jnp.float32)),
+                0.0)), "dev")
+            if collect_stats:
+                st = st._replace(
+                    mirrors_synced=n_exch,
+                    bytes_synced=n_exch
+                    * jnp.int32(b * new.dtype.itemsize))
+            return final, new_frontier, active, resid, st
+
+        if not fused:
+            final, new_frontier, active, resid, st = one_round(
+                labels0, frontier0)
+            outs = (final[None], new_frontier[None], active, resid)
+            if collect_stats:
+                outs += (jax.tree_util.tree_map(lambda x: x[None], st),)
+            return outs
+
+        # fused: the host loop's per-round observations (activity,
+        # residual) become carried state; both are psum/pmax-reduced in
+        # the body, so the condition is uniform across devices.
+        def cond(carry):
+            r, lab, fr, active, resid = carry
+            ok = (r < max_rounds) & (active > 0)
+            if tol is not None:
+                ok = ok & (resid >= tol)
+            return ok
+
+        def body(carry):
+            r, lab, fr, active, resid = carry
+            final, nfr, active, resid, _ = one_round(lab, fr)
+            return r + 1, final, nfr, active, resid
+
+        active0 = jax.lax.psum(
+            jnp.sum(frontier0.astype(jnp.int32)), "dev")
+        r, final, fr, _, _ = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), labels0, frontier0, active0,
+                         jnp.float32(jnp.inf)))
+        return final[None], fr[None], r
 
     gspec = Graph(row_ptr=P("dev"), col_idx=P("dev"), edge_w=P("dev"))
-    out_specs = (P("dev"), P("dev"), P(), P())
-    if collect_stats:
-        out_specs += (RoundStatsDev(
-            *([P("dev")] * len(RoundStatsDev._fields))),)
+    if fused:
+        out_specs = (P("dev"), P("dev"), P())
+    else:
+        out_specs = (P("dev"), P("dev"), P(), P())
+        if collect_stats:
+            out_specs += (RoundStatsDev(
+                *([P("dev")] * len(RoundStatsDev._fields))),)
     fn = shard_map(round_fn, mesh=mesh,
                    in_specs=(gspec, P("dev"), P("dev"), P("dev"), P("dev"),
                              P("dev"), P("dev")),
@@ -310,6 +411,15 @@ def stats_per_device(st: RoundStatsDev) -> list[RoundStats]:
         jax.tree_util.tree_map(lambda x: x[d], st)) for d in range(ndev)]
 
 
+def _any_host(frontier) -> bool:
+    """The replicated host loop's per-round frontier probe — a
+    blocking device->host sync, counted against the traversal's
+    ``host_transfers`` (the quantity ``mode='fused'`` drives to
+    zero)."""
+    _note_host_transfer()
+    return bool(jnp.any(frontier))
+
+
 def _require_push_direction(cfg: BalancerConfig) -> None:
     """The distributed runtime is push-only (partitions are cut along
     out-edges; the sync substrates ship scatter targets) — refuse
@@ -338,7 +448,8 @@ def run_distributed(stacked_g: Graph, mesh, op: Operator,
                     max_rounds: int = 10_000,
                     collect_stats: bool = False,
                     sync: str = "replicated",
-                    meta: PartitionMeta | None = None):
+                    meta: PartitionMeta | None = None,
+                    mode: str = "host"):
     """Generic distributed data-driven loop. Returns (labels, rounds,
     total_seconds) — or, with ``collect_stats=True``, (labels, rounds,
     total_seconds, stats) where ``stats[round][device]`` is a host
@@ -350,6 +461,12 @@ def run_distributed(stacked_g: Graph, mesh, op: Operator,
     frontier stay per-device inside the loop and only a scalar activity
     count comes back to the host each round.
 
+    ``mode="fused"`` dispatches the whole traversal as ONE
+    ``lax.while_loop`` inside ``shard_map`` (DESIGN.md section 11):
+    zero host syncs between rounds for either substrate.  Per-round
+    stats need the per-round host boundary, so fused requires
+    ``collect_stats=False``.
+
     The distributed runtime is push-only: partitions are cut along
     out-edges and the sync substrates exchange scatter targets, so
     direction-optimized configs (DESIGN.md section 9) are refused
@@ -357,17 +474,32 @@ def run_distributed(stacked_g: Graph, mesh, op: Operator,
     """
     _require_push_direction(cfg)
     _require_meta(meta, sync)
+    if mode not in ("host", "fused"):
+        raise ValueError(f"unknown distributed mode {mode!r} "
+                         "(host|fused)")
+    if mode == "fused" and collect_stats:
+        raise ValueError("mode='fused' runs with collect_stats=False "
+                         "(per-round stats need the per-round host "
+                         "boundary)")
     if sync == "mirror":
         return _run_mirror(stacked_g, mesh, op, init_labels, init_frontier,
                            cfg, values_of, next_frontier, sync_delta,
-                           max_rounds, collect_stats, meta)
+                           max_rounds, collect_stats, meta, mode=mode)
+    if mode == "fused":
+        trav_fn = make_fused_traversal_fn(
+            mesh, cfg, op, sync_delta=sync_delta, max_rounds=max_rounds,
+            values_of=values_of, next_frontier=next_frontier)
+        t0 = time.perf_counter()
+        labels, r = trav_fn(stacked_g, init_labels, init_frontier)
+        jax.block_until_ready(labels)
+        return labels, int(r), time.perf_counter() - t0
     round_fn = make_round_fn(mesh, cfg, op, sync_delta=sync_delta,
                              collect_stats=collect_stats)
     labels, frontier = init_labels, init_frontier
     rounds = 0
     stats = [] if collect_stats else None
     t0 = time.perf_counter()
-    while rounds < max_rounds and bool(jnp.any(frontier)):
+    while rounds < max_rounds and _any_host(frontier):
         old = labels
         out = round_fn(stacked_g, values_of(labels), labels, frontier)
         if collect_stats:
@@ -387,25 +519,44 @@ def run_distributed(stacked_g: Graph, mesh, op: Operator,
 def _run_mirror(stacked_g, mesh, op, init_labels, init_frontier, cfg,
                 values_of, next_frontier, sync_delta, max_rounds,
                 collect_stats, meta: PartitionMeta, post_sync=None,
-                tol: float | None = None, global_of=None):
+                tol: float | None = None, global_of=None,
+                mode: str = "host"):
     """Owned-state loop shared by the data-driven drivers and the
     convergence-driven ones: stops when the frontier empties, the round
     budget runs out, or (``tol`` set) the owned-entry residual drops
     below it.  State is carried batched (``[D, B, V]``); un-batched
-    callers get the query axis added here and squeezed on return."""
+    callers get the query axis added here and squeezed on return.
+    ``mode="fused"`` runs the whole loop on device in one dispatch
+    (see :func:`make_mirror_round_fn`)."""
     batched = init_labels.ndim == 2
     if not batched:
         init_labels = init_labels[None]
         init_frontier = init_frontier[None]
+    mirror_t, incoming_t, lo, hi = _mirror_tables(meta)
+    ndev = meta.num_devices
+    labels_dev = jnp.tile(init_labels[None], (ndev, 1, 1))
+    frontier_dev = jnp.tile(init_frontier[None], (ndev, 1, 1))
+    if mode == "fused":
+        trav_fn = make_mirror_round_fn(
+            mesh, cfg, op, meta, sync_delta=sync_delta,
+            collect_stats=False, values_of=values_of,
+            next_frontier=next_frontier, post_sync=post_sync,
+            global_of=global_of, fused=True, max_rounds=max_rounds,
+            tol=tol)
+        t0 = time.perf_counter()
+        labels_dev, frontier_dev, r = trav_fn(
+            stacked_g, mirror_t, incoming_t, lo, hi,
+            labels_dev, frontier_dev)
+        jax.block_until_ready(labels_dev)
+        labels = assemble_owned(labels_dev, meta)
+        if not batched:
+            labels = labels[0]
+        return labels, int(r), time.perf_counter() - t0
     round_fn = make_mirror_round_fn(
         mesh, cfg, op, meta, sync_delta=sync_delta,
         collect_stats=collect_stats, values_of=values_of,
         next_frontier=next_frontier, post_sync=post_sync,
         global_of=global_of)
-    mirror_t, incoming_t, lo, hi = _mirror_tables(meta)
-    ndev = meta.num_devices
-    labels_dev = jnp.tile(init_labels[None], (ndev, 1, 1))
-    frontier_dev = jnp.tile(init_frontier[None], (ndev, 1, 1))
     active = int(jnp.sum(init_frontier))
     rounds = 0
     stats = [] if collect_stats else None
@@ -419,6 +570,7 @@ def _run_mirror(stacked_g, mesh, op, init_labels, init_frontier, cfg,
         else:
             labels_dev, frontier_dev, active_a, resid = out
         active = int(active_a)
+        _note_host_transfer()      # the activity/residual probe blocks
         rounds += 1
         if tol is not None and float(resid) < tol:
             break
@@ -438,16 +590,20 @@ def sssp_distributed(stacked_g: Graph, mesh, source: int,
                      max_rounds: int = 10_000,
                      collect_stats: bool = False,
                      sync: str = "replicated",
-                     meta: PartitionMeta | None = None):
+                     meta: PartitionMeta | None = None,
+                     mode: str = "host"):
     """Distributed single-source SSSP over a partitioned (stacked-CSR)
     graph; ``sync`` selects the replicated all-reduce or the
-    master/mirror boundary exchange (DESIGN.md section 6)."""
+    master/mirror boundary exchange (DESIGN.md section 6);
+    ``mode="fused"`` runs the whole traversal in one device dispatch
+    (DESIGN.md section 11)."""
     v = stacked_g.row_ptr.shape[-1] - 1
     dist = jnp.full((v,), INF, jnp.int32).at[source].set(0)
     frontier = jnp.zeros((v,), bool).at[source].set(True)
     return run_distributed(stacked_g, mesh, ops.SSSP_RELAX, dist, frontier,
                            cfg, max_rounds=max_rounds,
-                           collect_stats=collect_stats, sync=sync, meta=meta)
+                           collect_stats=collect_stats, sync=sync,
+                           meta=meta, mode=mode)
 
 
 def bfs_distributed(stacked_g: Graph, mesh, source: int,
@@ -455,14 +611,16 @@ def bfs_distributed(stacked_g: Graph, mesh, source: int,
                     max_rounds: int = 10_000,
                     collect_stats: bool = False,
                     sync: str = "replicated",
-                    meta: PartitionMeta | None = None):
+                    meta: PartitionMeta | None = None,
+                    mode: str = "host"):
     """Distributed single-source BFS (see :func:`sssp_distributed`)."""
     v = stacked_g.row_ptr.shape[-1] - 1
     lvl = jnp.full((v,), INF, jnp.int32).at[source].set(0)
     frontier = jnp.zeros((v,), bool).at[source].set(True)
     return run_distributed(stacked_g, mesh, ops.BFS_HOP, lvl, frontier,
                            cfg, max_rounds=max_rounds,
-                           collect_stats=collect_stats, sync=sync, meta=meta)
+                           collect_stats=collect_stats, sync=sync,
+                           meta=meta, mode=mode)
 
 
 def sssp_batch_distributed(stacked_g: Graph, mesh, sources,
@@ -470,7 +628,8 @@ def sssp_batch_distributed(stacked_g: Graph, mesh, sources,
                            max_rounds: int = 10_000,
                            collect_stats: bool = False,
                            sync: str = "replicated",
-                           meta: PartitionMeta | None = None):
+                           meta: PartitionMeta | None = None,
+                           mode: str = "host"):
     """Batched multi-source SSSP on the distributed runtime: B queries
     share every BSP round (union-frontier rounds per device) and, under
     ``sync="mirror"``, every boundary exchange (one ``[B]`` vector per
@@ -479,7 +638,8 @@ def sssp_batch_distributed(stacked_g: Graph, mesh, sources,
     dist, frontier = multi_source_state(v, sources, INF)
     return run_distributed(stacked_g, mesh, ops.SSSP_RELAX, dist, frontier,
                            cfg, max_rounds=max_rounds,
-                           collect_stats=collect_stats, sync=sync, meta=meta)
+                           collect_stats=collect_stats, sync=sync,
+                           meta=meta, mode=mode)
 
 
 def bfs_batch_distributed(stacked_g: Graph, mesh, sources,
@@ -487,13 +647,15 @@ def bfs_batch_distributed(stacked_g: Graph, mesh, sources,
                           max_rounds: int = 10_000,
                           collect_stats: bool = False,
                           sync: str = "replicated",
-                          meta: PartitionMeta | None = None):
+                          meta: PartitionMeta | None = None,
+                          mode: str = "host"):
     """Batched multi-source BFS (see :func:`sssp_batch_distributed`)."""
     v = stacked_g.row_ptr.shape[-1] - 1
     lvl, frontier = multi_source_state(v, sources, INF)
     return run_distributed(stacked_g, mesh, ops.BFS_HOP, lvl, frontier,
                            cfg, max_rounds=max_rounds,
-                           collect_stats=collect_stats, sync=sync, meta=meta)
+                           collect_stats=collect_stats, sync=sync,
+                           meta=meta, mode=mode)
 
 
 def cc_distributed(stacked_g: Graph, mesh,
@@ -501,7 +663,8 @@ def cc_distributed(stacked_g: Graph, mesh,
                    max_rounds: int = 10_000,
                    collect_stats: bool = False,
                    sync: str = "replicated",
-                   meta: PartitionMeta | None = None):
+                   meta: PartitionMeta | None = None,
+                   mode: str = "host"):
     """Distributed connected components by min-label propagation
     (expects a symmetrized input; see :func:`sssp_distributed` for the
     ``sync`` substrates)."""
@@ -510,7 +673,8 @@ def cc_distributed(stacked_g: Graph, mesh,
     frontier = jnp.ones((v,), bool)
     return run_distributed(stacked_g, mesh, ops.CC_MIN, comp, frontier,
                            cfg, max_rounds=max_rounds,
-                           collect_stats=collect_stats, sync=sync, meta=meta)
+                           collect_stats=collect_stats, sync=sync,
+                           meta=meta, mode=mode)
 
 
 def kcore_distributed(stacked_g: Graph, mesh, k: int,
@@ -518,7 +682,8 @@ def kcore_distributed(stacked_g: Graph, mesh, k: int,
                       max_rounds: int = 10_000,
                       collect_stats: bool = False,
                       sync: str = "replicated",
-                      meta: PartitionMeta | None = None):
+                      meta: PartitionMeta | None = None,
+                      mode: str = "host"):
     """Distributed k-core over a partitioned *symmetrized* graph.
 
     Degrees only decrease, so "dead" (< k) is monotone and the
@@ -535,10 +700,24 @@ def kcore_distributed(stacked_g: Graph, mesh, k: int,
         stacked_g, mesh, ops.KCORE_DEC, deg, frontier, cfg,
         next_frontier=lambda old, new, f: (new < k) & (old >= k),
         sync_delta=True, max_rounds=max_rounds,
-        collect_stats=collect_stats, sync=sync, meta=meta)
+        collect_stats=collect_stats, sync=sync, meta=meta, mode=mode)
     labels, rest = out[0], out[1:]
     in_core = (labels >= k).astype(jnp.int32)
     return (in_core,) + rest
+
+
+@partial(jax.jit, static_argnames=("damping",))
+def _pr_update(rank, inv_out, sink, acc, damping: float):
+    """Replicated PageRank's post-round rank update + residual as one
+    shared jitted subgraph: the host loop calls it between dispatches,
+    the fused while_loop inlines it — same fusion decisions both ways,
+    so the f32 rounding (FMA contraction of the damping update) is
+    bitwise-identical across modes."""
+    v = rank.shape[0]
+    dangling = jnp.sum(jnp.where(sink, rank, 0.0))
+    new_rank = (1.0 - damping) / v + damping * (acc + dangling / v)
+    delta = jnp.max(jnp.abs(new_rank - rank))
+    return new_rank, delta
 
 
 def pagerank_distributed(stacked_rg: Graph, mesh, out_degrees,
@@ -547,15 +726,26 @@ def pagerank_distributed(stacked_rg: Graph, mesh, out_degrees,
                          max_rounds: int = 1000,
                          collect_stats: bool = False,
                          sync: str = "replicated",
-                         meta: PartitionMeta | None = None):
+                         meta: PartitionMeta | None = None,
+                         mode: str = "host"):
     """stacked_rg: partitioned *reverse* graph (pull traverses
     in-edges).  Dangling vertices (out-degree 0) redistribute their
     rank mass uniformly each round, matching the single-device
     :func:`repro.core.apps.drivers.pagerank` exactly (under the mirror
     substrate the dangling sum is reduced over owned master ranges via
-    the ``global_of`` hook — exact and free of extra host traffic)."""
+    the ``global_of`` hook — exact and free of extra host traffic).
+    ``mode="fused"`` moves the whole power iteration — including the
+    residual check that otherwise blocks the host every round — into
+    one ``lax.while_loop`` inside ``shard_map``."""
     _require_push_direction(cfg)
     _require_meta(meta, sync)
+    if mode not in ("host", "fused"):
+        raise ValueError(f"unknown distributed mode {mode!r} "
+                         "(host|fused)")
+    if mode == "fused" and collect_stats:
+        raise ValueError("mode='fused' runs with collect_stats=False "
+                         "(per-round stats need the per-round host "
+                         "boundary)")
     v = stacked_rg.row_ptr.shape[-1] - 1
     outdeg = out_degrees.astype(jnp.float32)
     inv_out = jnp.where(outdeg > 0, 1.0 / jnp.maximum(outdeg, 1.0), 0.0)
@@ -575,7 +765,43 @@ def pagerank_distributed(stacked_rg: Graph, mesh, out_degrees,
                 (1.0 - damping) / v + damping * (acc + dang / v)),
             global_of=lambda lab, owned: jnp.sum(
                 jnp.where(owned[None] & sink[None], lab, 0.0)),
-            tol=tol)
+            tol=tol, mode=mode)
+    if mode == "fused":
+        def trav_fn(sg: Graph, rank, inv_out, sink):
+            g = Graph(row_ptr=sg.row_ptr[0], col_idx=sg.col_idx[0],
+                      edge_w=sg.edge_w[0])
+            fr = jnp.ones((v,), bool)
+
+            def cond(carry):
+                r, rank, delta = carry
+                return (r < max_rounds) & (delta >= tol)
+
+            def body(carry):
+                r, rank, delta = carry
+                contrib = rank * inv_out
+                acc = relax_spmd(g, contrib,
+                                 jnp.zeros((v,), jnp.float32), fr,
+                                 cfg, ops.PR_PULL)
+                acc = _sync(acc, "add")
+                new_rank, delta = _pr_update(rank, inv_out, sink, acc,
+                                             float(damping))
+                return r + 1, new_rank, delta
+
+            r, rank, _ = jax.lax.while_loop(
+                cond, body,
+                (jnp.int32(0), rank, jnp.float32(jnp.inf)))
+            return rank, r
+
+        gspec = Graph(row_ptr=P("dev"), col_idx=P("dev"),
+                      edge_w=P("dev"))
+        fn = jax.jit(shard_map(trav_fn, mesh=mesh,
+                               in_specs=(gspec, P(), P(), P()),
+                               out_specs=(P(), P()),
+                               check_rep=False))
+        t0 = time.perf_counter()
+        rank, r = fn(stacked_rg, rank, inv_out, sink)
+        jax.block_until_ready(rank)
+        return rank, int(r), time.perf_counter() - t0
     round_fn = make_round_fn(mesh, cfg, ops.PR_PULL, sync_delta=True,
                              collect_stats=collect_stats)
     rounds = 0
@@ -583,7 +809,6 @@ def pagerank_distributed(stacked_rg: Graph, mesh, out_degrees,
     t0 = time.perf_counter()
     while rounds < max_rounds:
         contrib = rank * inv_out
-        dangling = jnp.sum(jnp.where(sink, rank, 0.0))
         out = round_fn(stacked_rg, contrib, jnp.zeros((v,), jnp.float32),
                        frontier)
         if collect_stats:
@@ -591,8 +816,10 @@ def pagerank_distributed(stacked_rg: Graph, mesh, out_degrees,
             stats.append(stats_per_device(st))
         else:
             acc = out
-        new_rank = (1.0 - damping) / v + damping * (acc + dangling / v)
-        delta = float(jnp.max(jnp.abs(new_rank - rank)))
+        new_rank, delta_dev = _pr_update(rank, inv_out, sink, acc,
+                                         float(damping))
+        delta = float(delta_dev)
+        _note_host_transfer()      # the residual check blocks
         rank = new_rank
         rounds += 1
         if delta < tol:

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from repro.core.balancer import _apply
 
 from . import edge_lb as _edge_lb
+from . import merge_path as _merge_path
 from . import twc_gather as _twc
 
 
@@ -86,6 +87,61 @@ def edge_lb_apply(g, values, labels, fmask, hvidx, hdeg, hrow, total,
     return edge_lb_apply_static(g, values, labels, fmask, hvidx, hdeg,
                                 hrow, total, ecap, op, distribution,
                                 num_tiles, tile_edges)
+
+
+# ---------------------------------------------------------------------------
+# Merge-path executor (equal-work edge tiles, no bins, no inspector)
+# ---------------------------------------------------------------------------
+
+def merge_path_apply_static(g, values, labels, fmask, hvidx, hdeg, hrow,
+                            total, ecap: int, op, distribution: str,
+                            num_tiles: int, tile_edges: int):
+    """Fully-jit merge-path entry: trace-safe body (no own jit wrapper).
+
+    Signature-compatible with the LB entries so the executor registry
+    can route the whole frontier through it (``effective_plan``
+    collapses the plan to LB-all under this backend).  The co-ranked
+    equal-work deal is contiguous by construction, so ``distribution``
+    and ``num_tiles`` do not apply and are ignored."""
+    del distribution, num_tiles
+    v = labels.shape[-1]
+    start_e = jnp.cumsum(hdeg) - hdeg
+    ge, j, mask = _merge_path.merge_path_map(
+        start_e, hrow, total, ecap, tile_edges=tile_edges)
+    dst = g.col_idx[ge]
+    w = g.edge_w[ge]
+    j = jnp.clip(j, 0, hvidx.shape[0] - 1)
+    src = jnp.where(hvidx.shape[0] > 0, hvidx[j], 0)
+    ssafe = jnp.where(src < v, src, 0)
+    if op.direction == "push":
+        live = fmask[:, ssafe]                           # [B, n]
+        cand = op.msg(values[:, ssafe], w[None])
+        return _apply(labels, dst, cand, mask, live, op.combine)
+    # pull: value AND activity gathered at the in-neighbour (``dst`` in
+    # the reverse CSR), combined at the anchor (DESIGN.md section 9)
+    live = fmask[:, dst]                                 # [B, n]
+    cand = op.msg(values[:, dst], w[None])
+    return _apply(labels, src, cand, mask, live, op.combine)
+
+
+@partial(jax.jit,
+         static_argnames=("ecap", "op", "distribution", "num_tiles",
+                          "tile_edges"))
+def merge_path_apply(g, values, labels, fmask, hvidx, hdeg, hrow, total,
+                     ecap: int, op, distribution: str, num_tiles: int,
+                     tile_edges: int):
+    """Host-driven merge-path entry: jitted per (ecap, op, ...) bucket."""
+    return merge_path_apply_static(g, values, labels, fmask, hvidx,
+                                   hdeg, hrow, total, ecap, op,
+                                   distribution, num_tiles, tile_edges)
+
+
+def merge_path_no_bins(*_args, **_kwargs):
+    """Bin-entry placeholder of the merge-path pair: the backend's plan
+    has no degree bins (``effective_plan``), so reaching this is a
+    planner bug, not a fallback."""
+    raise RuntimeError("merge_path backend plans no degree bins; "
+                       "its bin executor entries are unreachable")
 
 
 # ---------------------------------------------------------------------------

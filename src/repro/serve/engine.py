@@ -35,7 +35,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import Graph, INF
-from repro.core.balancer import BalancerConfig
+from repro.core.balancer import (BalancerConfig, run_fused,
+                                 host_transfer_count,
+                                 _note_host_transfer)
 from repro.core.frontier import rows_active, refill_rows, load_rows
 from repro.core.apps.drivers import QUERY_APPS, step_batch
 from repro.core.streaming import UpdateBatch, apply_updates, diff_batch
@@ -92,6 +94,15 @@ class QueryService:
     :class:`repro.serve.scheduler.Scheduler`); ``cache_capacity``
     bounds the LRU result cache (0 disables it).
 
+    ``mode="fused"`` advances each bank by a device-resident CHUNK of
+    up to ``fused_rounds`` balancer rounds per service step (one
+    ``lax.while_loop`` dispatch, DESIGN.md section 11): admission,
+    retirement, and preemption then happen at chunk granularity, while
+    every served result stays bitwise equal to host mode (fused rounds
+    are the same SPMD rounds).  ``ServiceStats.host_transfers`` makes
+    the amortization observable — one fused observation per step
+    instead of one blocking sync per round.
+
     Typical use::
 
         svc = QueryService(num_slots=8)
@@ -106,12 +117,16 @@ class QueryService:
                  cfg: BalancerConfig = BalancerConfig(),
                  mode: str = "host",
                  round_budget: Optional[int] = None,
-                 cache_capacity: int = 256) -> None:
+                 cache_capacity: int = 256,
+                 fused_rounds: int = 8) -> None:
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
+        if mode == "fused" and fused_rounds < 1:
+            raise ValueError("fused_rounds must be >= 1")
         self.num_slots = num_slots
         self.cfg = cfg
         self.mode = mode
+        self.fused_rounds = fused_rounds
         self.queue = QueryQueue()
         self.scheduler = Scheduler(round_budget=round_budget)
         self.cache = ResultCache(capacity=cache_capacity)
@@ -371,22 +386,38 @@ class QueryService:
         if busy == 0:
             return False
 
-        # 4. one balancer round for the whole bank
-        bank.labels, bank.frontier, _ = step_batch(
-            bank.g, bank.labels, bank.frontier, self.cfg, bank.op,
-            mode=self.mode)
+        # 4. one balancer round for the whole bank — or, in fused
+        #    mode, a CHUNK of up to ``fused_rounds`` rounds as ONE
+        #    device dispatch (DESIGN.md section 11): the chunk's round
+        #    loop runs with zero host syncs, and the per-step
+        #    observation below amortizes over the whole chunk.
+        t_sync = host_transfer_count()
+        if self.mode == "fused":
+            bank.labels, bank.frontier, r_dev, _ = run_fused(
+                bank.g, bank.labels, bank.frontier, self.cfg, bank.op,
+                max_rounds=self.fused_rounds)
+        else:
+            bank.labels, bank.frontier, _ = step_batch(
+                bank.g, bank.labels, bank.frontier, self.cfg, bank.op,
+                mode=self.mode)
+            r_dev = 1
         self.stats.record_step(busy=busy, total=b)
-        for q in bank.slot_q:
-            if q is not None:
-                q.slot_rounds += 1
 
         # 5. retire: occupied rows whose frontier emptied have
         #    converged — publish, cache, free the slot.  The steady
-        #    per-round transfer is only the ``bool[B]`` liveness
-        #    vector; the [B, V] labels are fetched (one dense
-        #    device_get — cheaper to dispatch than per-row gathers)
-        #    only on rounds where something actually retired.
-        act = jax.device_get(rows_active(bank.frontier))
+        #    per-step transfer is only the chunk's round count plus the
+        #    ``bool[B]`` liveness vector (ONE fused fetch); the [B, V]
+        #    labels are fetched (one dense device_get — cheaper to
+        #    dispatch than per-row gathers) only on steps where
+        #    something actually retired.
+        rounds_ran, act = jax.device_get(
+            (r_dev, rows_active(bank.frontier)))
+        _note_host_transfer()
+        rounds_ran = int(rounds_ran)
+        for q in bank.slot_q:
+            if q is not None:
+                q.slot_rounds += rounds_ran
+        self.stats.host_transfers += host_transfer_count() - t_sync
         done = [slot for slot, q in enumerate(bank.slot_q)
                 if q is not None and not act[slot]]
         if done:

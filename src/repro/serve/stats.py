@@ -27,6 +27,10 @@ class ServiceStats:
     slot_rounds_total: int = 0     # B per step (the capacity offered)
     slot_rounds_busy: int = 0      # ... of which held a RUNNING query
     preemptions: int = 0
+    host_transfers: int = 0        # device->host syncs during stepping
+    #                                (balancer round counts + liveness
+    #                                probes; fused mode amortizes them
+    #                                over whole chunks of rounds)
     rounds_in_system: List[int] = dataclasses.field(default_factory=list)
 
     def record_step(self, busy: int, total: int) -> None:
@@ -76,6 +80,7 @@ class ServiceStats:
             "steps": self.steps,
             "occupancy": round(self.occupancy, 4),
             "preemptions": self.preemptions,
+            "host_transfers": self.host_transfers,
             "lat_rounds_p50": self.latency_percentile(50),
             "lat_rounds_p95": self.latency_percentile(95),
         }

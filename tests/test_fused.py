@@ -1,0 +1,394 @@
+"""Fused device-resident traversal loop (DESIGN.md section 11).
+
+Four properties under test:
+
+* **bitwise parity** — ``mode="fused"`` labels, round counts, and
+  per-round stats (frontier size/edges + resolved direction) equal
+  host mode across strategy × backend × direction × batch cells (the
+  exhaustive matrix runs under ``-m slow``; a representative slice
+  stays in tier 1);
+* **zero host syncs** — structurally: the host-path round entries are
+  poisoned under the spy and the ``host_transfers`` counter must not
+  move between the fused dispatch and the final fetch;
+* **merge-path mapping** — the co-ranked tile search against a numpy
+  ``searchsorted`` oracle at the tile boundaries (empty frontier,
+  one huge vertex, ragged tail tile, zero-degree runs);
+* **bounded jit caches** — the ``_gather_bin`` per-(cap, fcap, v)
+  bucket cache evicts LRU at its cap instead of growing without bound.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import graph as G
+from repro.core import balancer
+from repro.core.balancer import (BalancerConfig, host_transfer_count,
+                                 run_fused)
+from repro.core.apps import drivers as drv
+from repro.kernels import merge_path as mp
+
+STRATS = ["vertex", "twc", "edge_lb", "alb"]
+BACKENDS = [None, "pallas", "merge_path"]
+DIRS = ["push", "pull", "adaptive"]
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return G.uniform_random(200, avg_degree=6, seed=3)
+
+
+@pytest.fixture(scope="module")
+def sym_graph(graph):
+    return G.symmetrized(graph)
+
+
+def _assert_fused_matches_host(run, check_stats=True):
+    """run(mode) -> AppResult; asserts bitwise parity + zero fused
+    transfers + per-round stats/direction-trace agreement."""
+    rh = run("host")
+    t0 = host_transfer_count()
+    rf = run("fused")
+    assert rf.host_transfers == 0
+    # the AppResult accounting and the module counter must agree: the
+    # fused traversal touched the host zero times
+    assert host_transfer_count() - t0 == 0
+    np.testing.assert_array_equal(np.asarray(rh.labels),
+                                  np.asarray(rf.labels))
+    assert rh.rounds == rf.rounds
+    assert rh.host_transfers >= rh.rounds   # >= 1 blocking sync/round
+    if rh.stats is not None or rf.stats is not None:
+        assert check_stats
+        assert len(rh.stats) == len(rf.stats)
+        for a, b in zip(rh.stats, rf.stats):
+            assert (a.frontier_size, a.frontier_edges, a.direction) == \
+                   (b.frontier_size, b.frontier_edges, b.direction)
+            assert b.host_transfers == 0
+
+
+# ---------------------------------------------------------------------------
+# parity: representative tier-1 slice
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("strategy", STRATS)
+def test_sssp_fused_parity_adaptive(graph, strategy, backend):
+    cfg = BalancerConfig(strategy=strategy, threshold=64,
+                         direction="adaptive", backend=backend)
+    _assert_fused_matches_host(
+        lambda mode: drv.sssp(graph, 0, cfg=cfg, mode=mode,
+                              collect_stats=True))
+
+
+@pytest.mark.parametrize("direction", ["push", "pull"])
+@pytest.mark.parametrize("backend", [None, "merge_path"])
+def test_bfs_fused_parity_directions(graph, direction, backend):
+    cfg = BalancerConfig(strategy="alb", threshold=64,
+                         direction=direction, backend=backend)
+    _assert_fused_matches_host(
+        lambda mode: drv.bfs(graph, 0, cfg=cfg, mode=mode,
+                             collect_stats=True))
+
+
+@pytest.mark.parametrize("app,sources", [("bfs", [0, 5, 9, 17]),
+                                         ("sssp", [0, 5, 99, 150])])
+def test_batch_fused_parity(graph, app, sources):
+    cfg = BalancerConfig(strategy="alb", threshold=64,
+                         direction="adaptive", backend="merge_path")
+    batch = drv.bfs_batch if app == "bfs" else drv.sssp_batch
+    _assert_fused_matches_host(
+        lambda mode: batch(graph, sources, cfg=cfg, mode=mode,
+                           collect_stats=True))
+
+
+def test_cc_fused_parity(sym_graph):
+    cfg = BalancerConfig(strategy="alb", threshold=64,
+                         direction="adaptive")
+    _assert_fused_matches_host(
+        lambda mode: drv.cc(sym_graph, cfg=cfg, mode=mode,
+                            collect_stats=True))
+
+
+def test_kcore_fused_parity(sym_graph):
+    cfg = BalancerConfig(strategy="alb", threshold=64)
+    _assert_fused_matches_host(
+        lambda mode: drv.kcore(sym_graph, 3, cfg=cfg, mode=mode,
+                               collect_stats=True))
+
+
+def test_pagerank_fused_parity(graph):
+    cfg = BalancerConfig(strategy="alb", threshold=64)
+    rh = drv.pagerank(graph, cfg=cfg, mode="host")
+    rf = drv.pagerank(graph, cfg=cfg, mode="fused")
+    # f32 power iteration: bitwise, not just allclose — both modes run
+    # the identical jitted round arithmetic (drivers._pr_round_math)
+    np.testing.assert_array_equal(np.asarray(rh.labels),
+                                  np.asarray(rf.labels))
+    assert rh.rounds == rf.rounds
+    assert rf.host_transfers == 0 and rh.host_transfers >= rh.rounds
+
+
+def test_fused_rejects_non_min_combine(graph):
+    with pytest.raises(ValueError, match="min-combine"):
+        run_fused(graph, jnp.zeros((graph.num_vertices,), jnp.float32),
+                  jnp.ones((graph.num_vertices,), bool),
+                  BalancerConfig(), drv.ops.PR_PULL)
+
+
+# ---------------------------------------------------------------------------
+# parity: exhaustive matrix (slow suite; also gated by
+# benchmarks/fig_fused.py --smoke)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("strategy", STRATS)
+def test_fused_full_matrix(strategy, backend):
+    g = G.road_grid(8, seed=0)
+    gs = G.symmetrized(g)
+    for direction in DIRS:
+        cfg = BalancerConfig(strategy=strategy, threshold=16,
+                             direction=direction, backend=backend)
+        _assert_fused_matches_host(
+            lambda mode: drv.sssp(g, 0, cfg=cfg, mode=mode,
+                                  collect_stats=True))
+        _assert_fused_matches_host(
+            lambda mode: drv.bfs(g, 0, cfg=cfg, mode=mode,
+                                 collect_stats=True))
+        _assert_fused_matches_host(
+            lambda mode: drv.cc(gs, cfg=cfg, mode=mode,
+                                collect_stats=True))
+        _assert_fused_matches_host(
+            lambda mode: drv.sssp_batch(g, [0, 7, 21, 63], cfg=cfg,
+                                        mode=mode, collect_stats=True))
+        _assert_fused_matches_host(
+            lambda mode: drv.bfs_batch(g, [0, 7, 21, 63], cfg=cfg,
+                                       mode=mode, collect_stats=True))
+    # kcore / pagerank are push-only drivers
+    cfg = BalancerConfig(strategy=strategy, threshold=16,
+                         backend=backend)
+    _assert_fused_matches_host(
+        lambda mode: drv.kcore(gs, 2, cfg=cfg, mode=mode,
+                               collect_stats=True))
+    rh = drv.pagerank(g, cfg=cfg, mode="host")
+    rf = drv.pagerank(g, cfg=cfg, mode="fused")
+    np.testing.assert_array_equal(np.asarray(rh.labels),
+                                  np.asarray(rf.labels))
+    assert rh.rounds == rf.rounds and rf.host_transfers == 0
+
+
+# ---------------------------------------------------------------------------
+# zero-sync: structural spy
+# ---------------------------------------------------------------------------
+
+def _poison(name):
+    def fn(*a, **k):
+        raise AssertionError(
+            f"fused mode reached the host-path round entry {name}")
+    return fn
+
+
+def test_fused_mode_never_touches_host_round_path(graph, monkeypatch):
+    """Between dispatch and the final fetch a fused traversal must
+    perform ZERO blocking device->host syncs: the host-path round
+    entries are poisoned (any call fails loudly) and the module-level
+    transfer counter must not move."""
+    monkeypatch.setattr(drv, "relax", _poison("relax"))
+    monkeypatch.setattr(drv, "relax_spmd_directed",
+                        _poison("relax_spmd_directed"))
+    monkeypatch.setattr(balancer, "_note_host_transfer",
+                        _poison("_note_host_transfer"))
+    monkeypatch.setattr(drv, "_note_host_transfer",
+                        _poison("_note_host_transfer"))
+    cfg = BalancerConfig(strategy="alb", threshold=64,
+                         direction="adaptive")
+    out = drv.bfs(graph, 0, cfg=cfg, mode="fused", collect_stats=True)
+    assert out.host_transfers == 0
+    ref = drv.ops  # sanity: the traversal really ran
+    assert out.rounds > 1 and len(out.stats) == out.rounds
+    del ref
+
+
+def test_host_mode_counts_transfers(graph):
+    cfg = BalancerConfig(strategy="alb", threshold=64)
+    t0 = host_transfer_count()
+    out = drv.bfs(graph, 0, cfg=cfg, mode="host")
+    assert out.host_transfers == host_transfer_count() - t0
+    assert out.host_transfers >= out.rounds
+
+
+# ---------------------------------------------------------------------------
+# merge-path mapping: tile boundaries vs searchsorted oracle
+# ---------------------------------------------------------------------------
+
+def _oracle(start_e, row_start, total, n_ids):
+    ids = np.arange(n_ids)
+    mask = ids < total
+    j = np.clip(np.searchsorted(start_e, ids, side="right") - 1,
+                0, len(start_e) - 1)
+    ge = np.where(mask, row_start[j] + ids - start_e[j], 0)
+    return ge, np.where(mask, j, j), mask
+
+
+def _check_merge_path(deg, row_start, total, tile_edges=256):
+    deg = np.asarray(deg, np.int32)
+    start_e = np.cumsum(deg) - deg
+    ecap = int(max(total, 1))
+    ge, j, mask = mp.merge_path_map(
+        jnp.asarray(start_e, jnp.int32),
+        jnp.asarray(row_start, jnp.int32),
+        jnp.int32(total), ecap, tile_edges=tile_edges)
+    ge, j, mask = (np.asarray(x) for x in (ge, j, mask))
+    oge, oj, omask = _oracle(start_e, np.asarray(row_start), total,
+                             len(mask))
+    np.testing.assert_array_equal(mask, omask)
+    np.testing.assert_array_equal(ge[mask], oge[omask])
+    np.testing.assert_array_equal(j[mask], oj[omask])
+
+
+def test_merge_path_empty_frontier():
+    # total = 0: every id masked, no memory traffic implied
+    _check_merge_path([0, 0, 0, 0], [0, 0, 0, 0], total=0)
+
+
+def test_merge_path_single_huge_vertex():
+    # H = 1, degree >> tile_edges: many tiles co-rank into one slot
+    _check_merge_path([5000], [17], total=5000, tile_edges=256)
+
+
+def test_merge_path_ragged_tail_tile():
+    # E not divisible by the tile size: the tail tile is partial
+    deg = [100, 900, 1, 499, 1500]
+    row_start = [0, 100, 1000, 1001, 1500]
+    _check_merge_path(deg, row_start, total=3000, tile_edges=1024)
+
+
+def test_merge_path_zero_degree_runs():
+    # runs of zero-degree slots share a prefix value: edges must land
+    # on the LAST slot with start_e <= id (searchsorted-right rule)
+    deg = [2, 0, 0, 3, 0, 5, 0]
+    row_start = [0, 2, 2, 2, 5, 5, 10]
+    _check_merge_path(deg, row_start, total=10, tile_edges=128)
+
+
+def test_merge_path_executor_has_no_bins(graph):
+    cfg = BalancerConfig(strategy="alb", backend="merge_path")
+    plan = balancer.effective_plan(cfg)
+    assert plan.bins == () and plan.lb == "all"
+    from repro.kernels import ops as kops
+    with pytest.raises(RuntimeError, match="no degree bins"):
+        kops.merge_path_no_bins()
+
+
+# ---------------------------------------------------------------------------
+# bounded _gather_bin cache
+# ---------------------------------------------------------------------------
+
+def test_gather_bin_cache_lru_eviction(monkeypatch):
+    monkeypatch.setattr(balancer, "_GATHER_BIN_CACHE_CAP", 3)
+    cache = balancer._GATHER_BIN_CACHE
+    cache.clear()
+    mask = jnp.zeros((8,), bool).at[2].set(True)
+    fidx = jnp.arange(8, dtype=jnp.int32)
+    deg = jnp.ones((8,), jnp.int32)
+    row = jnp.arange(8, dtype=jnp.int32)
+
+    for cap in (2, 4, 8):
+        balancer._gather_bin(mask, fidx, deg, row, cap, 8, 8)
+    assert list(cache) == [(2, 8, 8), (4, 8, 8), (8, 8, 8)]
+
+    balancer._gather_bin(mask, fidx, deg, row, 2, 8, 8)   # hit: MRU
+    assert list(cache) == [(4, 8, 8), (8, 8, 8), (2, 8, 8)]
+
+    balancer._gather_bin(mask, fidx, deg, row, 4, 4, 8)   # miss at cap
+    assert len(cache) == 3
+    assert (4, 8, 8) not in cache          # LRU evicted
+    assert list(cache)[-1] == (4, 4, 8)
+
+    # evicted bucket still works when re-requested (recompiles)
+    out = balancer._gather_bin(mask, fidx, deg, row, 4, 8, 8)
+    assert len(cache) == 3
+    assert np.asarray(out[0])[0] == 2      # vidx of the one set slot
+
+
+# ---------------------------------------------------------------------------
+# serving + distributed fused
+# ---------------------------------------------------------------------------
+
+def test_serve_fused_bitwise_and_fewer_transfers(graph):
+    from repro.serve import QueryService
+    cfg = BalancerConfig(strategy="alb", direction="adaptive",
+                         threshold=64)
+    results, transfers = {}, {}
+    for mode in ("host", "fused"):
+        svc = QueryService(num_slots=4, cfg=cfg, mode=mode,
+                           cache_capacity=0)
+        svc.register_graph("g", graph)
+        qids = [svc.submit("g", "bfs", s) for s in (0, 11, 23, 41, 77)]
+        qids += [svc.submit("g", "sssp", s) for s in (0, 99)]
+        st = svc.run()
+        results[mode] = [np.asarray(svc.poll(q).result) for q in qids]
+        transfers[mode] = st.host_transfers
+        assert st.host_transfers > 0
+        assert st.summary()["host_transfers"] == st.host_transfers
+    for a, b in zip(results["host"], results["fused"]):
+        np.testing.assert_array_equal(a, b)
+    # fused amortizes the per-round observation over whole chunks
+    assert transfers["fused"] < transfers["host"]
+
+
+_DIST_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import graph as G
+from repro.core.partition import partition
+from repro.core import gluon
+from repro.core.balancer import BalancerConfig, host_transfer_count
+
+assert len(jax.devices()) == 4, jax.devices()
+g = G.rmat(8, 8, seed=5)
+src = G.highest_out_degree_vertex(g)
+cfg = BalancerConfig(strategy="alb", threshold=64)
+mesh = gluon.device_mesh(4)
+sg, meta = partition(g, 4, "oec")
+for sync in ["replicated", "mirror"]:
+    lh, rh, _ = gluon.sssp_distributed(sg, mesh, src, cfg, sync=sync,
+                                       meta=meta, mode="host")
+    t0 = host_transfer_count()
+    lf, rf, _ = gluon.sssp_distributed(sg, mesh, src, cfg, sync=sync,
+                                       meta=meta, mode="fused")
+    assert host_transfer_count() - t0 == 0, sync
+    assert rh == rf, (sync, rh, rf)
+    assert np.array_equal(np.asarray(lh), np.asarray(lf)), sync
+
+rg = G.reverse_graph(g)
+srg, rmeta = partition(rg, 4, "oec")
+outdeg = jnp.asarray(np.diff(np.asarray(g.row_ptr)))
+for sync in ["replicated", "mirror"]:
+    kh, rh, _ = gluon.pagerank_distributed(
+        srg, mesh, outdeg, cfg=cfg, sync=sync, meta=rmeta,
+        mode="host", max_rounds=20)
+    kf, rf, _ = gluon.pagerank_distributed(
+        srg, mesh, outdeg, cfg=cfg, sync=sync, meta=rmeta,
+        mode="fused", max_rounds=20)
+    assert rh == rf, (sync, rh, rf)
+    assert np.array_equal(np.asarray(kh), np.asarray(kf)), sync
+print("DIST-FUSED-OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_fused_parity_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", _DIST_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=1200)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "DIST-FUSED-OK" in out.stdout
