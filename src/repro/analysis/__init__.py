@@ -1,0 +1,35 @@
+"""Static analysis for the repo's structural invariants.
+
+A stdlib-``ast`` lint framework (no dependencies, never imports jax)
+that turns the codebase's runtime disciplines — fused rounds pay zero
+host syncs, jitted functions never retrace on data, served arrays are
+frozen before they are shared, executor scatters are order-free —
+into CI-enforced program structure.  See DESIGN.md section 12.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis --check src/ benchmarks/
+    PYTHONPATH=src python -m repro.analysis --check --relaxed tests/
+
+Findings print as ``file:line rule-id message``.  Suppress a single
+line with ``# repro: allow[<rule>] -- <justification>``; grandfather
+legacy findings in ``analysis-baseline.txt`` (never for
+``src/repro/core`` or ``src/repro/serve``).
+"""
+from .baseline import (PROTECTED_PREFIXES, apply_baseline,
+                       load_baseline, protected_violations,
+                       render_baseline)
+from .findings import Finding
+from .linter import (FileContext, Session, analyze_paths,
+                     analyze_source, iter_python_files)
+from .pragmas import parse_pragmas
+from .registry import Rule, all_rules, get_rules, register_rule, rule_ids
+
+__all__ = [
+    "Finding", "Rule", "Session", "FileContext",
+    "analyze_source", "analyze_paths", "iter_python_files",
+    "all_rules", "get_rules", "register_rule", "rule_ids",
+    "parse_pragmas",
+    "load_baseline", "apply_baseline", "render_baseline",
+    "protected_violations", "PROTECTED_PREFIXES",
+]

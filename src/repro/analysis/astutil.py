@@ -1,0 +1,324 @@
+"""Shared ``ast`` helpers for the lint rules.
+
+The interesting piece is :func:`collect_jit_bindings`: the repo
+applies ``jax.jit`` three ways —
+
+* decorator: ``@jax.jit`` / ``@partial(jax.jit, static_argnames=...)``
+* module-level partial application:
+  ``name = partial(jax.jit, static_argnames=(...))(impl_fn)``
+* direct call: ``name = jax.jit(impl_fn, static_argnames=...)``
+
+— plus Pallas kernels referenced by ``pl.pallas_call(kernel, ...)``.
+All four resolve (when the target is a def in the same module) to a
+:class:`JitBinding` carrying the traced function and its literal
+``static_argnames``, which is what the jit-purity and
+static-argnames-drift rules consume.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+#: attribute accesses on a traced array that yield *static* metadata —
+#: branching on these is trace-safe (``if labels.ndim == 2:``)
+STATIC_ATTRS = {"ndim", "shape", "dtype", "size", "itemsize"}
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_PARTIAL_NAMES = {"partial", "functools.partial"}
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Dotted name of a ``Name``/``Attribute`` chain, else ``None``.
+
+    ``jnp.any`` -> ``"jnp.any"``; anything with a non-name base
+    (calls, subscripts) -> ``None``.
+    """
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def contains_jnp(node: ast.AST) -> bool:
+    """Whether the expression references ``jnp.*`` / ``jax.numpy.*``
+    (i.e. syntactically produces or consumes a device array)."""
+    for sub in ast.walk(node):
+        d = dotted(sub)
+        if d and (d == "jnp" or d.startswith("jnp.")
+                  or d.startswith("jax.numpy.")):
+            return True
+    return False
+
+
+def is_none_comparison(node: ast.AST) -> bool:
+    """``x is None`` / ``x is not None`` — static structure checks
+    that are safe on traced values (``None`` is never a tracer)."""
+    return (isinstance(node, ast.Compare)
+            and all(isinstance(op, (ast.Is, ast.IsNot))
+                    for op in node.ops))
+
+
+def references_names(node: ast.AST, names: Set[str]) -> bool:
+    """Whether ``node`` reads any of ``names`` in a *traced* position.
+
+    Reads reached only through a static-metadata attribute
+    (``x.ndim``, ``x.shape``...) or an ``is None`` comparison do not
+    count: those are trace-safe.
+    """
+    if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+        return False
+    if is_none_comparison(node):
+        return False
+    if (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id == "len"):
+        return False  # len() of anything is static Python
+    if isinstance(node, ast.Name):
+        return node.id in names
+    return any(references_names(child, names)
+               for child in ast.iter_child_nodes(node))
+
+
+@dataclasses.dataclass
+class JitBinding:
+    """One site where a function is handed to ``jax.jit`` (or
+    ``pallas_call``), resolved as far as the AST allows."""
+
+    func: Optional[ast.AST]
+    """The traced ``FunctionDef``, if defined in this module."""
+
+    func_name: Optional[str]
+    """Name the target was referenced by (for messages)."""
+
+    static_names: Optional[Tuple[str, ...]]
+    """Literal ``static_argnames``; ``()`` if none given, ``None`` if
+    present but not a string/tuple literal (unresolvable)."""
+
+    static_node: Optional[ast.AST]
+    """The ``static_argnames=`` value node (for finding locations)."""
+
+    lineno: int
+    """Line of the jit application itself."""
+
+    kind: str = "jit"
+    """``"jit"`` or ``"pallas"``."""
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    return dotted(node) in _JIT_NAMES
+
+
+def _is_partial_ref(node: ast.AST) -> bool:
+    return dotted(node) in _PARTIAL_NAMES
+
+
+def _literal_static_names(node: ast.AST):
+    """Parse a ``static_argnames=`` value: a string constant or a
+    tuple/list of them.  Returns ``None`` when non-literal."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        names = []
+        for el in node.elts:
+            if not (isinstance(el, ast.Constant)
+                    and isinstance(el.value, str)):
+                return None
+            names.append(el.value)
+        return tuple(names)
+    return None
+
+
+def _static_kwarg(call: ast.Call):
+    """The ``static_argnames`` keyword of ``call``, if any."""
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            return kw.value
+    return None
+
+
+def _partial_jit_call(node: ast.AST) -> Optional[ast.Call]:
+    """Match ``partial(jax.jit, ...)`` and return the Call."""
+    if (isinstance(node, ast.Call) and _is_partial_ref(node.func)
+            and node.args and _is_jit_ref(node.args[0])):
+        return node
+    return None
+
+
+def _defs_by_name(tree: ast.AST) -> Dict[str, ast.AST]:
+    """Module- and class-level function defs, by name."""
+    defs: Dict[str, ast.AST] = {}
+    blocks = [tree.body]
+    for stmt in tree.body:
+        if isinstance(stmt, ast.ClassDef):
+            blocks.append(stmt.body)
+    for block in blocks:
+        for stmt in block:
+            if isinstance(stmt, (ast.FunctionDef,
+                                 ast.AsyncFunctionDef)):
+                defs[stmt.name] = stmt
+    return defs
+
+
+def _partial_bindings(tree: ast.AST) -> Dict[str, tuple]:
+    """``name -> (target_def_name, bound_kwarg_names)`` for every
+    ``name = partial(fn, kw=...)`` assignment anywhere in the module —
+    the kernels' idiom for binding static parameters before handing
+    the rest to ``pallas_call``."""
+    out: Dict[str, tuple] = {}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign)
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)
+                and _is_partial_ref(node.value.func)
+                and node.value.args
+                and isinstance(node.value.args[0], ast.Name)):
+            continue
+        kw_names = tuple(kw.arg for kw in node.value.keywords
+                         if kw.arg is not None)
+        out[node.targets[0].id] = (node.value.args[0].id, kw_names)
+    return out
+
+
+def collect_jit_bindings(tree: ast.AST) -> List[JitBinding]:
+    """Every jit/pallas tracing site in the module (see module doc)."""
+    defs = _defs_by_name(tree)
+    partials = _partial_bindings(tree)
+    bindings: List[JitBinding] = []
+
+    def add(func, func_name, call: Optional[ast.Call], lineno,
+            kind="jit"):
+        static_node = _static_kwarg(call) if call is not None else None
+        if static_node is None:
+            statics: Optional[Tuple[str, ...]] = ()
+        else:
+            statics = _literal_static_names(static_node)
+        bindings.append(JitBinding(
+            func=func, func_name=func_name, static_names=statics,
+            static_node=static_node, lineno=lineno, kind=kind))
+
+    # decorator forms
+    for name, fn in defs.items():
+        for dec in fn.decorator_list:
+            if _is_jit_ref(dec):
+                add(fn, name, None, dec.lineno)
+            elif isinstance(dec, ast.Call):
+                pj = _partial_jit_call(dec)
+                if pj is not None:
+                    add(fn, name, pj, dec.lineno)
+                elif _is_jit_ref(dec.func):
+                    add(fn, name, dec, dec.lineno)
+
+    # call forms anywhere in the module
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        target: Optional[ast.AST] = None
+        call_with_statics: Optional[ast.Call] = None
+        kind = "jit"
+        pj = _partial_jit_call(node.func) if isinstance(
+            node.func, ast.Call) else None
+        if pj is not None and node.args:
+            # partial(jax.jit, ...)(impl)
+            target = node.args[0]
+            call_with_statics = pj
+        elif _is_jit_ref(node.func) and node.args:
+            # jax.jit(impl, static_argnames=...)
+            target = node.args[0]
+            call_with_statics = node
+        elif (dotted(node.func) or "").endswith("pallas_call") \
+                and node.args:
+            target = node.args[0]
+            kind = "pallas"
+        if target is None or not isinstance(target, ast.Name):
+            continue
+        fn = defs.get(target.id)
+        if fn is not None:
+            add(fn, target.id, call_with_statics, node.lineno, kind)
+        elif kind == "pallas" and target.id in partials:
+            # pallas_call(kern) where kern = partial(_kernel, kw=...):
+            # the partially-bound kwargs are the kernel's static params
+            impl_name, kw_names = partials[target.id]
+            impl = defs.get(impl_name)
+            if impl is not None:
+                bindings.append(JitBinding(
+                    func=impl, func_name=impl_name,
+                    static_names=kw_names, static_node=None,
+                    lineno=node.lineno, kind=kind))
+    return bindings
+
+
+def param_names(fn: ast.AST) -> List[str]:
+    """All parameter names of a function def, in order."""
+    a = fn.args
+    params = [p.arg for p in
+              getattr(a, "posonlyargs", []) + a.args + a.kwonlyargs]
+    if a.vararg:
+        params.append(a.vararg.arg)
+    if a.kwarg:
+        params.append(a.kwarg.arg)
+    return params
+
+
+def assigned_names(node: ast.AST) -> Set[str]:
+    """Names bound anywhere inside ``node`` (assignments, loop and
+    ``with`` targets, comprehensions, local defs)."""
+    out: Set[str] = set()
+
+    def targets_of(t):
+        # only true bindings: a subscript/attribute store mutates an
+        # existing object, it does not bind the root name
+        if isinstance(t, ast.Name):
+            out.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for el in t.elts:
+                targets_of(el)
+        elif isinstance(t, ast.Starred):
+            targets_of(t.value)
+
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Assign):
+            for t in sub.targets:
+                targets_of(t)
+        elif isinstance(sub, (ast.AugAssign, ast.AnnAssign,
+                              ast.For, ast.AsyncFor)):
+            targets_of(sub.target)
+        elif isinstance(sub, ast.comprehension):
+            targets_of(sub.target)
+        elif isinstance(sub, (ast.With, ast.AsyncWith)):
+            for item in sub.items:
+                if item.optional_vars is not None:
+                    targets_of(item.optional_vars)
+        elif isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)):
+            out.add(sub.name)
+    return out
+
+
+def module_level_names(tree: ast.AST) -> Set[str]:
+    """Names assigned at module top level (mutable-global candidates)."""
+    out: Set[str] = set()
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                for sub in ast.walk(t):
+                    if isinstance(sub, ast.Name):
+                        out.add(sub.id)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            if isinstance(stmt.target, ast.Name):
+                out.add(stmt.target.id)
+    return out
+
+
+def root_name(node: ast.AST) -> Optional[str]:
+    """Leftmost ``Name`` of an attribute/subscript chain."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    return None

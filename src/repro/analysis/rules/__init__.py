@@ -1,0 +1,22 @@
+"""The lint passes.  Importing this package registers every rule.
+
+Rule ids (see each module for the full story):
+
+* ``host-sync`` — blocking device->host transfers in core/serve must
+  be registered ``_note_host_transfer`` sites or pragma'd.
+* ``jit-purity`` — no Python control flow on tracers, print, global
+  mutation, or wall-clock/RNG inside jitted/pallas functions.
+* ``static-argnames`` — static_argnames entries must name real
+  parameters of the jitted function.
+* ``publish-freeze`` — arrays published by the serve layer must pass
+  through the ``freeze()`` helper.
+* ``scatter-determinism`` — executor ``.at[...]`` scatters must use
+  a combine registered commutative-associative in operators.py.
+* ``bad-pragma`` — suppression pragmas must be well-formed.
+"""
+from . import host_sync  # noqa: F401
+from . import jit_purity  # noqa: F401
+from . import pragma_hygiene  # noqa: F401
+from . import publish_freeze  # noqa: F401
+from . import scatter_determinism  # noqa: F401
+from . import static_args  # noqa: F401

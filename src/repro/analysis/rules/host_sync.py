@@ -1,0 +1,207 @@
+"""``host-sync``: blocking device->host transfers must be registered.
+
+Applying ``int()``/``bool()``/``float()``/``.item()``/``np.asarray()``
+to a jnp expression (or to a local that was assigned one), or calling
+``jax.device_get``, blocks the dispatch pipeline — the exact
+per-round round-trip PR 7's fused mode exists to eliminate.  Inside
+``src/repro/core`` and ``src/repro/serve`` every such sync must be a
+*registered* transfer: the enclosing statement (or an adjacent one in
+the same block) calls ``_note_host_transfer(...)``, so the PR 7
+instrumentation counter and this lint's allowlist are literally the
+same lines.  Intentional one-time syncs (pre-loop seeding, amortized
+setup) carry a ``# repro: allow[host-sync] -- why`` pragma instead.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from .. import astutil
+from ..findings import Finding
+from ..registry import Rule, register_rule
+
+RULE_ID = "host-sync"
+
+#: name of the instrumentation hook from PR 7 — a statement adjacent
+#: to a call of this is a registered transfer site
+NOTE_NAME = "_note_host_transfer"
+
+_SYNC_BUILTINS = {"int", "bool", "float"}
+_ASARRAY = {"np.asarray", "numpy.asarray", "np.array", "numpy.array"}
+
+
+def _is_note_stmt(stmt: ast.stmt) -> bool:
+    if not isinstance(stmt, ast.Expr):
+        return False
+    call = stmt.value
+    return (isinstance(call, ast.Call)
+            and (astutil.dotted(call.func) or "").split(".")[-1]
+            == NOTE_NAME)
+
+
+def _propagates_taint(value: ast.AST, tainted: Set[str]) -> bool:
+    """Whether assigning ``value`` taints its targets: the expression
+    syntactically builds a jnp value, or aliases/slices an
+    already-tainted name.  A user *function call* over tainted names
+    does NOT propagate — its result type is unknowable statically, and
+    the repo's round primitives deliberately return host-side data
+    (e.g. ``relax_round(..., return_active=True)``) whose transfer is
+    already accounted inside the callee."""
+    if astutil.contains_jnp(value):
+        return True
+    if isinstance(value, ast.Call):
+        return False
+    if any(isinstance(sub, ast.Call) and not astutil.contains_jnp(sub)
+           for sub in ast.walk(value)):
+        # e.g. `x = f(tainted) + 1`: be conservative only about the
+        # non-call parts
+        stripped = [sub for sub in ast.iter_child_nodes(value)
+                    if not isinstance(sub, ast.Call)]
+        return any(astutil.references_names(sub, tainted)
+                   for sub in stripped)
+    return astutil.references_names(value, tainted)
+
+
+def _walk_scope(scope: ast.AST):
+    """Walk ``scope`` without descending into nested function/class
+    defs — those are their own taint scopes (a nested traced body
+    reusing a name must not taint the enclosing driver's)."""
+    stack = list(ast.iter_child_nodes(scope))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Lambda)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _jnp_tainted_names(scope: ast.AST) -> Set[str]:
+    """Locals assigned (directly or transitively) from jnp
+    expressions within ``scope`` — flow-insensitive fixpoint."""
+    tainted: Set[str] = set()
+    assigns = []
+    for node in _walk_scope(scope):
+        if isinstance(node, ast.Assign):
+            assigns.append((node.targets, node.value))
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)) \
+                and node.value is not None:
+            assigns.append(([node.target], node.value))
+    for _ in range(4):  # bounded fixpoint for chained assignments
+        changed = False
+        for targets, value in assigns:
+            if _propagates_taint(value, tainted):
+                for t in targets:
+                    for sub in ast.walk(t):
+                        if isinstance(sub, ast.Name) \
+                                and sub.id not in tainted:
+                            tainted.add(sub.id)
+                            changed = True
+        if not changed:
+            break
+    return tainted
+
+
+def _sync_calls(stmt_expr: ast.AST, tainted: Set[str]):
+    """Yield ``(node, what)`` for blocking syncs in an expression."""
+    for node in ast.walk(stmt_expr):
+        if not isinstance(node, ast.Call):
+            continue
+        fd = astutil.dotted(node.func)
+        if fd == "jax.device_get":
+            yield node, "jax.device_get(...)"
+            continue
+        if fd in _SYNC_BUILTINS and len(node.args) == 1:
+            if _device_derived(node.args[0], tainted):
+                yield node, f"{fd}() on a jnp expression"
+            continue
+        if fd in _ASARRAY and node.args:
+            if _device_derived(node.args[0], tainted):
+                yield node, f"{fd}() on a jnp expression"
+            continue
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "item" and not node.args):
+            if _device_derived(node.func.value, tainted):
+                yield node, ".item() on a jnp expression"
+
+
+def _device_derived(expr: ast.AST, tainted: Set[str]) -> bool:
+    return (astutil.contains_jnp(expr)
+            or astutil.references_names(expr, tainted))
+
+
+def _child_blocks(stmt: ast.stmt):
+    for field in ("body", "orelse", "finalbody"):
+        block = getattr(stmt, field, None)
+        if block:
+            yield block
+    for handler in getattr(stmt, "handlers", []) or []:
+        yield handler.body
+
+
+def _header_exprs(stmt: ast.stmt):
+    """Expressions evaluated *by* a statement, excluding nested
+    statement blocks (those get their own adjacency context)."""
+    if isinstance(stmt, (ast.If, ast.While)):
+        yield stmt.test
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        yield stmt.iter
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        for item in stmt.items:
+            yield item.context_expr
+    elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+        return  # nested scope: walked separately
+    else:
+        yield stmt
+
+
+def _walk_block(block, tainted, out, ctx):
+    noted_idx = {i for i, s in enumerate(block) if _is_note_stmt(s)}
+    for i, stmt in enumerate(block):
+        noted = bool(noted_idx & {i - 1, i, i + 1})
+        for expr in _header_exprs(stmt):
+            for node, what in _sync_calls(expr, tainted):
+                if noted:
+                    continue
+                out.append(ctx.finding(
+                    node, RULE_ID,
+                    f"blocking host sync: {what} — register it with "
+                    f"{NOTE_NAME}() on an adjacent line, or pragma "
+                    f"an intentional one-time transfer"))
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue  # nested scope: visited with its own taint set
+        for sub in _child_blocks(stmt):
+            _walk_block(sub, tainted, out, ctx)
+
+
+def check(ctx) -> List[Finding]:
+    """Run the host-sync pass over one file (core/ and serve/ only)."""
+    if not (ctx.in_dir("repro", "core") or ctx.in_dir("repro", "serve")):
+        return []
+    out: List[Finding] = []
+    # each function scope gets its own taint set; module scope too
+    scopes = [n for n in ast.walk(ctx.tree)
+              if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for fn in scopes:
+        tainted = _jnp_tainted_names(fn)
+        _walk_block(fn.body, tainted, out, ctx)
+    module_stmts = [s for s in ctx.tree.body
+                    if not isinstance(s, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef,
+                                          ast.ClassDef))]
+    _walk_block(module_stmts, _jnp_tainted_names(ast.Module(
+        body=module_stmts, type_ignores=[])), out, ctx)
+    # class bodies hold methods (already covered) — skip their
+    # remaining statements (field defaults are rule-exempt)
+    return out
+
+
+register_rule(Rule(
+    id=RULE_ID,
+    description="blocking device->host syncs in core/ and serve/ "
+                "must sit next to _note_host_transfer() or carry a "
+                "justified pragma",
+    check=check,
+))

@@ -1,0 +1,148 @@
+"""``jit-purity``: traced functions must be pure and trace-stable.
+
+Inside a function handed to ``jax.jit`` (any of the binding forms in
+:mod:`repro.analysis.astutil`) or used as a ``pallas_call`` kernel:
+
+* Python ``if``/``while``/ternaries may not branch on traced values —
+  a non-static parameter or a local derived from one or from a
+  ``jnp`` expression.  Branching on ``static_argnames`` parameters,
+  ``x.ndim``/``x.shape``/``x.dtype`` metadata, or ``x is None`` is
+  fine (all static at trace time).
+* ``print(...)`` fires once per trace, not per call — use
+  ``jax.debug.print`` if output is really wanted.
+* Mutating a module-level name (or declaring ``global``) bakes a
+  trace-time side effect into a supposedly pure function.
+* Wall-clock / RNG calls (``time.*``, ``datetime.*``, ``random.*``,
+  ``np.random.*``, ``uuid`` ...) are trace-time constants: the jitted
+  function silently reuses the first value forever.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from .. import astutil
+from ..findings import Finding
+from ..registry import Rule, register_rule
+
+RULE_ID = "jit-purity"
+
+_NONDET_EXACT = {
+    "time.time", "time.perf_counter", "time.monotonic",
+    "time.process_time", "time.time_ns", "time.perf_counter_ns",
+    "datetime.now", "datetime.utcnow", "datetime.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "os.urandom", "uuid.uuid1", "uuid.uuid4",
+}
+_NONDET_PREFIX = ("random.", "np.random.", "numpy.random.")
+
+
+def _traced_locals(fn: ast.AST, traced_params: Set[str]) -> Set[str]:
+    """Locals derived from traced params or jnp expressions
+    (flow-insensitive fixpoint, includes nested defs)."""
+    traced = set(traced_params)
+    assigns = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            assigns.append((node.targets, node.value))
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)) \
+                and node.value is not None:
+            assigns.append(([node.target], node.value))
+    for _ in range(4):
+        changed = False
+        for targets, value in assigns:
+            if astutil.contains_jnp(value) or \
+                    astutil.references_names(value, traced):
+                for t in targets:
+                    for sub in ast.walk(t):
+                        if isinstance(sub, ast.Name) \
+                                and sub.id not in traced:
+                            traced.add(sub.id)
+                            changed = True
+        if not changed:
+            break
+    return traced
+
+
+def _test_is_traced(test: ast.AST, traced: Set[str]) -> bool:
+    if astutil.is_none_comparison(test):
+        return False
+    return astutil.references_names(test, traced)
+
+
+def _check_fn(ctx, fn, fname, statics, module_names, out) -> None:
+    params = set(astutil.param_names(fn))
+    traced_params = params - set(statics)
+    traced = _traced_locals(fn, traced_params)
+    local_names = params | astutil.assigned_names(fn)
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.While)):
+            kw = "while" if isinstance(node, ast.While) else "if"
+            if _test_is_traced(node.test, traced):
+                out.append(ctx.finding(
+                    node, RULE_ID,
+                    f"Python `{kw}` on a traced value inside jitted "
+                    f"`{fname}` — use lax.cond/lax.while_loop/"
+                    f"jnp.where, or make the argument static"))
+        elif isinstance(node, ast.IfExp):
+            if _test_is_traced(node.test, traced):
+                out.append(ctx.finding(
+                    node, RULE_ID,
+                    f"ternary on a traced value inside jitted "
+                    f"`{fname}` — use jnp.where/lax.cond"))
+        elif isinstance(node, ast.Call):
+            fd = astutil.dotted(node.func) or ""
+            if fd == "print":
+                out.append(ctx.finding(
+                    node, RULE_ID,
+                    f"print() inside jitted `{fname}` fires at trace "
+                    f"time only — use jax.debug.print"))
+            elif fd in _NONDET_EXACT or \
+                    fd.startswith(_NONDET_PREFIX):
+                out.append(ctx.finding(
+                    node, RULE_ID,
+                    f"nondeterministic call {fd}() inside jitted "
+                    f"`{fname}` is frozen at trace time"))
+        elif isinstance(node, ast.Global):
+            out.append(ctx.finding(
+                node, RULE_ID,
+                f"`global` inside jitted `{fname}`: trace-time side "
+                f"effect on module state"))
+        elif isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                root = astutil.root_name(t)
+                if (root is not None and root in module_names
+                        and root not in local_names
+                        and not isinstance(t, ast.Name)):
+                    out.append(ctx.finding(
+                        node, RULE_ID,
+                        f"mutation of module-level `{root}` inside "
+                        f"jitted `{fname}`: trace-time side effect"))
+
+
+def check(ctx) -> List[Finding]:
+    """Run the jit-purity pass over one file."""
+    out: List[Finding] = []
+    module_names = astutil.module_level_names(ctx.tree)
+    seen = set()
+    for b in ctx.jit_bindings:
+        if b.func is None or id(b.func) in seen:
+            continue
+        seen.add(id(b.func))
+        if b.static_names is None:
+            continue  # non-literal static_argnames: cannot classify
+        _check_fn(ctx, b.func, b.func_name or b.func.name,
+                  b.static_names, module_names, out)
+    return out
+
+
+register_rule(Rule(
+    id=RULE_ID,
+    description="no Python control flow on tracers, print, global "
+                "mutation, or wall-clock/RNG calls inside "
+                "jax.jit/pallas_call functions",
+    check=check,
+    relaxed=True,
+))

@@ -1,0 +1,122 @@
+"""``scatter-determinism``: executor scatters need a registered
+commutative-associative combine.
+
+Executor code (``core/balancer.py`` and ``kernels/``) scatters edge
+contributions with ``.at[idx].add/min/max(...)`` where ``idx``
+contains duplicates — every frontier bin maps many edges onto the
+same target vertex.  The result is deterministic only when the
+combine is order-free, i.e. commutative and associative on the
+value domain the apps use.  ``operators.py`` declares exactly which
+combines qualify (``COMMUTATIVE_COMBINES``); this pass parses that
+registry *statically* (AST only — the linter never imports jax) and
+flags any ``.at[...].<combine>(...)`` whose method is unregistered.
+``.at[...].set`` with potentially-duplicate targets is flagged too:
+last-writer-wins depends on scatter order, so a ``set`` needs a
+pragma arguing its indices are unique.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import FrozenSet, List
+
+from .. import astutil
+from ..findings import Finding
+from ..registry import Rule, register_rule
+
+RULE_ID = "scatter-determinism"
+
+REGISTRY_NAME = "COMMUTATIVE_COMBINES"
+
+#: used when no operators.py registry can be located (e.g. fixture
+#: trees) — deliberately minimal so the linkage is observable
+DEFAULT_COMBINES: FrozenSet[str] = frozenset({"min", "max"})
+
+#: ``.at[...]`` methods that combine (or overwrite) at target indices
+_SCATTER_METHODS = {"set", "add", "min", "max", "mul", "multiply",
+                    "divide", "power"}
+
+
+def _parse_registry(source: str) -> FrozenSet[str]:
+    """Extract ``COMMUTATIVE_COMBINES`` from operators.py source."""
+    tree = ast.parse(source)
+    for stmt in tree.body:
+        if not isinstance(stmt, ast.Assign):
+            continue
+        if not any(isinstance(t, ast.Name) and t.id == REGISTRY_NAME
+                   for t in stmt.targets):
+            continue
+        value = stmt.value
+        if isinstance(value, ast.Call) and value.args:
+            value = value.args[0]  # frozenset({...}) / set((...))
+        if isinstance(value, (ast.Set, ast.Tuple, ast.List)):
+            names = []
+            for el in value.elts:
+                if isinstance(el, ast.Constant) \
+                        and isinstance(el.value, str):
+                    names.append(el.value)
+            return frozenset(names)
+    return DEFAULT_COMBINES
+
+
+def _combine_registry(ctx) -> FrozenSet[str]:
+    """Locate and parse the nearest ``operators.py`` (cached per
+    directory in the session); fall back to the default set."""
+    d = os.path.dirname(ctx.path)
+    key = ("scatter-registry", d)
+    if key in ctx.session.memo:
+        return ctx.session.memo[key]
+    combines = DEFAULT_COMBINES
+    for rel in ("operators.py",
+                os.path.join("..", "core", "operators.py"),
+                os.path.join("..", "operators.py")):
+        cand = os.path.normpath(os.path.join(d, rel))
+        if os.path.isfile(cand):
+            with open(cand, "r", encoding="utf-8") as fh:
+                combines = _parse_registry(fh.read())
+            break
+    ctx.session.memo[key] = combines
+    return combines
+
+
+def _in_scope(ctx) -> bool:
+    path = ctx.path
+    return (path.endswith("core/balancer.py")
+            or ctx.in_dir("kernels")
+            or path.endswith("/balancer.py"))
+
+
+def check(ctx) -> List[Finding]:
+    """Run the scatter-determinism pass over one executor file."""
+    if not _in_scope(ctx):
+        return []
+    combines = _combine_registry(ctx)
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        if not (isinstance(func, ast.Attribute)
+                and func.attr in _SCATTER_METHODS
+                and isinstance(func.value, ast.Subscript)
+                and isinstance(func.value.value, ast.Attribute)
+                and func.value.value.attr == "at"):
+            continue
+        if func.attr in combines:
+            continue
+        out.append(ctx.finding(
+            node, RULE_ID,
+            f"`.at[...].{func.attr}` scatter: combine "
+            f"{func.attr!r} is not registered commutative-"
+            f"associative in operators.py ({REGISTRY_NAME}) — "
+            f"result depends on scatter order under duplicate "
+            f"indices"))
+    return out
+
+
+register_rule(Rule(
+    id=RULE_ID,
+    description="executor .at[...] scatters must use a combine "
+                "registered commutative-associative in operators.py",
+    check=check,
+))

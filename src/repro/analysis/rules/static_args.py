@@ -1,0 +1,52 @@
+"""``static-argnames``: every static name must be a real parameter.
+
+``jax.jit(fn, static_argnames=("cfg",))`` with a typo'd name raises
+nothing — JAX just ignores it, the argument stays traced, and every
+distinct value recompiles.  This pass resolves each jit application
+(decorator, ``partial(jax.jit, ...)``-application, or direct call
+form) to its target def and checks the literal ``static_argnames``
+against the def's parameter list.  Unresolvable targets (imported
+functions, non-literal name tuples) are skipped, not guessed.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .. import astutil
+from ..findings import Finding
+from ..registry import Rule, register_rule
+
+RULE_ID = "static-argnames"
+
+
+def check(ctx) -> List[Finding]:
+    """Run the static-argnames drift pass over one file."""
+    out: List[Finding] = []
+    for b in ctx.jit_bindings:
+        if b.func is None or b.static_node is None:
+            continue
+        if b.static_names is None:
+            out.append(ctx.finding(
+                b.static_node, RULE_ID,
+                f"static_argnames for `{b.func_name}` is not a "
+                f"string/tuple literal — the drift check cannot "
+                f"verify it"))
+            continue
+        params = astutil.param_names(b.func)
+        missing = [n for n in b.static_names if n not in params]
+        for name in missing:
+            out.append(ctx.finding(
+                b.static_node, RULE_ID,
+                f"static_argnames {name!r} is not a parameter of "
+                f"`{b.func_name}` (params: {', '.join(params)}) — "
+                f"the argument silently stays traced"))
+    return out
+
+
+register_rule(Rule(
+    id=RULE_ID,
+    description="names in static_argnames= must match a parameter of "
+                "the jitted function (a typo silently recompiles)",
+    check=check,
+    relaxed=True,
+))

@@ -1158,7 +1158,7 @@ def _run_fused_loop(g: Graph, rg, emask, labels, frontier,
             g, rg, emask, lab, lab, fr, cfg, op, pull_op, collect_stats)
         if collect_stats:
             st = jax.tree_util.tree_map(
-                lambda buf, x: buf.at[r].set(x), st, row)
+                lambda buf, x: buf.at[r].set(x), st, row)  # repro: allow[scatter-determinism] -- round index r is unique per iteration, no duplicate targets
         return r + 1, new, new < lab, st
 
     r, labels, frontier, st = jax.lax.while_loop(

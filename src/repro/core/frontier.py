@@ -103,10 +103,26 @@ def single_source(num_vertices: int, src: int) -> jax.Array:
     return jnp.zeros((num_vertices,), dtype=bool).at[src].set(True)
 
 
+def coerce_sources(sources) -> jax.Array:
+    """Host-provided source vertices as a validated int32 ``[B]``
+    vector — the ONE entry point through which batch source lists
+    reach the device.  Centralizing the coercion keeps every batch
+    init agreeing on dtype (int32 indexes the one-hot scatters) and
+    shape (a scalar or nested list here would silently broadcast into
+    the wrong frontier), and gives the host-sync lint a single
+    annotated host->device crossing instead of per-caller copies."""
+    srcs = jnp.asarray(sources, jnp.int32)
+    if srcs.ndim != 1:
+        raise ValueError(
+            f"sources must be a flat [B] vector of vertex ids; got "
+            f"shape {tuple(srcs.shape)}")
+    return srcs
+
+
 def single_sources(num_vertices: int, sources) -> jax.Array:
     """Batched one-hot frontiers ``bool[B, V]``: row b activates only
     ``sources[b]`` — the initial worklists of a multi-source batch."""
-    srcs = jnp.asarray(sources, jnp.int32)
+    srcs = coerce_sources(sources)
     b = srcs.shape[0]
     return jnp.zeros((b, num_vertices), dtype=bool) \
         .at[jnp.arange(b), srcs].set(True)
@@ -166,7 +182,7 @@ def multi_source_state(num_vertices: int, sources, fill,
     frontiers.  The single entry-point init shared by the single-device
     and distributed batch drivers (so their label dtype/sentinel can
     never diverge)."""
-    srcs = jnp.asarray(sources, jnp.int32)
+    srcs = coerce_sources(sources)
     b = srcs.shape[0]
     labels = jnp.full((b, num_vertices), fill, dtype=dtype) \
         .at[jnp.arange(b), srcs].set(0)

@@ -557,7 +557,9 @@ def _run_mirror(stacked_g, mesh, op, init_labels, init_frontier, cfg,
         collect_stats=collect_stats, values_of=values_of,
         next_frontier=next_frontier, post_sync=post_sync,
         global_of=global_of)
-    active = int(jnp.sum(init_frontier))
+    # the per-round activity probe below is a noted transfer site;
+    # this one is the pre-loop seed count, paid once per traversal
+    active = int(jnp.sum(init_frontier))  # repro: allow[host-sync] -- one-time pre-loop seed count
     rounds = 0
     stats = [] if collect_stats else None
     t0 = time.perf_counter()

@@ -27,6 +27,16 @@ class Operator:
     uses_weight: bool = True
 
 
+# Scatter combines that are commutative AND associative on the value
+# domains the apps use, so `.at[idx].<combine>` with duplicate target
+# indices is order-free and therefore deterministic: min/max always,
+# add because every add-combine app scatters integers (kcore degree
+# decrements) or is gated to a fixed reduction order elsewhere.  The
+# static scatter-determinism pass (repro.analysis) parses this
+# assignment by AST — keep it a literal frozenset of string constants.
+COMMUTATIVE_COMBINES = frozenset({"min", "max", "add"})
+
+
 # sssp relaxation: dist[dst] = min(dist[dst], dist[src] + w)
 SSSP_RELAX = Operator("sssp_relax", "push", "min",
                       lambda v, w: v + w)

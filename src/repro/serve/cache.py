@@ -35,6 +35,8 @@ from typing import Hashable, Optional
 
 import numpy as np
 
+from .publish import freeze
+
 
 class ResultCache:
     """Bounded LRU map ``(graph_id, app, source, strategy) ->
@@ -82,10 +84,9 @@ class ResultCache:
         reaching everywhere, i.e. evicted by every delta."""
         if self.capacity == 0:
             return
-        labels.setflags(write=False)
+        labels = freeze(labels)
         if region is not None:
-            region = np.asarray(region, dtype=bool)
-            region.setflags(write=False)
+            region = freeze(np.asarray(region, dtype=bool))
         k = self.key(graph_id, app, source, strategy)
         self._entries[k] = (labels, region)
         self._entries.move_to_end(k)

@@ -45,6 +45,7 @@ from repro.core.streaming import UpdateBatch, apply_updates, diff_batch
 from .queue import Query, QueryQueue, QUEUED, RUNNING, DONE
 from .scheduler import Scheduler, SlotView, Decision
 from .cache import ResultCache
+from .publish import freeze
 from .stats import ServiceStats
 
 
@@ -286,10 +287,10 @@ class QueryService:
         """Complete a query and fan its labels out to any coalesced
         followers.  The ndarray is SHARED — one object between the LRU
         entry, this query's ``poll().result`` and every follower's — so
-        it is frozen here (``setflags(write=False)``): a caller
-        mutating a result raises instead of silently corrupting every
-        future cache hit."""
-        labels.setflags(write=False)
+        it is frozen here (:func:`repro.serve.publish.freeze`): a
+        caller mutating a result raises instead of silently corrupting
+        every future cache hit."""
+        labels = freeze(labels)
         q.status = DONE
         q.result = labels
         q.from_cache = from_cache

@@ -1,0 +1,506 @@
+"""Fixture-corpus tests for the repro.analysis invariant linter.
+
+For each rule: at least one minimal snippet that must be flagged and
+one near-miss that must not be; plus pragma-suppression, baseline
+round-trip, CLI exit-code, and seeded-regression tests (the host-sync
+pass must catch a reintroduced ``bool(jnp.any(frontier))`` in a real
+driver loop).  The linter is stdlib-only, so none of this touches
+jax.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (analyze_paths, analyze_source, all_rules,
+                            apply_baseline, load_baseline,
+                            protected_violations, render_baseline,
+                            rule_ids)
+
+REPO = Path(__file__).resolve().parent.parent
+
+CORE = "src/repro/core/somefile.py"
+SERVE = "src/repro/serve/somefile.py"
+
+
+def lint(source, path=CORE, relaxed=False):
+    src = textwrap.dedent(source)
+    return analyze_source(src, path, relaxed=relaxed)
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# registry / framework
+
+def test_registry_has_the_five_passes_plus_pragma_hygiene():
+    ids = rule_ids()
+    for required in ("host-sync", "jit-purity", "static-argnames",
+                     "publish-freeze", "scatter-determinism",
+                     "bad-pragma"):
+        assert required in ids
+    assert len(all_rules()) >= 6
+
+
+def test_findings_format_is_file_line_rule_message():
+    (f,) = lint("""
+        import jax.numpy as jnp
+        def probe(frontier):
+            return bool(jnp.any(frontier))
+    """)
+    assert f.format() == (
+        f"{CORE}:4 host-sync blocking host sync: bool() on a jnp "
+        f"expression — register it with _note_host_transfer() on an "
+        f"adjacent line, or pragma an intentional one-time transfer")
+
+
+def test_syntax_error_is_a_parse_error_finding_not_a_crash():
+    (f,) = lint("def broken(:\n")
+    assert f.rule == "parse-error"
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+
+def test_host_sync_flags_bool_of_jnp_any():
+    findings = lint("""
+        import jax.numpy as jnp
+        def loop(frontier):
+            while bool(jnp.any(frontier)):
+                frontier = step(frontier)
+    """)
+    assert rules_of(findings) == ["host-sync"]
+
+
+def test_host_sync_flags_tainted_local_and_item_and_device_get():
+    findings = lint("""
+        import jax, jax.numpy as jnp
+        def f(frontier):
+            total = jnp.sum(frontier)
+            a = int(total)
+            b = total.item()
+            c = jax.device_get(frontier)
+            return a, b, c
+    """)
+    assert [f.rule for f in findings] == ["host-sync"] * 3
+
+
+def test_host_sync_near_miss_numpy_and_call_results_not_flagged():
+    # np.any over host data, int() of a plain attribute, and values
+    # returned by user functions (the round primitives hand back
+    # host-side actives) must NOT be flagged
+    findings = lint("""
+        import numpy as np
+        def loop(g, frontier, cfg):
+            new, st, active = _round(g, frontier, cfg)
+            if not bool(np.any(active)):
+                return new
+            n = int(st.frontier_size)
+            return new
+    """)
+    assert findings == []
+
+
+def test_host_sync_allows_noted_adjacent_statement():
+    findings = lint("""
+        import jax.numpy as jnp
+        def probe(frontier):
+            _note_host_transfer()
+            return bool(jnp.any(frontier))
+    """)
+    assert findings == []
+
+
+def test_host_sync_out_of_scope_paths_are_ignored():
+    bad = """
+        import jax.numpy as jnp
+        def probe(frontier):
+            return bool(jnp.any(frontier))
+    """
+    assert lint(bad, path="src/repro/models/layer.py") == []
+    assert lint(bad, path=CORE) != []
+
+
+def test_host_sync_seeded_regression_in_real_driver_loop():
+    # reintroduce the exact bug class PR 4 removed: a per-round
+    # blocking bool(jnp.any(frontier)) inside the host driver loop
+    drivers = REPO / "src/repro/core/apps/drivers.py"
+    src = drivers.read_text()
+    assert "while rounds < max_rounds:" in src
+    seeded = src.replace(
+        "while rounds < max_rounds:",
+        "while rounds < max_rounds and bool(jnp.any(frontier)):",
+        1)
+    rel = os.path.relpath(drivers, Path.cwd()) \
+        if str(drivers).startswith(str(Path.cwd())) \
+        else "src/repro/core/apps/drivers.py"
+    clean = analyze_source(src, rel)
+    assert clean == [], [f.format() for f in clean]
+    flagged = analyze_source(seeded, rel)
+    assert any(f.rule == "host-sync" for f in flagged)
+
+
+# ---------------------------------------------------------------------------
+# jit-purity
+
+def test_jit_purity_flags_if_on_traced_param():
+    findings = lint("""
+        import jax
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+    """)
+    assert rules_of(findings) == ["jit-purity"]
+
+
+def test_jit_purity_flags_partial_application_form():
+    # name = partial(jax.jit, static_argnames=...)(impl) must resolve
+    findings = lint("""
+        import jax
+        from functools import partial
+        def _impl(x, cfg):
+            while x.sum() > 0:
+                x = x - 1
+            return x
+        run = partial(jax.jit, static_argnames=("cfg",))(_impl)
+    """)
+    assert rules_of(findings) == ["jit-purity"]
+
+
+def test_jit_purity_flags_print_nondeterminism_and_global():
+    findings = lint("""
+        import jax, time
+        _CACHE = {}
+        @jax.jit
+        def f(x):
+            print(x)
+            t = time.time()
+            _CACHE[0] = x
+            return x + t
+    """)
+    assert sorted(f.message.split()[0] for f in findings) == [
+        "mutation", "nondeterministic", "print()"]
+
+
+def test_jit_purity_near_misses_static_branches():
+    # static args, .ndim/.shape metadata, `is None`, and len() are
+    # all trace-safe — and non-jitted functions are out of scope
+    findings = lint("""
+        import jax, jax.numpy as jnp
+        from functools import partial
+        @partial(jax.jit, static_argnames=("cfg",))
+        def f(x, cfg, acc):
+            if cfg.direction == "push":
+                x = x + 1
+            if x.ndim == 2:
+                x = x[0]
+            if acc is None:
+                acc = jnp.zeros_like(x)
+            outs = (x, acc)
+            return outs[0] if len(outs) == 1 else outs
+        def host_loop(frontier):
+            if frontier.any():
+                return 1
+            return 0
+    """)
+    assert findings == []
+
+
+def test_jit_purity_covers_pallas_partial_kernels():
+    findings = lint("""
+        import functools
+        import jax.experimental.pallas as pl
+        def _kernel(x_ref, o_ref, *, tile):
+            if x_ref[0] > 0:
+                o_ref[0] = x_ref[0]
+        def launch(x, tile):
+            kern = functools.partial(_kernel, tile=tile)
+            return pl.pallas_call(kern, grid=(1,))(x)
+    """, path="src/repro/kernels/somekernel.py")
+    assert rules_of(findings) == ["jit-purity"]
+
+
+# ---------------------------------------------------------------------------
+# static-argnames
+
+def test_static_argnames_typo_is_flagged():
+    findings = lint("""
+        import jax
+        from functools import partial
+        def _impl(x, width, op):
+            return x
+        run = partial(jax.jit, static_argnames=("width", "opp"))(_impl)
+    """)
+    assert rules_of(findings) == ["static-argnames"]
+    assert "'opp'" in findings[0].message
+
+
+def test_static_argnames_matching_params_pass():
+    findings = lint("""
+        import jax
+        from functools import partial
+        @partial(jax.jit, static_argnames=("width", "op"))
+        def f(x, width, op):
+            return x
+        def _impl(y, cfg):
+            return y
+        g = jax.jit(_impl, static_argnames="cfg")
+    """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# publish-freeze
+
+def test_publish_freeze_flags_unfrozen_result_and_cache_entry():
+    findings = lint("""
+        import numpy as np
+        class Engine:
+            def finish(self, q, labels):
+                q.result = np.asarray(labels)
+            def put(self, k, labels):
+                self._entries[k] = labels
+    """, path=SERVE)
+    assert [f.rule for f in findings] == ["publish-freeze"] * 2
+
+
+def test_publish_freeze_near_miss_frozen_values_pass():
+    findings = lint("""
+        import numpy as np
+        from .publish import freeze
+        class Engine:
+            def finish(self, q, labels):
+                labels = freeze(labels)
+                q.result = labels
+            def put(self, k, labels, region):
+                labels.setflags(write=False)
+                self._entries[k] = (labels, freeze(region))
+            def reset(self, q):
+                q.result = None
+    """, path=SERVE)
+    assert findings == []
+
+
+def test_publish_freeze_only_applies_to_serve():
+    bad = """
+        def f(q, labels):
+            q.result = labels
+    """
+    assert lint(bad, path=SERVE) != []
+    assert lint(bad, path=CORE) == []
+
+
+# ---------------------------------------------------------------------------
+# scatter-determinism
+
+def test_scatter_unregistered_combine_flagged_in_executor():
+    # a path with no operators.py on disk -> default registry
+    # {min,max}: .add must be flagged — proving the flag/no-flag
+    # decision really comes from the operators.py registry (the repo's
+    # own tree, which registers "add", passes the same snippet)
+    findings = lint("""
+        import jax.numpy as jnp
+        def apply(labels, idx, vals):
+            return labels.at[idx].add(vals)
+    """, path="no/such/tree/core/balancer.py")
+    assert rules_of(findings) == ["scatter-determinism"]
+
+
+def test_scatter_registered_combine_passes_via_operators_registry(
+        tmp_path):
+    (tmp_path / "operators.py").write_text(
+        'COMMUTATIVE_COMBINES = frozenset({"min", "max", "add"})\n')
+    bal = tmp_path / "balancer.py"
+    bal.write_text(textwrap.dedent("""
+        import jax.numpy as jnp
+        def apply(labels, idx, vals):
+            a = labels.at[idx].add(vals)
+            b = labels.at[idx].min(vals)
+            return a, b
+    """))
+    assert analyze_paths([str(bal)]) == []
+
+
+def test_scatter_set_is_flagged_and_real_registry_covers_tree():
+    findings = lint("""
+        def apply(labels, idx, vals):
+            return labels.at[idx].set(vals)
+    """, path="src/repro/kernels/somekernel.py")
+    assert rules_of(findings) == ["scatter-determinism"]
+    # and the real operators.py registers exactly the order-free set
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.core import operators  # noqa: deferred-jax import
+    assert operators.COMMUTATIVE_COMBINES == {"min", "max", "add"}
+
+
+def test_scatter_out_of_executor_scope_ignored():
+    assert lint("""
+        def apply(labels, idx, vals):
+            return labels.at[idx].set(vals)
+    """, path="src/repro/core/frontier.py") == []
+
+
+# ---------------------------------------------------------------------------
+# pragmas
+
+def test_pragma_suppresses_named_rule_on_its_line():
+    findings = lint("""
+        import jax.numpy as jnp
+        def seed(frontier):
+            return int(jnp.sum(frontier))  # repro: allow[host-sync] -- one-time seed
+    """)
+    assert findings == []
+
+
+def test_pragma_without_justification_is_bad_pragma():
+    findings = lint("""
+        import jax.numpy as jnp
+        def seed(frontier):
+            return int(jnp.sum(frontier))  # repro: allow[host-sync]
+    """)
+    assert rules_of(findings) == ["bad-pragma", "host-sync"]
+
+
+def test_pragma_with_unknown_rule_is_bad_pragma():
+    findings = lint("""
+        def f():
+            return 1  # repro: allow[no-such-rule] -- because
+    """)
+    assert rules_of(findings) == ["bad-pragma"]
+
+
+def test_pragma_shaped_text_in_docstrings_is_ignored():
+    findings = lint('''
+        def f():
+            """Suppress with `# repro: allow[<rule>] -- why`."""
+            return 1
+    ''')
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# baseline
+
+def test_baseline_round_trip(tmp_path):
+    bad = tmp_path / "models" / "legacy.py"
+    bad.parent.mkdir()
+    bad.write_text(textwrap.dedent("""
+        import jax
+        @jax.jit
+        def f(x):
+            print(x)
+            return x
+    """))
+    findings = analyze_paths([str(bad)])
+    assert rules_of(findings) == ["jit-purity"]
+    bl_file = tmp_path / "baseline.txt"
+    bl_file.write_text(render_baseline(findings))
+    baseline = load_baseline(bl_file)
+    kept, matched, stale = apply_baseline(findings, baseline)
+    assert kept == [] and matched == len(findings) and stale == []
+    # a NEW finding in the same file is not grandfathered
+    more = findings + [findings[0].__class__(
+        path=findings[0].path, line=99, rule="jit-purity",
+        message="something new")]
+    kept2, _, _ = apply_baseline(more, baseline)
+    assert len(kept2) == 1
+
+
+def test_baseline_rejects_protected_core_and_serve_paths():
+    from collections import Counter
+    bl = Counter({("src/repro/core/balancer.py", "host-sync",
+                   "grandfathered"): 1,
+                  ("src/repro/models/x.py", "jit-purity", "ok"): 1})
+    bad = protected_violations(bl)
+    assert len(bad) == 1 and "balancer.py" in bad[0]
+
+
+def test_committed_baseline_is_empty_for_core_and_serve():
+    bl = load_baseline(REPO / "analysis-baseline.txt")
+    assert protected_violations(bl) == []
+    # stronger: the committed baseline is entirely empty
+    assert sum(bl.values()) == 0
+
+
+# ---------------------------------------------------------------------------
+# CLI
+
+def run_cli(*args, cwd=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=cwd or REPO, env=env)
+
+
+def test_cli_clean_tree_exits_zero():
+    p = run_cli("--check", "src/", "benchmarks/")
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "OK: 0 findings" in p.stdout
+
+
+def test_cli_findings_exit_one_with_expected_format(tmp_path):
+    f = tmp_path / "src" / "repro" / "core" / "bad.py"
+    f.parent.mkdir(parents=True)
+    f.write_text("import jax.numpy as jnp\n"
+                 "def probe(fr):\n"
+                 "    return bool(jnp.any(fr))\n")
+    p = run_cli("--check", "--no-baseline", "src", cwd=tmp_path)
+    assert p.returncode == 1
+    assert "src/repro/core/bad.py:3 host-sync" in p.stdout
+
+
+def test_cli_bad_path_exits_two():
+    p = run_cli("--check", "no/such/dir")
+    assert p.returncode == 2
+    assert "no such file" in p.stderr
+
+
+def test_cli_no_paths_exits_two():
+    p = run_cli("--check")
+    assert p.returncode == 2
+
+
+def test_cli_help_lists_every_rule():
+    p = run_cli("--help")
+    assert p.returncode == 0
+    for rid in rule_ids():
+        assert rid in p.stdout
+
+
+def test_cli_relaxed_profile_drops_host_sync(tmp_path):
+    f = tmp_path / "tests" / "test_x.py"
+    f.parent.mkdir()
+    f.write_text("import jax.numpy as jnp\n"
+                 "def check(fr):\n"
+                 "    assert bool(jnp.any(fr))\n")
+    strict = run_cli("--check", "--no-baseline", "tests", cwd=tmp_path)
+    relaxed = run_cli("--check", "--relaxed", "--no-baseline",
+                      "tests", cwd=tmp_path)
+    assert relaxed.returncode == 0
+    # host-sync scopes to core/serve paths, so even strict mode does
+    # not fire here — but the relaxed profile must run fewer rules
+    assert "across 3 rule(s)" in relaxed.stdout + relaxed.stderr
+    assert "across 6 rule(s)" in strict.stdout + strict.stderr
+
+
+def test_cli_write_baseline_round_trip(tmp_path):
+    pkg = tmp_path / "src" / "repro" / "models"
+    pkg.mkdir(parents=True)
+    (pkg / "legacy.py").write_text(
+        "import jax\n@jax.jit\ndef f(x):\n    print(x)\n    return x\n")
+    p1 = run_cli("--check", "--no-baseline", "src", cwd=tmp_path)
+    assert p1.returncode == 1
+    p2 = run_cli("--write-baseline", "src", cwd=tmp_path)
+    assert p2.returncode == 0
+    p3 = run_cli("--check", "src", cwd=tmp_path)
+    assert p3.returncode == 0, p3.stdout + p3.stderr
+    assert "(1 baselined)" in p3.stdout
