@@ -1,0 +1,174 @@
+"""Fleet routing quality: affinity, bounded load, hedging, replay
+(DESIGN.md section 13).
+
+A single continuous-batching service (fig_serve.py) wins by packing
+slots; a fleet of N services wins or loses on ROUTING.  This harness
+runs a seeded Zipf workload over a 3-replica fleet and measures the
+structural quantities the router is supposed to control — none of the
+gates is wall-clock:
+
+* **Cache affinity**: fleet-level hit rate with rendezvous affinity on
+  vs the pure-P2C ablation (affinity off).  Affinity concentrates
+  repeats of a key onto its owner replica, so the same per-replica LRU
+  capacity answers more of the traffic.
+* **Bounded load**: the trace-derived ceiling audit — no executed
+  assignment may exceed ``ceil(c * (total + 1) / n)`` — plus the
+  spread of per-replica served counts.
+* **Hedging under stragglers**: throttled replicas force SLO-late
+  queries; hedges must launch, losers must cancel, every fleet query
+  must publish exactly once, and every published result must be
+  bitwise equal to the standalone app run.
+* **Replay**: the full routing trace re-derived offline must match the
+  live decisions exactly — zero divergences.
+
+Rows: ``fleet_route_{affinity|p2c}`` (derived: fleet hit rate, device
+computations), ``fleet_balance`` (derived: per-replica served,
+ceiling violations), ``fleet_hedge`` (derived: hedges
+launched/cancelled, publish count, parity), ``fleet_replay``
+(derived: trace rows, divergences).
+
+Run directly (also the ``fleet`` selector of benchmarks.run):
+
+    PYTHONPATH=src python -m benchmarks.fig_fleet          # full
+    PYTHONPATH=src python -m benchmarks.fig_fleet --smoke  # CI gate
+
+The gates are structural and run at every scale; ``--smoke`` only
+shrinks the input.  ``run`` returns the number of gate failures and
+the process exits non-zero unless (a) the affinity fleet's hit rate
+>= the affinity-off pairing, (b) the trace audit finds zero
+bounded-load ceiling violations and zero replay divergences in every
+run, and (c) the straggler run publishes every query exactly once
+with results bitwise equal to standalone runs — the acceptance gates
+for the fleet layer.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.apps import bfs
+from repro.core.balancer import BalancerConfig
+from repro.serve.fleet import (Fleet, RouterConfig, HedgePolicy,
+                               replay, ceiling_violations)
+
+from .common import emit, pick_sources
+from .fig_serve import _traffic
+
+
+def _run_fleet(g, traffic, cfg, affinity=True, seed=11,
+               throttles=None, hedge_after=12, cache_capacity=64):
+    """Build a 3-replica fleet, push the whole workload, drain."""
+    fleet = Fleet(num_replicas=3, num_slots=4, cfg=cfg,
+                  cache_capacity=cache_capacity,
+                  router=RouterConfig(affinity=affinity,
+                                      hedge_after=hedge_after),
+                  hedge=HedgePolicy(max_hedges=1), seed=seed)
+    fleet.register_graph("g", g)
+    if throttles:
+        for rid, t in throttles.items():
+            fleet.replicas[rid].throttle = t
+    fqids = [fleet.submit("g", "bfs", s) for s in traffic]
+    fleet.run()
+    return fleet, fqids
+
+
+def _audit(fleet) -> tuple:
+    """(replay divergences, ceiling violations) of a drained fleet."""
+    return (replay(fleet.trace.rows),
+            ceiling_violations(fleet.trace.rows))
+
+
+def run(smoke: bool = False) -> int:
+    scale = 9 if smoke else 12
+    n_distinct = 12 if smoke else 32
+    n_queries = 36 if smoke else 128
+    g = G.rmat(scale, 8 if smoke else 16, seed=1)
+    cfg = BalancerConfig(strategy="alb", threshold=64)
+    traffic = _traffic(pick_sources(g, n_distinct), n_queries)
+    failures = 0
+
+    # ---- affinity vs pure P2C: same traffic, same caches -------------
+    audits, hit_rate = [], {}
+    for name, affinity in (("affinity", True), ("p2c", False)):
+        fleet, _ = _run_fleet(g, traffic, cfg, affinity=affinity)
+        s = fleet.summary()
+        audits.append(_audit(fleet))
+        hit_rate[name] = s["fleet_hit_rate"]
+        emit(f"fleet_route_{name}", 0.0,
+             f"hit_rate={s['fleet_hit_rate']:.3f};"
+             f"computations={s['device_computations']};"
+             f"steps={s['steps']}")
+        if name == "affinity":
+            served = s["per_replica_served"]
+            emit("fleet_balance", 0.0,
+                 f"served={'/'.join(str(v) for v in served)};"
+                 f"ceiling_violations={len(audits[0][1])}")
+    if hit_rate["affinity"] < hit_rate["p2c"]:
+        print(f"FAIL: affinity routing hit rate "
+              f"{hit_rate['affinity']:.3f} below the pure-P2C "
+              f"ablation's {hit_rate['p2c']:.3f} (rendezvous affinity "
+              f"should concentrate repeats)", file=sys.stderr)
+        failures += 1
+
+    # ---- straggler run: throttled replicas force hedges --------------
+    fleet, fqids = _run_fleet(
+        g, traffic[:n_queries // 2], cfg, seed=13,
+        throttles={0: 5, 1: 5, 2: 5}, hedge_after=3,
+        cache_capacity=0)
+    audits.append(_audit(fleet))
+    s = fleet.summary()
+    recs = [fleet.poll(q) for q in fqids]
+    published_once = (s["queries_served"] == len(fqids)
+                      and all(r.result is not None for r in recs))
+    parity = all(
+        np.array_equal(np.asarray(r.result),
+                       np.asarray(bfs(g, r.source, cfg).labels))
+        for r in recs)
+    emit("fleet_hedge", 0.0,
+         f"launched={s['hedges_launched']};"
+         f"cancelled={s['hedges_cancelled']};"
+         f"published={s['queries_served']}/{len(fqids)};"
+         f"parity={int(parity)}")
+    if not published_once:
+        print("FAIL: straggler run did not publish every query "
+              "exactly once", file=sys.stderr)
+        failures += 1
+    if not parity:
+        print("FAIL: hedged fleet results diverge from standalone "
+              "runs (determinism broken)", file=sys.stderr)
+        failures += 1
+
+    # ---- trace audit across every run --------------------------------
+    divergences = sum(len(a[0]) for a in audits)
+    violations = sum(len(a[1]) for a in audits)
+    emit("fleet_replay", 0.0,
+         f"rows={len(fleet.trace)};divergences={divergences};"
+         f"violations={violations}")
+    if divergences:
+        print(f"FAIL: {divergences} routing decisions did not replay "
+              f"bitwise from their recorded inputs", file=sys.stderr)
+        failures += 1
+    if violations:
+        print(f"FAIL: {violations} assignments exceeded the "
+              f"bounded-load ceiling", file=sys.stderr)
+        failures += 1
+    if not failures:
+        print(f"# fleet gates OK: affinity hit rate "
+              f"{hit_rate['affinity']:.3f} >= p2c "
+              f"{hit_rate['p2c']:.3f}; 0 divergences; 0 ceiling "
+              f"violations; {s['hedges_launched']} hedges raced "
+              f"cleanly", file=sys.stderr)
+    return failures
+
+
+def main() -> int:
+    smoke = "--smoke" in sys.argv[1:]
+    if run(smoke=smoke):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -45,6 +45,11 @@ Selectors and what each script reproduces:
   per fused traversal, and the on-device direction trace against the
   host threshold rule replayed over device-recorded counts (no
   timing gate).
+* ``fleet``    (fig_fleet.py)           — multi-replica serving fleet
+  (DESIGN.md section 13): rendezvous-affinity hit rate vs the pure-P2C
+  ablation, bounded-load ceiling audit, hedging under forced
+  stragglers, and bitwise routing-trace replay; all gates structural
+  (no timing gate), enforced at every scale.
 * ``roofline`` (roofline.py)            — kernel roofline estimates
   from dry-run artifacts (skipped when artifacts are absent).
 
@@ -60,7 +65,7 @@ import sys
 
 
 SELECTORS = ("table2", "table2sim", "fig5", "fig6", "fig8", "fig9",
-             "qps", "serve", "direction", "update", "fused",
+             "qps", "serve", "direction", "update", "fused", "fleet",
              "roofline")
 
 
@@ -118,6 +123,13 @@ def main() -> None:
         if fig_fused.run():
             # fused/host parity and the zero-sync property are
             # correctness properties — fail the aggregate run
+            sys.exit(1)
+    if "fleet" in which:
+        from . import fig_fleet
+        if fig_fleet.run():
+            # routing replay, the bounded-load ceiling, and hedge
+            # publish-once/parity are correctness properties — fail
+            # the aggregate run
             sys.exit(1)
     if "roofline" in which:
         from . import roofline

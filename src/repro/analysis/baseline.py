@@ -22,7 +22,8 @@ from typing import Iterable, List, Tuple
 
 from .findings import Finding
 
-PROTECTED_PREFIXES = ("src/repro/core", "src/repro/serve")
+PROTECTED_PREFIXES = ("src/repro/core", "src/repro/serve",
+                      "src/repro/serve/fleet")
 
 
 def load_baseline(path) -> Counter:

@@ -5,7 +5,8 @@ Public surface: :class:`QueryService` (the engine), plus the pieces it
 composes — :class:`QueryQueue`/:class:`Query`, :class:`Scheduler`,
 :class:`ResultCache`, :class:`ServiceStats` — each usable standalone.
 """
-from .queue import Query, QueryQueue, QUEUED, RUNNING, DONE
+from .queue import (Query, QueryQueue, QUEUED, RUNNING, DONE,
+                    CANCELLED)
 from .scheduler import Scheduler, SlotView, Decision
 from .cache import ResultCache
 from .stats import ServiceStats
@@ -13,4 +14,4 @@ from .engine import QueryService
 
 __all__ = ["QueryService", "Query", "QueryQueue", "Scheduler",
            "SlotView", "Decision", "ResultCache", "ServiceStats",
-           "QUEUED", "RUNNING", "DONE"]
+           "QUEUED", "RUNNING", "DONE", "CANCELLED"]

@@ -42,7 +42,8 @@ from repro.core.frontier import rows_active, refill_rows, load_rows
 from repro.core.apps.drivers import QUERY_APPS, step_batch
 from repro.core.streaming import UpdateBatch, apply_updates, diff_batch
 
-from .queue import Query, QueryQueue, QUEUED, RUNNING, DONE
+from .queue import (Query, QueryQueue, QUEUED, RUNNING, DONE,
+                    CANCELLED)
 from .scheduler import Scheduler, SlotView, Decision
 from .cache import ResultCache
 from .publish import freeze
@@ -237,10 +238,100 @@ class QueryService:
         return q.qid
 
     def poll(self, qid: int) -> Query:
-        """The query's live record: ``status`` (queued/running/done),
-        ``result`` (host labels once done), ``rounds_in_system``,
-        ``from_cache``."""
+        """The query's live record: ``status``
+        (queued/running/done/cancelled), ``result`` (host labels once
+        done), ``rounds_in_system``, ``from_cache``."""
         return self.queue.poll(qid)
+
+    def cancel(self, qid: int) -> bool:
+        """Withdraw a query before completion (DESIGN.md section 13:
+        the fleet cancels the losing finisher of a hedged pair).
+        Returns True when the query was cancelled, False when it had
+        already completed — its result stands, and the caller (the
+        fleet's publication point) is responsible for dropping it.
+
+        A QUEUED query leaves the pending FIFO (a coalesced follower
+        is instead detached from its primary); a RUNNING query's slot
+        is cleared on device (labels reset to fill, frontier row
+        zeroed — a fixed-shape ``load_rows`` scatter, so cancellation
+        never recompiles the loop).  A cancelled *primary* promotes
+        its first follower into the pending FIFO so coalesced
+        submitters are still answered."""
+        q = self.queue.poll(qid)
+        if q.status in (DONE, CANCELLED):
+            return False
+        if q.status == QUEUED:
+            try:
+                self.queue.remove_pending(qid)
+            except ValueError:
+                # single-flight follower: never enqueued — detach it
+                # from its primary's fan-out list
+                primary = self._inflight.get(q.inflight_key)
+                fs = self._followers.get(primary, [])
+                if q in fs:
+                    fs.remove(q)
+        else:                                      # RUNNING
+            bank = self._banks[(q.graph_id, q.app)]
+            b, v = bank.num_slots, bank.g.num_vertices
+            slots = np.full((b,), b, np.int32)
+            slots[0] = q.slot
+            bank.labels, bank.frontier = load_rows(
+                bank.labels, bank.frontier, slots,
+                np.full((b, v), bank.fill, np.int32),
+                np.zeros((b, v), bool))
+            bank.slot_q[q.slot] = None
+            if bank.stale and not bank.busy():
+                del self._banks[(q.graph_id, q.app)]
+        # release the single-flight registration; a waiting follower
+        # is promoted to a real pending computation
+        key = q.inflight_key
+        if key is not None and self._inflight.get(key) == q.qid:
+            del self._inflight[key]
+            followers = self._followers.pop(q.qid, [])
+            if followers:
+                heir = followers[0]
+                self.queue.enqueue_existing(heir)
+                self._inflight[key] = heir.qid
+                if len(followers) > 1:
+                    self._followers[heir.qid] = followers[1:]
+        q.status = CANCELLED
+        q.slot = None
+        q.saved_state = None
+        q.done_step = self._step
+        self.stats.cancellations += 1
+        return True
+
+    # ---- fleet-facing load signals (DESIGN.md section 13) ----------------
+
+    def load(self) -> int:
+        """Assigned load: queries currently QUEUED or RUNNING — the
+        quantity the fleet router's bounded-load rule budgets."""
+        return self.queue.active_count()
+
+    def queue_head_age(self) -> int:
+        """Service steps the oldest pending query has waited (0 when
+        nothing is pending) — the head-of-line-blocking term of the
+        fleet router's tail-risk score."""
+        head = self.queue.head_submit_step()
+        return 0 if head is None else self._step - head
+
+    def rounds_remaining(self) -> float:
+        """Estimated balancer rounds of work still in this service:
+        for each RUNNING query, the EWMA of completed rounds-in-system
+        minus the rounds it has already run (floored at 1 — an
+        admitted query always costs at least its current round), plus
+        one full EWMA per pending query.  This is the
+        ``work_remaining`` term of the fleet router's tail-risk score
+        (DESIGN.md section 13); 0.0 on an idle, just-started
+        replica."""
+        ewma = self.stats.ewma_rounds
+        rem = 0.0
+        for bank in self._banks.values():
+            for q in bank.slot_q:
+                if q is not None:
+                    rem += max(ewma - q.slot_rounds, 1.0)
+        rem += len(self.queue) * max(ewma, 1.0)
+        return rem
 
     # ---- the serving loop ------------------------------------------------
 
@@ -250,6 +341,7 @@ class QueryService:
         converged slots.  Returns False when nothing was left to do
         (queue empty, all slots idle)."""
         self._step += 1
+        self.stats.queue_head_age = self.queue_head_age()
         did_work = False
         for key in self._bank_keys_with_work():
             did_work |= self._step_bank(key)

@@ -1,0 +1,70 @@
+"""One engine replica of the fleet (DESIGN.md section 13).
+
+A :class:`ReplicaHandle` wraps a :class:`repro.serve.QueryService`
+with the two things the fleet needs on top of the engine API: the
+load signals the router scores (assigned load, rounds-remaining
+estimate, queue-head age — exported by the engine's fleet-facing
+hooks), and execution placement/pacing.  ``device`` pins the
+replica's computations to one ``jax.Device`` (replicas spread across
+the host's devices by default), and ``throttle=k`` advances the
+underlying service only every k-th fleet step — the deterministic
+straggler knob the hedging tests and benchmarks use to force a slow
+replica without touching wall clock.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+from ..engine import QueryService
+
+
+class ReplicaHandle:
+    """A fleet-managed engine replica: id + service + placement."""
+
+    def __init__(self, rid: int, svc: QueryService,
+                 device=None, throttle: int = 1) -> None:
+        if throttle < 1:
+            raise ValueError("throttle must be >= 1")
+        self.rid = rid
+        self.svc = svc
+        self.device = device
+        self.throttle = throttle
+        self._ticks = 0
+
+    def _ctx(self):
+        return (jax_default_device(self.device)
+                if self.device is not None
+                else contextlib.nullcontext())
+
+    def step(self) -> bool:
+        """Advance the replica one service step — unless its throttle
+        says to skip this fleet step (the straggler simulation).
+        Returns whether the service did any work."""
+        self._ticks += 1
+        if (self._ticks - 1) % self.throttle != 0:
+            return False
+        with self._ctx():
+            return self.svc.step()
+
+    # ---- router-facing load signals ----------------------------------
+
+    def load(self) -> int:
+        """Assigned load: the replica's QUEUED + RUNNING queries."""
+        return self.svc.load()
+
+    def rounds_remaining(self) -> float:
+        """Estimated rounds of work left in this replica (the EWMA
+        export of :meth:`QueryService.rounds_remaining`)."""
+        return self.svc.rounds_remaining()
+
+    def queue_head_age(self) -> int:
+        """Steps the replica's oldest pending query has waited."""
+        return self.svc.queue_head_age()
+
+
+def jax_default_device(device):
+    """``jax.default_device(device)`` as a lazy import, so the pure
+    router/trace modules never pull jax in."""
+    import jax
+    return jax.default_device(device)

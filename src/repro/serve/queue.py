@@ -7,6 +7,10 @@ the graph registered as ``graph_id``" — moving through the lifecycle
          ^       |
          +-------+   (preempted: back of the queue, slot state saved)
 
+with a third terminal state, CANCELLED, reached from QUEUED or RUNNING
+via :meth:`QueryService.cancel` — the fleet layer (DESIGN.md
+section 13) cancels the losing finisher of a hedged query.
+
 :class:`QueryQueue` is the bookkeeping half of the service: it assigns
 monotonically increasing query ids (the FIFO admission key the
 scheduler orders by, so admission is deterministic — DESIGN.md
@@ -24,6 +28,7 @@ import numpy as np
 QUEUED = "queued"
 RUNNING = "running"
 DONE = "done"
+CANCELLED = "cancelled"
 
 
 @dataclasses.dataclass
@@ -107,6 +112,33 @@ class QueryQueue:
                 return q
         return None
 
+    def remove_pending(self, qid: int) -> None:
+        """Withdraw a QUEUED query from the pending FIFO (the
+        cancellation path); raises ``ValueError`` when the qid is not
+        pending — e.g. a single-flight follower, which was never
+        enqueued."""
+        self._pending.remove(qid)
+
+    def enqueue_existing(self, q: Query) -> None:
+        """Re-enqueue an already-registered query at the back of the
+        FIFO: the promotion path for a single-flight follower whose
+        primary was cancelled (it must now be computed for real)."""
+        q.status = QUEUED
+        self._pending.append(q.qid)
+
+    def head_submit_step(self) -> Optional[int]:
+        """Submission step of the OLDEST pending query (the queue-head
+        age numerator of the fleet router's tail-risk score, DESIGN.md
+        section 13); None when nothing is pending."""
+        return min((self._queries[qid].submit_step
+                    for qid in self._pending), default=None)
+
+    def active_count(self) -> int:
+        """Queries currently QUEUED or RUNNING (the replica's assigned
+        load as the fleet router sees it)."""
+        return sum(q.status in (QUEUED, RUNNING)
+                   for q in self._queries.values())
+
     def pending_count(self, graph_id: str, app: str) -> int:
         """How many queries are queued for the ``(graph_id, app)``
         bank."""
@@ -125,7 +157,8 @@ class QueryQueue:
 
     def in_flight(self, graph_id: str) -> bool:
         """True while any query for ``graph_id`` is QUEUED/RUNNING."""
-        return any(q.graph_id == graph_id and q.status != DONE
+        return any(q.graph_id == graph_id
+                   and q.status in (QUEUED, RUNNING)
                    for q in self._queries.values())
 
     def __len__(self) -> int:

@@ -1,0 +1,535 @@
+"""Fleet layer: rendezvous routing, bounded load, trace replay,
+hedge races, and cancellation (DESIGN.md section 13).
+
+The property-based half of this suite (hypothesis) is optional: when
+hypothesis is not installed, the property tests are simply not
+defined, while their deterministic fixed-input counterparts — which
+cover the same invariants on pinned cases — always run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core.apps import bfs
+from repro.core.balancer import BalancerConfig
+from repro.serve import QueryService, CANCELLED, DONE, RUNNING
+from repro.serve.fleet import (Fleet, FleetQuery, RouterConfig,
+                               DecisionInputs, decide,
+                               rendezvous_order, load_ceiling,
+                               FeedbackController, HedgePolicy,
+                               hedgeable, TraceRow,
+                               replay, ceiling_violations)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                  # pragma: no cover - env-dependent
+    HAVE_HYPOTHESIS = False
+
+CFG = BalancerConfig(strategy="alb", threshold=32)
+
+
+@pytest.fixture(scope="module")
+def rmat_g():
+    return G.rmat(8, 8, seed=3)
+
+
+def _sources(g, n, seed=0):
+    deg = np.asarray(g.out_degrees())
+    cand = np.flatnonzero(deg > 0)
+    rng = np.random.default_rng(seed)
+    picks = rng.choice(cand, size=n, replace=False)
+    return [int(v) for v in picks]
+
+
+def _zipf_traffic(sources, n, seed=7):
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, len(sources) + 1, dtype=np.float64)
+    p = (1.0 / ranks) / np.sum(1.0 / ranks)
+    return [sources[i] for i in rng.choice(len(sources), size=n, p=p)]
+
+
+def _fleet(n=3, slots=4, cache=64, seed=1, **router_kw):
+    return Fleet(num_replicas=n, cfg=CFG, num_slots=slots,
+                 cache_capacity=cache, seed=seed,
+                 router=RouterConfig(**router_kw))
+
+
+# ---------------------------------------------------------------------------
+# rendezvous hashing
+# ---------------------------------------------------------------------------
+
+def _keys(n):
+    return [("g", "bfs", i) for i in range(n)]
+
+
+def test_rendezvous_order_deterministic_permutation():
+    for key in _keys(50):
+        order = rendezvous_order(key, 5)
+        assert sorted(order) == list(range(5))
+        assert order == rendezvous_order(key, 5)
+
+
+def test_rendezvous_removal_remaps_only_removed_keys():
+    # dropping the last replica: keys whose affinity was NOT replica 4
+    # keep their owner; keys it owned move somewhere else
+    for key in _keys(200):
+        before = rendezvous_order(key, 5)[0]
+        after = rendezvous_order(key, 4)[0]
+        if before != 4:
+            assert after == before
+        else:
+            assert after != 4
+
+
+def test_rendezvous_addition_steals_about_one_nth():
+    # growing 4 -> 5 replicas: moved keys all move TO the new replica,
+    # and the stolen fraction is ~1/5 of the keyspace
+    keys = _keys(2000)
+    moved = 0
+    for key in keys:
+        before = rendezvous_order(key, 4)[0]
+        after = rendezvous_order(key, 5)[0]
+        if after != before:
+            assert after == 4
+            moved += 1
+    assert 0.1 < moved / len(keys) < 0.3
+
+
+# ---------------------------------------------------------------------------
+# decide(): affinity, spill, bounded load, P2C
+# ---------------------------------------------------------------------------
+
+def _inputs(loads, key=("g", "bfs", 0), kind="route", pair=None,
+            scores=None, affinity=True, c=1.25, exclude=(),
+            seq=0, fqid=0):
+    n = len(loads)
+    return DecisionInputs(
+        seq=seq, fqid=fqid, kind=kind, key=key, loads=tuple(loads),
+        scores=tuple(scores if scores is not None else loads),
+        order=rendezvous_order(key, n),
+        pair=tuple(pair if pair is not None else range(min(2, n))),
+        capacity_factor=c, affinity=affinity, exclude=tuple(exclude))
+
+
+def test_affinity_wins_under_ceiling():
+    inp = _inputs([0, 0, 0])
+    assert decide(inp) == (inp.order[0], "affinity")
+
+
+def test_overloaded_affinity_spills():
+    key = ("g", "bfs", 0)
+    aff = rendezvous_order(key, 3)[0]
+    loads = [0, 0, 0]
+    loads[aff] = 10                  # ceiling = ceil(1.25*11/3) = 5
+    others = [r for r in range(3) if r != aff]
+    inp = _inputs(loads, key=key, pair=others)
+    choice, reason = decide(inp)
+    assert reason == "spill" and choice != aff
+
+
+def test_p2c_picks_lower_scored_of_pair():
+    inp = _inputs([1, 1, 1], affinity=False, pair=(0, 2),
+                  scores=(9.0, 0.0, 3.0))
+    assert decide(inp) == (2, "p2c")  # lower score of the PAIR, not
+    #                                   the global minimum (replica 1)
+
+
+def test_decision_never_exceeds_ceiling():
+    # a pinned adversarial case: both P2C candidates over the ceiling
+    # forces the least-loaded fallback, which is always under it
+    inp = _inputs([9, 9, 0], affinity=False, pair=(0, 1),
+                  scores=(1.0, 2.0, 50.0))
+    choice, _ = decide(inp)
+    ceil_ = load_ceiling(inp.loads, inp.capacity_factor)
+    assert inp.loads[choice] + 1 <= ceil_
+    assert choice == 2
+
+
+def test_hedge_respects_exclusions():
+    inp = _inputs([1, 1, 1], kind="hedge", pair=(0, 1), exclude=(0,))
+    choice, reason = decide(inp)
+    assert reason == "hedge" and choice != 0
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(0, 10_000), st.integers(2, 8))
+    def test_prop_rendezvous_remove_remaps_only_owned(src, n):
+        key = ("g", "bfs", src)
+        before = rendezvous_order(key, n + 1)[0]
+        after = rendezvous_order(key, n)[0]
+        if before != n:
+            assert after == before
+        else:
+            assert after != n
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.lists(st.integers(0, 20), min_size=2, max_size=8),
+           st.integers(0, 1000), st.booleans(),
+           st.floats(1.0, 2.0), st.data())
+    def test_prop_decide_bounded_load(loads, src, affinity, c, data):
+        n = len(loads)
+        pair = data.draw(
+            st.lists(st.integers(0, n - 1), min_size=1, max_size=2,
+                     unique=True))
+        scores = data.draw(
+            st.lists(st.floats(0, 100, allow_nan=False),
+                     min_size=n, max_size=n))
+        inp = _inputs(loads, key=("g", "bfs", src), pair=pair,
+                      scores=scores, affinity=affinity, c=c)
+        choice, _ = decide(inp)
+        assert inp.loads[choice] + 1 <= load_ceiling(inp.loads, c)
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.lists(st.floats(0, 100, allow_nan=False),
+                    min_size=3, max_size=8, unique=True),
+           st.data())
+    def test_prop_p2c_picks_lower_scored(scores, data):
+        n = len(scores)
+        pair = tuple(data.draw(
+            st.lists(st.integers(0, n - 1), min_size=2, max_size=2,
+                     unique=True)))
+        inp = _inputs([0] * n, affinity=False, pair=pair,
+                      scores=scores)
+        choice, reason = decide(inp)
+        assert reason == "p2c"
+        assert choice == min(pair, key=lambda r: scores[r])
+
+
+# ---------------------------------------------------------------------------
+# trace replay
+# ---------------------------------------------------------------------------
+
+def _drained_fleet(g, n_queries=30, seed=2, **kw):
+    fleet = _fleet(seed=seed, **kw)
+    fleet.register_graph("g", g)
+    traffic = _zipf_traffic(_sources(g, 8), n_queries, seed=seed)
+    fqids = [fleet.submit("g", "bfs", s) for s in traffic]
+    fleet.run()
+    return fleet, fqids, traffic
+
+
+def test_trace_replays_exactly(rmat_g):
+    fleet, _, _ = _drained_fleet(rmat_g)
+    assert len(fleet.trace) >= 30
+    assert replay(fleet.trace.rows) == []
+    assert ceiling_violations(fleet.trace.rows) == []
+
+
+def test_trace_deterministic_across_runs(rmat_g):
+    a, _, _ = _drained_fleet(rmat_g, seed=5)
+    b, _, _ = _drained_fleet(rmat_g, seed=5)
+    assert a.trace.rows == b.trace.rows
+
+
+def test_replay_reports_corruption(rmat_g):
+    # regression: the replayer must DETECT divergence, not just pass
+    # clean traces — flip one recorded choice and corrupt one row's
+    # load vector, and both must be reported with their seq
+    fleet, _, _ = _drained_fleet(rmat_g)
+    rows = list(fleet.trace.rows)
+    tampered = rows[3]
+    wrong = (tampered.choice + 1) % len(tampered.inputs.loads)
+    rows[3] = TraceRow(inputs=tampered.inputs, choice=wrong,
+                       reason=tampered.reason)
+    divs = replay(rows)
+    assert [d.seq for d in divs] == [rows[3].inputs.seq]
+    assert divs[0].recorded[0] == wrong
+    assert divs[0].derived == (tampered.choice, tampered.reason)
+
+    # a reason-only corruption is also a divergence
+    rows[3] = TraceRow(inputs=tampered.inputs, choice=tampered.choice,
+                       reason="spill" if tampered.reason != "spill"
+                       else "p2c")
+    assert [d.seq for d in replay(rows)] == [rows[3].inputs.seq]
+
+    # and an over-ceiling load vector is caught by the ceiling audit
+    heavy = dataclasses.replace(
+        rows[5].inputs, loads=tuple(
+            40 if r == rows[5].choice else 0
+            for r in range(len(rows[5].inputs.loads))))
+    assert ceiling_violations(
+        [TraceRow(inputs=heavy, choice=rows[5].choice,
+                  reason=rows[5].reason)]) == [heavy.seq]
+
+
+def test_hedge_decisions_are_traced(rmat_g):
+    fleet, _, _ = _drained_fleet(rmat_g, n_queries=16, seed=3,
+                                 cache=0, hedge_after=2)
+    for rep in fleet.replicas:
+        rep.throttle = 1
+    kinds = {row.inputs.kind for row in fleet.trace.rows}
+    assert "route" in kinds
+    hedge_rows = [r for r in fleet.trace.rows
+                  if r.inputs.kind == "hedge"]
+    for row in hedge_rows:
+        assert row.choice not in row.inputs.exclude
+        assert row.reason == "hedge"
+
+
+# ---------------------------------------------------------------------------
+# hedge race: parity, single publication, cancellation
+# ---------------------------------------------------------------------------
+
+def test_hedge_race_parity_and_single_freeze(rmat_g, monkeypatch):
+    g = rmat_g
+    import repro.serve.fleet.fleet as fleet_mod
+    calls = []
+    real_freeze = fleet_mod.freeze
+
+    def spy(arr):
+        calls.append(id(arr))
+        return real_freeze(arr)
+
+    monkeypatch.setattr(fleet_mod, "freeze", spy)
+
+    fleet = _fleet(cache=0, seed=4, hedge_after=2)
+    fleet.register_graph("g", g)
+    for rep in fleet.replicas:       # uniform throttle: every query
+        rep.throttle = 4             # goes SLO-late, every hedge races
+    srcs = _sources(g, 10, seed=1)
+    fqids = [fleet.submit("g", "bfs", s) for s in srcs]
+    summary = fleet.run()
+
+    assert summary["hedges_launched"] > 0
+    # exactly one freeze() per fleet query — the loser of each race
+    # never reaches the publication choke point
+    assert len(calls) == len(fqids)
+    assert summary["queries_served"] == len(fqids)
+    for fqid, s in zip(fqids, srcs):
+        rec = fleet.poll(fqid)
+        assert rec.status == DONE and rec.winner is not None
+        ref = np.asarray(bfs(g, s, CFG).labels)
+        assert np.array_equal(np.asarray(rec.result), ref)
+        assert not rec.result.flags.writeable
+        # every losing submission was cancelled (or finished and was
+        # dropped) — none is still running
+        for rid, rqid in rec.submissions:
+            q = fleet.replicas[rid].svc.poll(rqid)
+            assert q.status in (DONE, CANCELLED)
+            if rid != rec.winner:
+                assert q.status == CANCELLED
+    # fleet accounting counts each query once despite the duplicates
+    assert summary["queries_served"] == len(fqids)
+    assert summary["device_computations"] >= len(fqids)
+
+
+def test_hedges_skipped_when_fleet_saturated(rmat_g):
+    # capacity-conditional hedging: with the whole fleet near the
+    # ceiling, hedge launches must not push any replica over it
+    fleet, _, _ = _drained_fleet(rmat_g, n_queries=40, seed=6,
+                                 cache=0, hedge_after=1)
+    assert ceiling_violations(fleet.trace.rows) == []
+
+
+# ---------------------------------------------------------------------------
+# engine cancellation (the serve-layer hook hedging relies on)
+# ---------------------------------------------------------------------------
+
+def _svc(g, slots=2, cache=0):
+    svc = QueryService(num_slots=slots, cfg=CFG,
+                       cache_capacity=cache)
+    svc.register_graph("g", g)
+    return svc
+
+
+def test_cancel_queued_query(rmat_g):
+    svc = _svc(rmat_g, slots=1)
+    a = svc.submit("g", "bfs", _sources(rmat_g, 2)[0])
+    b = svc.submit("g", "bfs", _sources(rmat_g, 2)[1])
+    svc.step()                       # a runs, b still queued
+    assert svc.cancel(b)
+    assert svc.poll(b).status == CANCELLED
+    svc.run()
+    assert svc.poll(a).status == DONE
+    assert not svc.cancel(a)         # DONE is not cancellable
+    assert not svc.cancel(b)         # cancel is idempotent-false
+
+
+def test_cancel_running_query_frees_slot(rmat_g):
+    g = rmat_g
+    svc = _svc(g, slots=1)
+    srcs = _sources(g, 2)
+    a = svc.submit("g", "bfs", srcs[0])
+    b = svc.submit("g", "bfs", srcs[1])
+    svc.step()
+    assert svc.poll(a).status == RUNNING
+    assert svc.cancel(a)
+    assert svc.poll(a).status == CANCELLED
+    svc.run()                        # b must still complete, in the
+    qb = svc.poll(b)                 # slot the cancel released
+    assert qb.status == DONE
+    assert np.array_equal(np.asarray(qb.result),
+                          np.asarray(bfs(g, srcs[1], CFG).labels))
+    assert svc.stats.cancellations == 1
+
+
+def test_cancel_follower_detaches_from_primary(rmat_g):
+    g = rmat_g
+    s = _sources(g, 1)[0]
+    svc = _svc(g, slots=2)
+    primary = svc.submit("g", "bfs", s)
+    follower = svc.submit("g", "bfs", s)   # single-flight coalesced
+    assert svc.cancel(follower)
+    svc.run()
+    assert svc.poll(primary).status == DONE
+    assert svc.poll(follower).status == CANCELLED
+    assert svc.poll(follower).result is None
+
+
+def test_cancel_primary_promotes_follower(rmat_g):
+    g = rmat_g
+    s = _sources(g, 1)[0]
+    svc = _svc(g, slots=2)
+    primary = svc.submit("g", "bfs", s)
+    follower = svc.submit("g", "bfs", s)
+    assert svc.cancel(primary)
+    svc.run()
+    assert svc.poll(primary).status == CANCELLED
+    qf = svc.poll(follower)          # heir computed the result itself
+    assert qf.status == DONE
+    assert np.array_equal(np.asarray(qf.result),
+                          np.asarray(bfs(g, s, CFG).labels))
+
+
+def test_cancelled_key_can_resubmit(rmat_g):
+    g = rmat_g
+    s = _sources(g, 1)[0]
+    svc = _svc(g, slots=2)
+    a = svc.submit("g", "bfs", s)
+    assert svc.cancel(a)
+    b = svc.submit("g", "bfs", s)    # must re-register, not coalesce
+    svc.run()                        # onto the cancelled computation
+    assert svc.poll(b).status == DONE
+    assert np.array_equal(np.asarray(svc.poll(b).result),
+                          np.asarray(bfs(g, s, CFG).labels))
+
+
+# ---------------------------------------------------------------------------
+# stats: percentile sentinels (the fix) + fleet aggregation
+# ---------------------------------------------------------------------------
+
+def test_percentile_sentinel_on_empty_window(rmat_g):
+    svc = _svc(rmat_g)
+    # regression: a fresh service used to be a NaN factory here; the
+    # fleet aggregates percentiles across replicas, so empty windows
+    # must read as 0.0 (no pressure), consistently at every percentile
+    for p in (50, 95, 99):
+        val = svc.stats.latency_percentile(p)
+        assert val == 0.0 and isinstance(val, float)
+
+
+def test_percentile_single_sample_window(rmat_g):
+    g = rmat_g
+    svc = _svc(g)
+    svc.submit("g", "bfs", _sources(g, 1)[0])
+    svc.run()
+    assert len(svc.stats.rounds_in_system) == 1
+    r = svc.stats.rounds_in_system[0]
+    for p in (50, 95, 99):
+        assert svc.stats.latency_percentile(p) == float(r)
+
+
+def test_fleet_p95_finite_with_idle_replica(rmat_g):
+    # one replica never serves anything; the aggregate must stay a
+    # finite number, not NaN-poisoned by the idle replica
+    fleet = _fleet(n=3, seed=9)
+    fleet.register_graph("g", rmat_g)
+    key_src = _sources(rmat_g, 1)[0]
+    fleet.submit("g", "bfs", key_src)
+    fleet.run()
+    p95 = fleet.summary()["p95_rounds"]
+    assert np.isfinite(p95) and p95 >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# fleet end-to-end
+# ---------------------------------------------------------------------------
+
+def test_fleet_end_to_end_parity(rmat_g):
+    g = rmat_g
+    fleet, fqids, traffic = _drained_fleet(g, n_queries=24)
+    for fqid, s in zip(fqids, traffic):
+        rec = fleet.poll(fqid)
+        assert rec.status == DONE
+        assert np.array_equal(np.asarray(rec.result),
+                              np.asarray(bfs(g, s, CFG).labels))
+    summary = fleet.summary()
+    assert summary["queries_served"] == len(fqids)
+    assert summary["per_replica_load"] == (0, 0, 0)
+
+
+def test_affinity_routes_repeats_to_owner(rmat_g):
+    g = rmat_g
+    fleet = _fleet(seed=7)
+    fleet.register_graph("g", g)
+    s = _sources(g, 1)[0]
+    owner = rendezvous_order(("g", "bfs", s), 3)[0]
+    first = fleet.submit("g", "bfs", s)
+    fleet.run()
+    repeat = fleet.submit("g", "bfs", s)
+    fleet.run()
+    assert fleet.poll(first).winner == owner
+    rec = fleet.poll(repeat)
+    assert rec.winner == owner and rec.from_cache
+    assert fleet.summary()["fleet_hit_rate"] == 0.5
+
+
+def test_affinity_off_is_pure_p2c(rmat_g):
+    fleet, _, _ = _drained_fleet(rmat_g, affinity=False)
+    reasons = {row.reason for row in fleet.trace.rows}
+    assert "affinity" not in reasons and "spill" not in reasons
+
+
+def test_feedback_controller_tightens_and_relaxes():
+    cfg = RouterConfig(p95_target=10.0, hedge_after=8)
+    ctl = FeedbackController(cfg)
+    for _ in range(30):
+        ctl.update(100.0)            # sustained SLO violation
+    assert ctl.w_tail == cfg.w_tail * cfg.max_weight_gain
+    assert ctl.hedge_after == cfg.min_hedge_after
+    for _ in range(200):
+        ctl.update(1.0)              # calm: decay back to defaults
+    assert ctl.w_tail == pytest.approx(cfg.w_tail)
+    assert ctl.hedge_after == cfg.hedge_after
+
+
+def test_hedgeable_predicate():
+    pol = HedgePolicy(max_hedges=1)
+    rec = FleetQuery(fqid=0, graph_id="g", app="bfs", source=0,
+                     submit_step=0)
+    assert not hedgeable(rec, 3, 12, pol)      # too young
+    assert hedgeable(rec, 12, 12, pol)
+    rec.hedges = 1
+    assert not hedgeable(rec, 20, 12, pol)     # budget spent
+    rec.hedges = 0
+    rec.status = DONE
+    assert not hedgeable(rec, 20, 12, pol)     # already published
+    assert not hedgeable(
+        FleetQuery(fqid=1, graph_id="g", app="bfs", source=0),
+        20, 12, HedgePolicy(enabled=False))
+
+
+def test_fleet_on_devices(rmat_g):
+    # replicas pinned round-robin across the host's jax devices keep
+    # the same routing and the same results (single-device hosts just
+    # pin everything to device 0)
+    import jax
+    devs = jax.devices()
+    g = rmat_g
+    fleet = Fleet(num_replicas=3, cfg=CFG, num_slots=4,
+                  cache_capacity=0, seed=1, devices=devs)
+    fleet.register_graph("g", g)
+    srcs = _sources(g, 6, seed=2)
+    fqids = [fleet.submit("g", "bfs", s) for s in srcs]
+    fleet.run()
+    for fqid, s in zip(fqids, srcs):
+        rec = fleet.poll(fqid)
+        assert np.array_equal(np.asarray(rec.result),
+                              np.asarray(bfs(g, s, CFG).labels))
+    assert replay(fleet.trace.rows) == []
