@@ -12,8 +12,11 @@ Rule ids (see each module for the full story):
   through the ``freeze()`` helper.
 * ``scatter-determinism`` — executor ``.at[...]`` scatters must use
   a combine registered commutative-associative in operators.py.
+* ``dtype-narrowing`` — narrow ``.astype`` in core/ must be a
+  ``wire_narrow``-declared safe narrowing from operators.py.
 * ``bad-pragma`` — suppression pragmas must be well-formed.
 """
+from . import dtype_narrowing  # noqa: F401
 from . import host_sync  # noqa: F401
 from . import jit_purity  # noqa: F401
 from . import pragma_hygiene  # noqa: F401

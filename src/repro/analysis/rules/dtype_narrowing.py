@@ -1,0 +1,121 @@
+"""``dtype-narrowing``: narrow ``.astype`` in core/ must be a
+declared-safe wire narrowing.
+
+The wire codec layer (``core/wire.py``, DESIGN.md section 14) ships
+sync payloads in narrow dtypes only where an operator *declares* the
+narrowing exact for its combine
+(:attr:`repro.core.operators.Operator.wire_narrow`).  A narrow
+``.astype`` anywhere else in ``core/`` is how silent precision loss
+enters a label path — an int32 hop count squeezed through ``uint8``
+truncates without any error.  This pass parses the ``wire_narrow=``
+declarations from ``operators.py`` *statically* (AST only — the
+linter never imports jax) and flags every ``.astype`` in ``core/``
+whose statically-known target dtype is narrower than 32 bits and not
+in the declared union.  Dynamically-chosen dtypes
+(``.astype(some_var)``) are the codec layer's own dispatch and cannot
+be resolved statically; they are not flagged.  Justified exceptions
+carry a pragma: ``# repro: allow[dtype-narrowing] -- why``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import FrozenSet, List
+
+from ..findings import Finding
+from ..registry import Rule, register_rule
+
+RULE_ID = "dtype-narrowing"
+
+DECLARATION_KEYWORD = "wire_narrow"
+
+#: dtype names narrower than the 32-bit label/payload word
+NARROW_NAMES: FrozenSet[str] = frozenset({
+    "int8", "uint8", "int16", "uint16", "float16", "bfloat16"})
+
+
+def _parse_declarations(source: str) -> FrozenSet[str]:
+    """The union of every ``wire_narrow=("...", ...)`` literal tuple
+    passed to an ``Operator(...)`` call in operators.py."""
+    declared: set = set()
+    for node in ast.walk(ast.parse(source)):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg != DECLARATION_KEYWORD:
+                continue
+            if isinstance(kw.value, (ast.Tuple, ast.List, ast.Set)):
+                for el in kw.value.elts:
+                    if isinstance(el, ast.Constant) \
+                            and isinstance(el.value, str):
+                        declared.add(el.value)
+    return frozenset(declared)
+
+
+def _declared_narrowings(ctx) -> FrozenSet[str]:
+    """Locate and parse the nearest ``operators.py`` (cached per
+    directory in the session); no registry found means NO narrowing
+    is declared safe."""
+    d = os.path.dirname(ctx.path)
+    key = ("wire-narrow-registry", d)
+    if key in ctx.session.memo:
+        return ctx.session.memo[key]
+    declared: FrozenSet[str] = frozenset()
+    for rel in ("operators.py",
+                os.path.join("..", "core", "operators.py"),
+                os.path.join("..", "operators.py")):
+        cand = os.path.normpath(os.path.join(d, rel))
+        if os.path.isfile(cand):
+            with open(cand, "r", encoding="utf-8") as fh:
+                declared = _parse_declarations(fh.read())
+            break
+    ctx.session.memo[key] = declared
+    return declared
+
+
+def _static_dtype_name(node) -> str | None:
+    """The dtype name of an ``.astype`` argument when statically
+    resolvable: ``jnp.uint16`` / ``np.int8`` attributes, ``"uint16"``
+    string constants, or bare ``uint16`` names."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def check(ctx) -> List[Finding]:
+    """Run the dtype-narrowing pass over one core/ file."""
+    if not ctx.in_dir("core"):
+        return []
+    declared = _declared_narrowings(ctx)
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        if not (isinstance(func, ast.Attribute)
+                and func.attr == "astype" and node.args):
+            continue
+        name = _static_dtype_name(node.args[0])
+        if name is None or name not in NARROW_NAMES:
+            continue
+        if name in declared:
+            continue
+        out.append(ctx.finding(
+            node, RULE_ID,
+            f"`.astype({name})` narrows below the 32-bit payload "
+            f"word but {name!r} is not in any operator's declared "
+            f"safe-narrowing set ({DECLARATION_KEYWORD}= in "
+            f"operators.py) — silent truncation on a label path"))
+    return out
+
+
+register_rule(Rule(
+    id=RULE_ID,
+    description="narrow .astype in core/ must be a wire_narrow-"
+                "declared safe narrowing from operators.py",
+    check=check,
+))

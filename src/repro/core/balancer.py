@@ -111,12 +111,20 @@ class BalancerConfig:
     pull_beta: int = 24              # adaptive: pull when n_f*beta >= V
     backend: Optional[str] = None    # xla | pallas | merge_path | None
     #                                  (None: derived from use_pallas)
+    wire: str = "identity"           # sync wire codec: identity |
+    #                                  delta | quantize[:<dtype>] |
+    #                                  bitmap (DESIGN.md section 14)
 
     def __post_init__(self):
         assert self.strategy in ("vertex", "twc", "edge_lb", "alb")
         assert self.distribution in ("cyclic", "blocked")
         assert self.direction in ("push", "pull", "adaptive")
         assert self.backend in (None, "xla", "pallas", "merge_path")
+        # syntax-level wire validation; the operator pairing (quantize
+        # needs a declared safe narrowing) is checked at driver entry,
+        # where the operator is known (repro.core.wire.get_codec)
+        from .wire import validate_wire   # local: avoids import cycle
+        validate_wire(self.wire)
 
     @property
     def executor(self) -> str:
@@ -387,8 +395,13 @@ class RoundStats(NamedTuple):
     tile_loads_twc: np.ndarray   # per-tile edge counts, TWC path
     tile_loads_lb: np.ndarray    # per-tile edge counts, LB path
     mirrors_synced: int = 0  # label entries exchanged by the BSP sync
-    bytes_synced: int = 0    # ... in bytes (0 outside the distributed
-    #                          runtime; see gluon.py / DESIGN.md section 6)
+    bytes_synced: int = 0    # ... as LOGICAL bytes: index word + [B]
+    #                          payload per exchanged vertex (0 outside
+    #                          the distributed runtime; see gluon.py /
+    #                          DESIGN.md section 6)
+    bytes_wire: int = 0      # POST-ENCODE bytes of the same exchange
+    #                          under cfg.wire (== bytes_synced for the
+    #                          identity codec; DESIGN.md section 14)
     frontier_per_query: Optional[np.ndarray] = None  # int64[B]
     direction: str = "push"  # traversal direction this round ran as
     #                          (DESIGN.md section 9)
@@ -412,6 +425,7 @@ class RoundStats(NamedTuple):
                                             dtype=np.int64),
                    mirrors_synced=int(s.mirrors_synced),
                    bytes_synced=int(s.bytes_synced),
+                   bytes_wire=int(s.bytes_wire),
                    frontier_per_query=np.asarray(s.frontier_per_query,
                                                  dtype=np.int64),
                    direction="pull" if bool(s.is_pull) else "push",
@@ -433,6 +447,8 @@ class RoundStatsDev(NamedTuple):
     tile_loads_lb: jax.Array     # int32[num_tiles]
     mirrors_synced: jax.Array    # int32 scalar (filled in by gluon.py)
     bytes_synced: jax.Array      # int32 scalar (filled in by gluon.py)
+    bytes_wire: jax.Array = np.int32(0)  # int32 scalar: post-encode
+    #                              bytes under cfg.wire (gluon.py)
     frontier_per_query: jax.Array = np.zeros((1,), np.int32)  # int32[B]
     frontier_edges: jax.Array = np.int32(0)   # push-side m_f (union)
     is_pull: jax.Array = np.zeros((), bool)   # direction this round ran
@@ -1129,6 +1145,7 @@ def _fused_stats_init(max_rounds: int, b: int, num_tiles: int
         tile_loads_twc=z((max_rounds, num_tiles)),
         tile_loads_lb=z((max_rounds, num_tiles)),
         mirrors_synced=z((max_rounds,)), bytes_synced=z((max_rounds,)),
+        bytes_wire=z((max_rounds,)),
         frontier_per_query=z((max_rounds, b)),
         frontier_edges=z((max_rounds,)),
         is_pull=jnp.zeros((max_rounds,), bool))

@@ -59,6 +59,8 @@ from .frontier import multi_source_state
 from .operators import Operator
 from .partition import PartitionMeta
 from . import operators as ops
+from . import wire as wirecodec
+from .wire import step_logical_bytes
 
 
 def device_mesh(num_devices: int | None = None):
@@ -90,8 +92,13 @@ def make_round_fn(mesh, cfg: BalancerConfig, op: Operator,
     instrumentation record per device per round (Fig 1/5 in SPMD mode).
     ``bytes_synced`` reports the all-reduce's per-device volume —
     ``V * itemsize`` every round, the baseline the mirror substrate
-    undercuts.
+    undercuts; ``bytes_wire`` is what ``cfg.wire``'s codec would put
+    on a real wire for the same round (the all-reduce itself stays
+    full-width — encoding a commutative reduction tree is the
+    transport's job, so the codec is accounting-only here).
     """
+    codec = wirecodec.get_codec(cfg.wire, op)
+
     def round_fn(stacked_g: Graph, values, labels, frontier):
         # shard_map hands each device a [1, ...] block: squeeze to local
         stacked_g = Graph(row_ptr=stacked_g.row_ptr[0],
@@ -103,12 +110,14 @@ def make_round_fn(mesh, cfg: BalancerConfig, op: Operator,
             out = relax_spmd(stacked_g, values, delta, frontier, cfg, op,
                              collect_stats=collect_stats)
             delta, st = out if collect_stats else (out, None)
+            shipped, prev = delta, jnp.zeros_like(delta)
             delta = _sync(delta, "add")
             new = labels + delta
         else:
             out = relax_spmd(stacked_g, values, labels, frontier, cfg, op,
                              collect_stats=collect_stats)
             new, st = out if collect_stats else (out, None)
+            shipped, prev = new, labels
             new = _sync(new, op.combine)
         if collect_stats:
             # all-reduce volume spans every label entry: V vertices
@@ -116,7 +125,8 @@ def make_round_fn(mesh, cfg: BalancerConfig, op: Operator,
             # each carrying a [B] vector -> bytes scale by the batch
             st = st._replace(
                 mirrors_synced=jnp.int32(labels.shape[-1]),
-                bytes_synced=jnp.int32(labels.size * labels.dtype.itemsize))
+                bytes_synced=jnp.int32(labels.size * labels.dtype.itemsize),
+                bytes_wire=codec.allreduce_wire_bytes(shipped, prev))
             # leading axis of size 1 -> stacked to [D, ...] by out_specs
             return new, jax.tree_util.tree_map(lambda x: x[None], st)
         return new
@@ -208,8 +218,11 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
 
     Sync payloads are per-**vertex**: a boundary vertex is dirty when
     any query touched it, and a dirty vertex ships its whole ``[B]``
-    label vector in one ring step (DESIGN.md section 7) —
-    ``mirrors_synced`` counts vertices, ``bytes_synced`` scales by B.
+    label vector plus its int32 index word in one ring step (DESIGN.md
+    section 7) — ``mirrors_synced`` counts vertices, ``bytes_synced``
+    is the logical volume (index side included), and ``bytes_wire``
+    the post-encode volume under ``cfg.wire``'s codec
+    (repro.core.wire), which both rings route every payload through.
 
     ``values_of`` / ``next_frontier`` / ``post_sync`` are traced inside
     ``shard_map`` so frontier and value derivation stay device-local —
@@ -235,6 +248,7 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
     """
     ndev = meta.num_devices
     v = meta.num_vertices
+    codec = wirecodec.get_codec(cfg.wire, op)
     if fused and collect_stats:
         raise ValueError("fused mirror traversal does not collect "
                          "per-round stats (one dispatch, no per-round "
@@ -279,17 +293,36 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
             # ---- reduce-to-master: each ring step s ships my dirty
             # values for vertices mastered s hops ahead; the sentinel-V
             # padding is dropped by the scatter, non-dirty slots carry
-            # the neutral.
+            # the neutral.  The payload crosses the ring through
+            # ``cfg.wire``'s codec: the reduce direction's delta
+            # reference is the round-entry labels (zeros in delta-sync
+            # mode, where the payload already IS a delta) — both ends
+            # hold identical copies for every real mirror-list slot
+            # because the previous broadcast overwrote them.
+            prev_reduce = (jnp.zeros_like(labels) if sync_delta
+                           else labels)
             acc = new
             n_exch = jnp.int32(0)
+            b_log = jnp.int32(0)
+            b_wire = jnp.int32(0)
             for s in range(1, ndev):
                 out_idx = mirror_t[(me + s) % ndev]
                 safe = jnp.where(out_idx < v, out_idx, 0)
                 live = (out_idx < v) & dirty_v[safe]
                 payload = jnp.where(live[None], new[:, safe], neutral)
-                n_exch += jnp.sum(live.astype(jnp.int32))
-                recv = jax.lax.ppermute(payload, "dev", perm_fwd[s])
+                if collect_stats:
+                    n_exch += jnp.sum(live.astype(jnp.int32))
+                    b_log += step_logical_bytes(
+                        live, b, new.dtype.itemsize)
+                    b_wire += codec.step_wire_bytes(
+                        payload, prev_reduce[:, safe], live, op)
+                recv = jax.lax.ppermute(
+                    codec.encode(payload, prev_reduce[:, safe], op),
+                    "dev", perm_fwd[s])
                 in_idx = incoming_t[(me - s) % ndev]
+                safe_in = jnp.where(in_idx < v, in_idx, 0)
+                recv = codec.decode(recv, prev_reduce[:, safe_in], op,
+                                    new.dtype)
                 if op.combine == "min":
                     acc = acc.at[:, in_idx].min(recv, mode="drop")
                 else:
@@ -305,16 +338,30 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
 
             # ---- broadcast-to-mirrors: masters push the reduced
             # values back along the reverse ring; mirrors overwrite
-            # their copies.
+            # their copies.  Here the delta reference is always the
+            # round-entry labels: the broadcast ships actual labels
+            # even in delta-sync mode, and every mirror-list slot's
+            # round-entry copy agrees across devices (the previous
+            # broadcast's unconditional overwrite).
             gdirty = jnp.any(final != labels, axis=0)  # [V]
             for s in range(1, ndev):
                 out_idx = incoming_t[(me - s) % ndev]
                 safe = jnp.where(out_idx < v, out_idx, 0)
                 live = (out_idx < v) & gdirty[safe]
                 payload = final[:, safe]
-                n_exch += jnp.sum(live.astype(jnp.int32))
-                recv = jax.lax.ppermute(payload, "dev", perm_bwd[s])
+                if collect_stats:
+                    n_exch += jnp.sum(live.astype(jnp.int32))
+                    b_log += step_logical_bytes(
+                        live, b, final.dtype.itemsize)
+                    b_wire += codec.step_wire_bytes(
+                        payload, labels[:, safe], live, op)
+                recv = jax.lax.ppermute(
+                    codec.encode(payload, labels[:, safe], op),
+                    "dev", perm_bwd[s])
                 in_idx = mirror_t[(me + s) % ndev]
+                safe_in = jnp.where(in_idx < v, in_idx, 0)
+                recv = codec.decode(recv, labels[:, safe_in], op,
+                                    final.dtype)
                 final = final.at[:, in_idx].set(recv, mode="drop")
 
             new_frontier = next_frontier(labels, final, frontier)
@@ -328,10 +375,16 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
                         - labels.astype(jnp.float32)),
                 0.0)), "dev")
             if collect_stats:
+                # bytes_synced is the LOGICAL exchange volume: every
+                # live vertex ships its int32 index word alongside the
+                # [B] payload (the index side used to be dropped from
+                # the count — see tests/test_mirror_sync.py's
+                # accounting regression); bytes_wire is the post-encode
+                # volume under cfg.wire's codec.
                 st = st._replace(
                     mirrors_synced=n_exch,
-                    bytes_synced=n_exch
-                    * jnp.int32(b * new.dtype.itemsize))
+                    bytes_synced=b_log,
+                    bytes_wire=b_wire)
             return final, new_frontier, active, resid, st
 
         if not fused:
@@ -474,6 +527,10 @@ def run_distributed(stacked_g: Graph, mesh, op: Operator,
     """
     _require_push_direction(cfg)
     _require_meta(meta, sync)
+    # config-time codec/operator pairing check: a quantize wire on an
+    # operator that declares no safe narrowing must fail HERE, before
+    # any round is traced or run
+    wirecodec.get_codec(cfg.wire, op, init_labels.dtype)
     if mode not in ("host", "fused"):
         raise ValueError(f"unknown distributed mode {mode!r} "
                          "(host|fused)")
@@ -741,6 +798,9 @@ def pagerank_distributed(stacked_rg: Graph, mesh, out_degrees,
     one ``lax.while_loop`` inside ``shard_map``."""
     _require_push_direction(cfg)
     _require_meta(meta, sync)
+    # config-time codec/operator pairing check (quantize forbids float
+    # rank payloads, and PR_PULL declares no narrowing anyway)
+    wirecodec.get_codec(cfg.wire, ops.PR_PULL, jnp.float32)
     if mode not in ("host", "fused"):
         raise ValueError(f"unknown distributed mode {mode!r} "
                          "(host|fused)")

@@ -25,6 +25,14 @@ class Operator:
     combine: str                      # 'min'  | 'add'
     msg: Callable                     # (value, weight) -> candidate
     uses_weight: bool = True
+    #: wire narrowings this operator's combine tolerates EXACTLY
+    #: (DESIGN.md section 14), narrowest-preferred-last: dtype names
+    #: the ``quantize`` wire codec may ship, first entry the default.
+    #: Empty (the default) means "never narrow" — a ``wire="quantize"``
+    #: config raises at config time.  The static ``dtype-narrowing``
+    #: lint pass (repro.analysis) parses these declarations by AST —
+    #: keep each a literal tuple of string constants.
+    wire_narrow: tuple = ()
 
 
 # Scatter combines that are commutative AND associative on the value
@@ -41,18 +49,27 @@ COMMUTATIVE_COMBINES = frozenset({"min", "max", "add"})
 SSSP_RELAX = Operator("sssp_relax", "push", "min",
                       lambda v, w: v + w)
 
-# bfs: level[dst] = min(level[dst], level[src] + 1)
+# bfs: level[dst] = min(level[dst], level[src] + 1).  Hop counts are
+# bounded by the round budget, so uint16 (diameter < 65535) is always
+# safe in practice and int8 (hops < 127) is safe for bounded-depth
+# traversals — the narrow word's max value is the "unreached" sentinel
+# (DESIGN.md section 14).
 BFS_HOP = Operator("bfs_hop", "push", "min",
-                   lambda v, w: v + 1, uses_weight=False)
+                   lambda v, w: v + 1, uses_weight=False,
+                   wire_narrow=("uint16", "int8"))
 
 # connected components (label propagation on symmetrized graph):
 # comp[dst] = min(comp[dst], comp[src])
 CC_MIN = Operator("cc_min", "push", "min",
                   lambda v, w: v, uses_weight=False)
 
-# kcore: when a vertex dies, its (symmetrized) neighbours lose a degree
+# kcore: when a vertex dies, its (symmetrized) neighbours lose a degree.
+# Payloads are degree decrements with magnitude bounded by the max
+# degree, so the uint16 wire word (two's-complement wrap, sign-extended
+# on decode — exact while |delta| < 2^15) is safe.
 KCORE_DEC = Operator("kcore_dec", "push", "add",
-                     lambda v, w: jnp.full_like(v, -1), uses_weight=False)
+                     lambda v, w: jnp.full_like(v, -1), uses_weight=False,
+                     wire_narrow=("uint16",))
 
 # pagerank (pull): acc[v] += contrib[u] for in-neighbours u; the per-
 # vertex contribution rank[u]/outdeg[u] is precomputed as the value.
@@ -83,5 +100,6 @@ def as_pull(op: Operator) -> Operator:
             f"combine={op.combine!r})")
     if op not in _PULL_TWINS:
         _PULL_TWINS[op] = Operator(op.name + "@pull", "pull",
-                                   op.combine, op.msg, op.uses_weight)
+                                   op.combine, op.msg, op.uses_weight,
+                                   op.wire_narrow)
     return _PULL_TWINS[op]

@@ -1,0 +1,377 @@
+"""Pluggable wire codecs for the distributed sync payload path.
+
+The mirror substrate's scaling bottleneck is inter-device
+communication volume (the quantity ``RoundStats.bytes_synced``
+tracks); this module separates *what* a sync round ships (the dirty
+boundary payload gluon.py assembles) from *how* it is packed on the
+wire, following the composable work-definition/scheduling split of
+Osama et al. (PAPERS.md): codecs compose with every app, sync
+substrate, and execution mode instead of being hand-welded into one
+exchange.
+
+A codec is a :class:`WireCodec`: ``encode`` / ``decode`` transform the
+per-ring-step payload slab (jit-safe, fixed output shapes — nothing
+recompiles when the dirty set changes), and the byte accountants
+(``step_wire_bytes`` / ``allreduce_wire_bytes``) report what the
+encoded representation would occupy on a real wire, as jit ``int32``
+scalars that ride the round's existing stats.  The **logical** volume
+(``bytes_synced``: one index word plus the ``[B]`` label vector per
+exchanged vertex) is codec-independent; ``bytes_wire`` is the
+post-encode volume, and ``bytes_wire / bytes_synced`` is the
+compression ratio fig6 records.
+
+Four codecs are registered:
+
+* ``identity`` — bitwise today's behavior; ``bytes_wire ==
+  bytes_synced``.  The default, and the parity reference.
+* ``delta`` — ship label deltas against the previous round's synced
+  values.  The reference state is the round-entry label array the
+  shard_map loop already carries (host loop and fused
+  ``lax.while_loop`` alike): after every broadcast a master's copy and
+  its mirrors' copies agree for every mirror-list vertex, so both ends
+  of a ring step reconstruct the same reference and integer deltas
+  decode exactly (two's-complement wraparound makes ``(a - b) + b``
+  an identity).  Unchanged entries ship nothing; changed entries ship
+  a frame-of-reference offset (1/2/4 bytes against the per-query
+  minimum of the step's changed values) behind a 2-bit-per-entry code
+  stream.  Float payloads (pagerank) ship raw — float subtraction
+  does not round-trip bitwise — and compress by suppression only.
+* ``quantize`` — narrow dtypes where the app's combine tolerates it:
+  the operator must declare its safe narrowings
+  (:attr:`repro.core.operators.Operator.wire_narrow`); an app whose
+  operator declares none **raises at config time**.  min-combine
+  payloads map through a saturating sentinel (the narrow dtype's max
+  encodes "unreached"/neutral, exact while true labels stay below
+  it); add-combine payloads wrap two's-complement into the narrow
+  word and sign-extend back (exact while magnitudes fit).  The ring
+  genuinely ships the narrow array.  BFS hop counts and k-core
+  degree deltas fit ``uint16``; bounded-depth traversals fit
+  ``int8`` (``wire="quantize:int8"`` selects a non-default declared
+  narrowing).
+* ``bitmap`` — pack the dirty mask 8 vertices/byte for the index side
+  of the exchange: a ring step whose live set is dense ships an
+  ``ceil(L/8)``-byte bitmap over its (static) mirror-list slots
+  instead of one 4-byte index word per live vertex; sparse steps keep
+  the index list (the transport envelope's length field disambiguates
+  the two layouts, so the hybrid costs no tag byte).  Payload bytes
+  are unchanged.
+
+The block-absmax quantization idiom shared with the gradient
+compressor lives here too (:func:`pad_to_block` /
+:func:`block_absmax_scale`); ``repro.optim.grad_compress`` imports it
+rather than keeping a private copy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .graph import INF
+from .operators import Operator
+
+#: bytes of the per-vertex index word the uncompressed exchange ships
+#: alongside each dirty vertex's payload (int32 vertex ids)
+INDEX_BYTES = 4
+
+#: block length of the shared block-absmax quantization idiom (also
+#: used by the optimizer-side gradient compressor)
+BLOCK = 256
+
+
+# ---------------------------------------------------------------------------
+# shared quantize helpers (the block-absmax idiom; grad_compress
+# imports these instead of keeping a private copy)
+# ---------------------------------------------------------------------------
+
+def pad_to_block(x: jax.Array, block: int = BLOCK):
+    """Flatten ``x`` and pad to a whole number of ``block``-wide rows.
+
+    Returns ``(blocks[N, block], npad)`` — the shared first step of
+    every block-scaled quantization scheme in the tree."""
+    n = x.size
+    npad = -(-n // block) * block - n
+    flat = x.reshape(-1)
+    if npad:
+        flat = jnp.pad(flat, (0, npad))
+    return flat.reshape(-1, block), npad
+
+
+def block_absmax_scale(blocks: jax.Array, qmax: float = 127.0,
+                       eps: float = 1e-12) -> jax.Array:
+    """Per-block symmetric absmax scale (``[N, 1]``, floored at
+    ``eps``): the quantization step that maps each block of values
+    onto ``[-qmax, qmax]``."""
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / qmax
+    return jnp.maximum(scale, eps)
+
+
+# ---------------------------------------------------------------------------
+# codec protocol + registry
+# ---------------------------------------------------------------------------
+
+def _is_float(dtype) -> bool:
+    return jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
+
+
+def _narrow_info(name: str):
+    """(jnp dtype, itemsize, min-combine sentinel) of a declared
+    narrowing."""
+    dt = jnp.dtype(name)
+    if name == "uint16":
+        return jnp.uint16, 2, (1 << 16) - 1
+    if name == "int8":
+        return jnp.int8, 1, (1 << 7) - 1
+    if name == "uint8":
+        return jnp.uint8, 1, (1 << 8) - 1
+    if name == "int16":
+        return jnp.int16, 2, (1 << 15) - 1
+    raise ValueError(f"unsupported wire narrowing dtype {name!r}")
+
+
+#: dtype names a quantize codec may ship — the set the
+#: ``dtype-narrowing`` lint pass cross-checks operator declarations
+#: against
+NARROW_DTYPES = frozenset({"int8", "uint8", "int16", "uint16"})
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """One wire packing of the sync payload path (see module
+    docstring).  Frozen and stateless: per-round reference state (the
+    ``delta`` codec's previous-synced labels) is the round-entry label
+    array the caller's loop already carries, passed in per call.
+
+    All methods are jit-safe with fixed output shapes, so swapping
+    codecs never recompiles the round beyond the one trace per
+    (cfg, op) jit key the ``wire`` config field already implies.
+    """
+
+    #: registry name ("identity" | "delta" | "quantize" | "bitmap")
+    name: str
+
+    #: narrow dtype name shipped by the quantize codec (None elsewhere)
+    narrow: Optional[str] = None
+
+    # -- config-time validation ------------------------------------------
+
+    def validate(self, op: Operator, dtype) -> None:
+        """Raise (at config time, before any round runs) when this
+        codec cannot carry ``op``'s payloads exactly.
+
+        Only ``quantize`` constrains the pairing: the operator must
+        declare the requested narrowing in
+        :attr:`~repro.core.operators.Operator.wire_narrow`."""
+        if self.name != "quantize":
+            return
+        if not op.wire_narrow:
+            raise ValueError(
+                f"wire codec 'quantize' needs an operator that "
+                f"declares a safe narrowing; {op.name} declares none "
+                f"(its combine does not tolerate narrow payloads — "
+                f"DESIGN.md section 14)")
+        if self.narrow not in op.wire_narrow:
+            raise ValueError(
+                f"operator {op.name} declares safe narrowings "
+                f"{op.wire_narrow}; requested {self.narrow!r} is not "
+                f"among them")
+        if _is_float(dtype):
+            raise ValueError(
+                f"wire codec 'quantize' is exact only for integer "
+                f"payloads; {op.name} ships {jnp.dtype(dtype).name}")
+
+    # -- payload transform (per ring step) -------------------------------
+
+    def encode(self, payload: jax.Array, prev: jax.Array,
+               op: Operator) -> jax.Array:
+        """Encode one ring step's ``[B, L]`` payload slab.
+
+        ``prev`` is the ``[B, L]`` previous-synced reference gathered
+        at the same slots — both ends of the step hold an identical
+        copy for every real (non-padding) slot, which is what makes
+        ``delta`` decodable.  The output shape is fixed (``[B, L]``,
+        possibly narrower dtype), so the ``lax.ppermute`` that ships
+        it never changes signature."""
+        if self.name == "delta" and not _is_float(payload.dtype):
+            return payload - prev
+        if self.name == "quantize":
+            ndt, _, sent = _narrow_info(self.narrow)
+            if op.combine == "min":
+                return jnp.minimum(payload, sent).astype(ndt)
+            return payload.astype(ndt)  # add: two's-complement wrap
+        return payload
+
+    def decode(self, wire: jax.Array, prev: jax.Array,
+               op: Operator, dtype) -> jax.Array:
+        """Exact inverse of :meth:`encode` given the receiver's copy
+        of the same ``prev`` reference; returns the logical payload in
+        the label dtype."""
+        if self.name == "delta" and not _is_float(dtype):
+            return prev + wire
+        if self.name == "quantize":
+            _, _, sent = _narrow_info(self.narrow)
+            if op.combine == "min":
+                wide = wire.astype(dtype)
+                return jnp.where(wire == jnp.asarray(sent, wire.dtype),
+                                 jnp.asarray(INF, dtype), wide)
+            # add: sign-extend the narrow word back to the label dtype
+            signed = jnp.dtype(self.narrow) \
+                if jnp.issubdtype(jnp.dtype(self.narrow), jnp.signedinteger) \
+                else jnp.dtype(f"int{jnp.dtype(self.narrow).itemsize * 8}")
+            return wire.astype(signed).astype(dtype)
+        return wire
+
+    # -- wire accounting (jit int32 scalars) -----------------------------
+
+    def step_wire_bytes(self, payload: jax.Array, prev: jax.Array,
+                        live: jax.Array, op: Operator) -> jax.Array:
+        """Post-encode bytes of one mirror ring step.
+
+        ``payload``/``prev``: ``[B, L]`` slabs; ``live``: ``[L]``
+        which slots actually carry traffic (padding and clean slots
+        ship nothing under every codec).  The uncompressed baseline
+        for the same step is ``n_live * (INDEX_BYTES + B * itemsize)``
+        (:func:`step_logical_bytes`)."""
+        b = payload.shape[0]
+        isz = payload.dtype.itemsize
+        n_live = jnp.sum(live.astype(jnp.int32))
+        if self.name == "identity":
+            return n_live * jnp.int32(INDEX_BYTES + b * isz)
+        if self.name == "quantize":
+            _, nisz, _ = _narrow_info(self.narrow)
+            return n_live * jnp.int32(INDEX_BYTES + b * nisz)
+        if self.name == "bitmap":
+            # hybrid index side: bitmap over the step's L static slots
+            # when denser than the raw index list (the transport
+            # envelope's length field tells the layouts apart)
+            lcap = live.shape[0]
+            idx = jnp.minimum(n_live * INDEX_BYTES,
+                              jnp.int32(-(-lcap // 8)))
+            idx = jnp.where(n_live > 0, idx, 0)
+            return idx + n_live * jnp.int32(b * isz)
+        # delta: indices + 2-bit entry codes + per-entry offset bytes
+        changed = live[None, :] & (payload != prev)
+        n_changed_q = jnp.sum(changed.astype(jnp.int32), axis=1)  # [B]
+        if _is_float(payload.dtype):
+            # floats ship raw behind a 1-bit change mask: suppression
+            # is the only (exact) compression available
+            mask_bytes = n_live * jnp.int32(-(-b // 8))
+            return (n_live * jnp.int32(INDEX_BYTES) + mask_bytes
+                    + jnp.sum(n_changed_q) * jnp.int32(isz))
+        # frame of reference: per-query base = min changed value; each
+        # changed entry ships its (non-negative) offset in 1/2/4 bytes.
+        # int32 arithmetic is exact here: min-combine labels live in
+        # [0, INF=2^30] and add-combine payloads are small deltas, so
+        # the changed-value spread never wraps.
+        wide = payload.astype(jnp.int32)
+        big = jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
+        base = jnp.min(jnp.where(changed, wide, big), axis=1,
+                       keepdims=True)                         # [B, 1]
+        off = jnp.where(changed, wide - base, 0)
+        entry = jnp.where(off < (1 << 8), 1,
+                          jnp.where(off < (1 << 16), 2, isz))
+        entry_bytes = jnp.sum(
+            jnp.where(changed, entry, 0).astype(jnp.int32))
+        base_bytes = jnp.sum(
+            (n_changed_q > 0).astype(jnp.int32)) * jnp.int32(isz)
+        code_bytes = n_live * jnp.int32(-(-(2 * b) // 8))
+        return (n_live * jnp.int32(INDEX_BYTES) + code_bytes
+                + base_bytes + entry_bytes)
+
+    def allreduce_wire_bytes(self, new: jax.Array, prev: jax.Array
+                             ) -> jax.Array:
+        """Post-encode per-device bytes of one replicated all-reduce
+        round over ``[B, V]`` labels (``prev``: the round-entry
+        labels; for delta-sync operators the payload is already a
+        delta against zeros and ``prev`` is the zero array).
+
+        The all-reduce is dense — there is no index side — so
+        ``bitmap`` degenerates to ``identity``; ``delta`` models a
+        sparse all-reduce (changed entries behind a 1-bit mask) and
+        ``quantize`` a narrow-word one."""
+        isz = new.dtype.itemsize
+        if self.name == "quantize":
+            _, nisz, _ = _narrow_info(self.narrow)
+            return jnp.int32(new.size * nisz)
+        if self.name == "delta":
+            changed = jnp.sum((new != prev).astype(jnp.int32))
+            return jnp.int32(-(-new.size // 8)) + changed * jnp.int32(isz)
+        return jnp.int32(new.size * isz)
+
+
+def step_logical_bytes(live: jax.Array, batch: int, itemsize: int
+                       ) -> jax.Array:
+    """Codec-independent **logical** bytes of one ring step: every
+    live vertex ships its int32 index word plus its ``[B]`` label
+    vector.  This is what ``bytes_synced`` accumulates (the index side
+    included — see tests/test_mirror_sync.py's accounting regression)
+    and the denominator of the compression ratio."""
+    n_live = jnp.sum(live.astype(jnp.int32))
+    return n_live * jnp.int32(INDEX_BYTES + batch * itemsize)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+IDENTITY = WireCodec("identity")
+DELTA = WireCodec("delta")
+BITMAP = WireCodec("bitmap")
+
+_CODECS = {"identity": IDENTITY, "delta": DELTA, "bitmap": BITMAP}
+_QUANTIZE_CACHE: dict = {}
+
+WIRE_NAMES = ("identity", "delta", "quantize", "bitmap")
+
+
+def get_codec(wire: str, op: Optional[Operator] = None,
+              dtype=None) -> WireCodec:
+    """Resolve a :class:`BalancerConfig.wire` spec to a codec.
+
+    ``"quantize"`` picks the operator's first declared narrowing;
+    ``"quantize:<dtype>"`` requests a specific one (it must still be
+    declared).  When ``op`` (and optionally ``dtype``) are given the
+    pairing is validated immediately — the config-time raise the
+    acceptance gate demands; codec lookups without an operator (e.g.
+    for config validation alone) skip it."""
+    if wire in _CODECS:
+        codec = _CODECS[wire]
+    else:
+        base, _, req = wire.partition(":")
+        if base != "quantize":
+            raise ValueError(
+                f"unknown wire codec {wire!r} (expected one of "
+                f"{WIRE_NAMES} or 'quantize:<dtype>')")
+        if req and req not in NARROW_DTYPES:
+            raise ValueError(
+                f"wire codec {wire!r}: {req!r} is not a supported "
+                f"narrow dtype ({sorted(NARROW_DTYPES)})")
+        narrow = req or None
+        if narrow is None:
+            if op is None:
+                # config syntax is valid; the narrowing is resolved
+                # (and validated) once the operator is known
+                return WireCodec("quantize", narrow=None)
+            if not op.wire_narrow:
+                raise ValueError(
+                    f"wire codec 'quantize' needs an operator that "
+                    f"declares a safe narrowing; {op.name} declares "
+                    f"none (DESIGN.md section 14)")
+            narrow = op.wire_narrow[0]
+        key = narrow
+        if key not in _QUANTIZE_CACHE:
+            _narrow_info(narrow)      # reject unsupported names early
+            _QUANTIZE_CACHE[key] = WireCodec("quantize", narrow=narrow)
+        codec = _QUANTIZE_CACHE[key]
+    if op is not None:
+        codec.validate(op, dtype if dtype is not None else jnp.int32)
+    return codec
+
+
+def validate_wire(wire: str) -> None:
+    """Config-syntax check for :class:`BalancerConfig.__post_init__`:
+    the spec must name a registered codec (operator pairing is checked
+    later, when the driver knows its operator)."""
+    get_codec(wire)

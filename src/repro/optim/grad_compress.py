@@ -9,7 +9,10 @@ per block up to rounding; 0.5-ulp stochastic rounding is left as a
 config knob (deterministic rounding keeps tests exact).
 
 Used inside shard_map over the mesh's data axes; see
-tests/test_grad_compress.py for the numerical-error bound test.
+tests/test_grad_compress.py for the numerical-error bound test.  The
+block-absmax padding/scaling primitives are the shared idiom of
+``repro.core.wire`` (the sync-payload codec layer) and are imported
+from there.
 """
 from __future__ import annotations
 
@@ -18,23 +21,15 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-BLOCK = 256
+from ..core.wire import BLOCK, block_absmax_scale, pad_to_block
 
-
-def _pad_to_block(x):
-    n = x.size
-    npad = -(-n // BLOCK) * BLOCK - n
-    flat = x.reshape(-1)
-    if npad:
-        flat = jnp.pad(flat, (0, npad))
-    return flat.reshape(-1, BLOCK), npad
+_pad_to_block = pad_to_block      # back-compat alias (pre-wire name)
 
 
 def quantize(x):
     """x: any-shape f32/bf16 -> (int8 blocks, f32 scales, meta)."""
-    blocks, npad = _pad_to_block(x.astype(jnp.float32))
-    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
+    blocks, npad = pad_to_block(x.astype(jnp.float32))
+    scale = block_absmax_scale(blocks)
     q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
     return q, scale[:, 0], (x.shape, npad)
 
@@ -60,7 +55,7 @@ def compressed_psum(tree, axis_name):
         q, scale, meta = quantize(g)
         smax = jax.lax.pmax(scale, axis_name)
         # requantize against the GLOBAL scale so summation is coherent
-        blocks, npad = _pad_to_block(g.astype(jnp.float32))
+        blocks, npad = pad_to_block(g.astype(jnp.float32))
         qg = jnp.clip(jnp.round(blocks / smax[:, None]), -127,
                       127).astype(jnp.int32)
         total = jax.lax.psum(qg, axis_name)

@@ -42,9 +42,9 @@ def test_registry_has_the_five_passes_plus_pragma_hygiene():
     ids = rule_ids()
     for required in ("host-sync", "jit-purity", "static-argnames",
                      "publish-freeze", "scatter-determinism",
-                     "bad-pragma"):
+                     "dtype-narrowing", "bad-pragma"):
         assert required in ids
-    assert len(all_rules()) >= 6
+    assert len(all_rules()) >= 7
 
 
 def test_findings_format_is_file_line_rule_message():
@@ -348,6 +348,82 @@ def test_scatter_out_of_executor_scope_ignored():
 
 
 # ---------------------------------------------------------------------------
+# dtype-narrowing
+
+def test_narrow_astype_flagged_without_declaration():
+    # no operators.py reachable -> nothing is declared safe
+    findings = lint("""
+        import jax.numpy as jnp
+        def pack(labels):
+            return labels.astype(jnp.uint8)
+    """, path="no/such/tree/core/wire.py")
+    assert rules_of(findings) == ["dtype-narrowing"]
+    # string-constant dtype spelling is caught too
+    findings = lint("""
+        def pack(labels):
+            return labels.astype("int16")
+    """, path="no/such/tree/core/wire.py")
+    assert rules_of(findings) == ["dtype-narrowing"]
+
+
+def test_declared_narrowing_passes_via_operators_registry(tmp_path):
+    core = tmp_path / "core"
+    core.mkdir()
+    (core / "operators.py").write_text(textwrap.dedent("""
+        Operator("bfs", wire_narrow=("uint16", "int8"))
+    """))
+    mod = core / "wire.py"
+    mod.write_text(textwrap.dedent("""
+        import jax.numpy as jnp
+        def pack(labels):
+            ok = labels.astype(jnp.uint16)      # declared
+            also = labels.astype(jnp.int8)      # declared
+            return labels.astype(jnp.uint8)     # NOT declared
+    """))
+    findings = analyze_paths([str(mod)])
+    assert rules_of(findings) == ["dtype-narrowing"]
+    assert len(findings) == 1
+    assert "uint8" in findings[0].message
+
+
+def test_narrow_astype_out_of_core_scope_ignored():
+    # the optimizer's int8 gradient quantization is not a label path
+    assert lint("""
+        import jax.numpy as jnp
+        def quantize(g):
+            return g.astype(jnp.int8)
+    """, path="src/repro/optim/grad_compress.py") == []
+
+
+def test_dynamic_astype_not_flagged():
+    # dtype chosen at runtime (the codec layer's own dispatch) is not
+    # statically resolvable and must not be flagged
+    assert lint("""
+        import jax.numpy as jnp
+        def pack(labels, ndt):
+            a = labels.astype(ndt)
+            return labels.astype(jnp.int32)    # widening is fine
+    """, path="no/such/tree/core/wire.py") == []
+
+
+def test_narrow_astype_pragma_suppresses():
+    assert lint("""
+        import jax.numpy as jnp
+        def pack(labels):
+            return labels.astype(jnp.uint8)  # repro: allow[dtype-narrowing] -- scratch buffer, not a label path
+    """, path="no/such/tree/core/wire.py") == []
+
+
+def test_real_operators_declare_the_wire_narrowings():
+    # the live declarations the rule (and the quantize codec) key on
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.analysis.rules.dtype_narrowing import _parse_declarations
+    declared = _parse_declarations(
+        (REPO / "src/repro/core/operators.py").read_text())
+    assert declared == {"uint16", "int8"}
+
+
+# ---------------------------------------------------------------------------
 # pragmas
 
 def test_pragma_suppresses_named_rule_on_its_line():
@@ -489,7 +565,7 @@ def test_cli_relaxed_profile_drops_host_sync(tmp_path):
     # host-sync scopes to core/serve paths, so even strict mode does
     # not fire here — but the relaxed profile must run fewer rules
     assert "across 3 rule(s)" in relaxed.stdout + relaxed.stderr
-    assert "across 6 rule(s)" in strict.stdout + strict.stderr
+    assert "across 7 rule(s)" in strict.stdout + strict.stderr
 
 
 def test_cli_write_baseline_round_trip(tmp_path):

@@ -92,8 +92,40 @@ def test_kcore_mirror_parity(rmat_graph, policy):
     labels, _, _, stats = gluon.kcore_distributed(
         sg, mesh, 8, CFG, collect_stats=True, sync="mirror", meta=meta)
     np.testing.assert_array_equal(np.asarray(labels), np.asarray(ref))
-    assert all(st.bytes_synced == st.mirrors_synced * 4
+    # logical volume = index word + [B=1] int32 payload per exchanged
+    # vertex (8 bytes, not 4: the index side counts too)
+    assert all(st.bytes_synced == st.mirrors_synced * (4 + 4)
                for per_round in stats for st in per_round)
+
+
+@multidevice
+def test_bytes_synced_counts_index_traffic(rmat_graph):
+    """Accounting regression (failed before the wire-codec refactor):
+    the exchange ships an int32 ``out_idx`` word alongside each dirty
+    vertex's ``[B]`` payload in BOTH rings, so ``bytes_synced`` must be
+    ``mirrors_synced * (INDEX_BYTES + B * itemsize)`` — the old count
+    dropped the index side and reported payload bytes only."""
+    g = rmat_graph
+    src = G.highest_out_degree_vertex(g)
+    mesh = gluon.device_mesh(NDEV)
+    sg, meta = partition(g, NDEV, "oec")
+    # sssp exercises both rings (reduce-to-master AND broadcast)
+    _, _, _, stats = gluon.sssp_distributed(
+        sg, mesh, src, CFG, collect_stats=True, sync="mirror", meta=meta)
+    assert any(st.mirrors_synced > 0
+               for per_round in stats for st in per_round)
+    for per_round in stats:
+        for st in per_round:
+            assert st.bytes_synced == st.mirrors_synced * (4 + 1 * 4)
+            # identity wire (the default): post-encode == logical
+            assert st.bytes_wire == st.bytes_synced
+    # batched: the per-vertex payload scales by B, the index word not
+    srcs = np.arange(8) * (g.num_vertices // 8)
+    _, _, _, bstats = gluon.sssp_batch_distributed(
+        sg, mesh, srcs, CFG, collect_stats=True, sync="mirror", meta=meta)
+    for per_round in bstats:
+        for st in per_round:
+            assert st.bytes_synced == st.mirrors_synced * (4 + 8 * 4)
 
 
 @multidevice

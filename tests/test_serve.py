@@ -338,6 +338,12 @@ def test_cache_keyed_by_strategy(rmat_g):
     other = BalancerConfig(strategy="twc")
     assert svc.cache.get("g", "bfs", s, other) is None
     assert svc.cache.get("g", "bfs", s, CFG) is not None
+    # the wire codec is part of the frozen config and therefore of the
+    # cache key: a config differing ONLY in wire must not cross-hit
+    import dataclasses
+    rewired = dataclasses.replace(CFG, wire="delta")
+    assert rewired != CFG
+    assert svc.cache.get("g", "bfs", s, rewired) is None
 
 
 def test_result_cache_lru_eviction():

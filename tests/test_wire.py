@@ -1,0 +1,359 @@
+"""Wire codec layer acceptance (DESIGN.md section 14).
+
+Unit tests cover the codec registry, config-time validation, the
+encode/decode round-trips and the byte accountants on plain arrays —
+all single-device, tier-1.
+
+The multi-device tests are the refactor's acceptance gates: for every
+app x sync x mode cell the labels after decode must be BITWISE equal
+to the ``identity`` codec run; ``delta`` and ``bitmap`` must put
+strictly fewer bytes on the wire than the logical ``bytes_synced`` on
+every non-final round of the gate workloads (structural, no
+wall-clock); and ``quantize`` on an operator that declares no safe
+narrowing must raise at config time, before any round is traced.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import graph as G
+from repro.core import gluon
+from repro.core import operators as ops
+from repro.core import wire
+from repro.core.balancer import BalancerConfig
+from repro.core.partition import partition
+
+NDEV = 4
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < NDEV,
+    reason=f"needs {NDEV} devices (CI sets "
+           f"XLA_FLAGS=--xla_force_host_platform_device_count={NDEV})")
+
+
+# ---------------- registry + config-time validation ------------------------
+
+def test_registry_names_resolve():
+    for name in ("identity", "delta", "bitmap"):
+        assert wire.get_codec(name).name == name
+    q = wire.get_codec("quantize", ops.BFS_HOP)
+    assert q.name == "quantize"
+    assert q.narrow == ops.BFS_HOP.wire_narrow[0] == "uint16"
+    q8 = wire.get_codec("quantize:int8", ops.BFS_HOP)
+    assert q8.narrow == "int8"
+
+
+def test_unknown_wire_spec_raises():
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        wire.get_codec("zstd")
+    with pytest.raises(ValueError, match="not a supported"):
+        wire.get_codec("quantize:int64")
+
+
+def test_balancer_config_validates_wire():
+    for name in ("identity", "delta", "bitmap", "quantize",
+                 "quantize:uint16"):
+        assert BalancerConfig(wire=name).wire == name
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        BalancerConfig(wire="bogus")
+
+
+def test_quantize_requires_declared_narrowing():
+    # sssp/cc declare none: their min combine must carry full labels
+    for op in (ops.SSSP_RELAX, ops.CC_MIN):
+        with pytest.raises(ValueError, match="declares none"):
+            wire.get_codec("quantize", op)
+    # a narrowing outside the declared set is rejected even though the
+    # dtype itself is supported
+    with pytest.raises(ValueError, match="not.*among them"):
+        wire.get_codec("quantize:int8", ops.KCORE_DEC)
+    # float payloads never narrow exactly
+    with pytest.raises(ValueError, match="integer payloads"):
+        wire.WireCodec("quantize", narrow="uint16").validate(
+            ops.BFS_HOP, jnp.float32)
+    # pagerank: no declaration AND float — raises on the first check
+    with pytest.raises(ValueError):
+        wire.get_codec("quantize", ops.PR_PULL, jnp.float32)
+
+
+# ---------------- encode/decode round-trips --------------------------------
+
+def test_delta_int_round_trip_exact():
+    rng = np.random.default_rng(0)
+    payload = jnp.asarray(rng.integers(0, 1 << 30, (3, 64)), jnp.int32)
+    prev = jnp.asarray(rng.integers(0, 1 << 30, (3, 64)), jnp.int32)
+    # include the combiner neutral (2^31 - 1): the subtraction wraps,
+    # the addition wraps back — two's complement keeps it exact
+    payload = payload.at[0, 0].set(np.int32((1 << 31) - 1))
+    enc = wire.DELTA.encode(payload, prev, ops.SSSP_RELAX)
+    dec = wire.DELTA.decode(enc, prev, ops.SSSP_RELAX, jnp.int32)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(payload))
+
+
+def test_delta_float_ships_raw():
+    payload = jnp.asarray([[0.1, 0.7]], jnp.float32)
+    prev = jnp.asarray([[0.05, 0.7]], jnp.float32)
+    enc = wire.DELTA.encode(payload, prev, ops.PR_PULL)
+    np.testing.assert_array_equal(np.asarray(enc), np.asarray(payload))
+
+
+def test_quantize_min_round_trip_with_sentinel():
+    codec = wire.get_codec("quantize", ops.BFS_HOP)
+    hops = jnp.asarray([[0, 7, 65534, int(G.INF), (1 << 31) - 1]],
+                       jnp.int32)
+    prev = jnp.zeros_like(hops)
+    enc = codec.encode(hops, prev, ops.BFS_HOP)
+    assert enc.dtype == jnp.uint16
+    dec = codec.decode(enc, prev, ops.BFS_HOP, jnp.int32)
+    # reachable hops exact; INF and the combiner neutral both map
+    # through the saturating sentinel to INF — a no-op under min
+    np.testing.assert_array_equal(
+        np.asarray(dec[0]), [0, 7, 65534, int(G.INF), int(G.INF)])
+
+
+def test_quantize_add_round_trip_sign_extends():
+    codec = wire.get_codec("quantize", ops.KCORE_DEC)
+    deltas = jnp.asarray([[0, -1, -37, -32768 + 1, 255]], jnp.int32)
+    prev = jnp.zeros_like(deltas)
+    enc = codec.encode(deltas, prev, ops.KCORE_DEC)
+    assert enc.dtype == jnp.uint16
+    dec = codec.decode(enc, prev, ops.KCORE_DEC, jnp.int32)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(deltas))
+
+
+def test_quantize_int8_round_trip():
+    codec = wire.get_codec("quantize:int8", ops.BFS_HOP)
+    hops = jnp.asarray([[0, 3, 126, int(G.INF)]], jnp.int32)
+    dec = codec.decode(
+        codec.encode(hops, jnp.zeros_like(hops), ops.BFS_HOP),
+        jnp.zeros_like(hops), ops.BFS_HOP, jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(dec[0]), [0, 3, 126, int(G.INF)])
+
+
+# ---------------- byte accountants -----------------------------------------
+
+def _slab(b=2, n=32, n_live=10, seed=1):
+    rng = np.random.default_rng(seed)
+    payload = jnp.asarray(rng.integers(0, 1000, (b, n)), jnp.int32)
+    live = jnp.asarray(np.arange(n) < n_live)
+    return payload, live
+
+
+def test_step_logical_bytes_counts_index_word():
+    _, live = _slab()
+    got = int(wire.step_logical_bytes(live, 2, 4))
+    assert got == 10 * (wire.INDEX_BYTES + 2 * 4)
+
+
+def test_identity_wire_equals_logical():
+    payload, live = _slab()
+    got = int(wire.IDENTITY.step_wire_bytes(
+        payload, payload, live, ops.SSSP_RELAX))
+    assert got == int(wire.step_logical_bytes(live, 2, 4))
+
+
+def test_quantize_wire_bytes_scale_by_narrow_itemsize():
+    payload, live = _slab()
+    codec = wire.get_codec("quantize", ops.BFS_HOP)   # uint16
+    got = int(codec.step_wire_bytes(payload, payload, live, ops.BFS_HOP))
+    assert got == 10 * (wire.INDEX_BYTES + 2 * 2)
+
+
+def test_bitmap_wire_bytes_hybrid():
+    payload, live = _slab(n=64, n_live=40)
+    # dense: the 8-bytes bitmap (64 slots / 8) beats 40 index words
+    got = int(wire.BITMAP.step_wire_bytes(
+        payload, payload, live, ops.SSSP_RELAX))
+    assert got == 8 + 40 * 2 * 4
+    # sparse: the raw index list wins, bitmap degenerates to identity
+    payload, live = _slab(n=64, n_live=1)
+    got = int(wire.BITMAP.step_wire_bytes(
+        payload, payload, live, ops.SSSP_RELAX))
+    assert got == 1 * wire.INDEX_BYTES + 1 * 2 * 4
+    # empty step ships nothing at all
+    payload, live = _slab(n=64, n_live=0)
+    assert int(wire.BITMAP.step_wire_bytes(
+        payload, payload, live, ops.SSSP_RELAX)) == 0
+
+
+def test_delta_wire_bytes_suppress_unchanged():
+    payload, live = _slab(b=4, n=32, n_live=16)
+    # nothing changed: only indices + the 2-bit code stream remain
+    got = int(wire.DELTA.step_wire_bytes(
+        payload, payload, live, ops.SSSP_RELAX))
+    assert got == 16 * wire.INDEX_BYTES + 16 * 1
+    assert got < int(wire.step_logical_bytes(live, 4, 4))
+    # everything changed, values clustered within a 1-byte spread of
+    # the per-query frame-of-reference base: 1-byte entries + one base
+    # word per query still undercut the 4-byte payload words
+    rng = np.random.default_rng(7)
+    payload = jnp.asarray(rng.integers(1000, 1200, (4, 32)), jnp.int32)
+    prev = payload - 3
+    got = int(wire.DELTA.step_wire_bytes(
+        payload, prev, live, ops.SSSP_RELAX))
+    assert got == (16 * wire.INDEX_BYTES + 16 * 1   # codes
+                   + 4 * 4                          # per-query bases
+                   + 16 * 4 * 1)                    # 1-byte offsets
+    assert got < int(wire.step_logical_bytes(live, 4, 4))
+
+
+def test_delta_wire_bytes_float_mask_path():
+    rng = np.random.default_rng(2)
+    payload = jnp.asarray(rng.random((1, 16)), jnp.float32)
+    live = jnp.asarray(np.arange(16) < 8)
+    prev = payload.at[0, :4].add(1.0)    # 4 changed among the 8 live
+    got = int(wire.DELTA.step_wire_bytes(
+        payload, prev, live, ops.PR_PULL))
+    assert got == 8 * wire.INDEX_BYTES + 8 * 1 + 4 * 4
+
+
+def test_allreduce_wire_bytes():
+    new = jnp.asarray(np.arange(64).reshape(1, 64), jnp.int32)
+    prev = new.at[0, :16].add(1)
+    assert int(wire.IDENTITY.allreduce_wire_bytes(new, prev)) == 64 * 4
+    assert int(wire.BITMAP.allreduce_wire_bytes(new, prev)) == 64 * 4
+    assert int(wire.DELTA.allreduce_wire_bytes(new, prev)) == 8 + 16 * 4
+    q = wire.get_codec("quantize", ops.BFS_HOP)
+    assert int(q.allreduce_wire_bytes(new, prev)) == 64 * 2
+
+
+def test_shared_block_helpers_round_trip():
+    x = jnp.asarray(np.random.default_rng(3).random(300), jnp.float32)
+    blocks, npad = wire.pad_to_block(x)
+    assert blocks.shape == (2, wire.BLOCK)
+    assert npad == 2 * wire.BLOCK - 300
+    scale = wire.block_absmax_scale(blocks)
+    assert scale.shape == (2, 1)
+    assert float(jnp.max(jnp.abs(blocks / scale))) <= 127.0 + 1e-6
+
+
+def test_grad_compress_uses_shared_helpers():
+    from repro.optim import grad_compress as gc
+    assert gc.pad_to_block is wire.pad_to_block
+    assert gc.BLOCK == wire.BLOCK
+    q, scale, meta = gc.quantize(
+        jnp.asarray(np.random.default_rng(4).random(513), jnp.float32))
+    out = gc.dequantize(q, scale, meta)
+    assert out.shape == (513,)
+
+
+# ---------------- acceptance gates (multi-device) --------------------------
+
+CFG = BalancerConfig(strategy="alb", threshold=64)
+
+
+@pytest.fixture(scope="module")
+def rmat_graph():
+    return G.rmat(9, 8, seed=5)
+
+
+@multidevice
+@pytest.mark.parametrize("codec", ["delta", "bitmap", "quantize"])
+@pytest.mark.parametrize("sync", ["replicated", "mirror"])
+@pytest.mark.parametrize("mode", ["host", "fused"])
+def test_bfs_codec_parity(rmat_graph, codec, sync, mode):
+    """Labels after decode are BITWISE equal to the identity run for
+    every sync substrate and execution mode."""
+    g = rmat_graph
+    src = G.highest_out_degree_vertex(g)
+    mesh = gluon.device_mesh(NDEV)
+    sg, meta = partition(g, NDEV, "oec")
+    m = meta if sync == "mirror" else None
+    ref, _, _ = gluon.bfs_distributed(sg, mesh, src, CFG, sync=sync,
+                                      meta=m, mode=mode)
+    got, _, _ = gluon.bfs_distributed(
+        sg, mesh, src, BalancerConfig(strategy="alb", threshold=64,
+                                      wire=codec),
+        sync=sync, meta=m, mode=mode)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@multidevice
+@pytest.mark.parametrize("app", ["cc", "kcore"])
+@pytest.mark.parametrize("codec", ["delta", "bitmap"])
+def test_symmetric_apps_codec_parity(rmat_graph, app, codec):
+    g = G.symmetrized(rmat_graph)
+    mesh = gluon.device_mesh(NDEV)
+    sg, meta = partition(g, NDEV, "oec")
+    driver = (gluon.cc_distributed if app == "cc"
+              else lambda *a, **k: gluon.kcore_distributed(
+                  a[0], a[1], 8, *a[2:], **k))
+    ref, _, _ = driver(sg, mesh, CFG, sync="mirror", meta=meta)
+    cfg = BalancerConfig(strategy="alb", threshold=64, wire=codec)
+    got, _, _ = driver(sg, mesh, cfg, sync="mirror", meta=meta)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@multidevice
+@pytest.mark.parametrize("codec", ["delta", "bitmap"])
+def test_pagerank_codec_parity(rmat_graph, codec):
+    g = rmat_graph
+    mesh = gluon.device_mesh(NDEV)
+    srg, rmeta = partition(G.reverse_graph(g), NDEV, "oec")
+    ref, _, _ = gluon.pagerank_distributed(
+        srg, mesh, g.out_degrees(), max_rounds=10, tol=0.0,
+        sync="mirror", meta=rmeta)
+    got, _, _ = gluon.pagerank_distributed(
+        srg, mesh, g.out_degrees(), max_rounds=10, tol=0.0,
+        cfg=BalancerConfig(wire=codec), sync="mirror", meta=rmeta)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@multidevice
+@pytest.mark.parametrize("codec", ["delta", "bitmap"])
+def test_compression_strict_on_nonfinal_rounds(codec):
+    """The structural gate: on the batched-BFS gate workload (dense
+    boundary traffic on every pre-convergence round, B=8 payload
+    vectors) delta and bitmap put STRICTLY fewer bytes on the wire
+    than the logical volume on every non-final round.  (bitmap's
+    hybrid index side degenerates to the identity layout on sparse
+    steps — the gate workload is chosen so no non-final round is that
+    sparse.)"""
+    g = G.rmat(10, 8, seed=3)
+    mesh = gluon.device_mesh(NDEV)
+    sg, meta = partition(g, NDEV, "oec")
+    srcs = np.asarray([0, 7, 23, 99, 200, 311, 450, 512])
+    cfg = BalancerConfig(strategy="alb", threshold=64, wire=codec)
+    _, rounds, _, stats = gluon.bfs_batch_distributed(
+        sg, mesh, srcs, cfg, collect_stats=True, sync="mirror",
+        meta=meta)
+    per_round = [(sum(st.bytes_synced for st in pr),
+                  sum(st.bytes_wire for st in pr)) for pr in stats]
+    assert rounds >= 3          # a real traversal, not a degenerate one
+    for logical, wired in per_round[:-1]:
+        assert 0 < wired < logical, per_round
+
+
+@multidevice
+def test_quantize_strict_on_nonfinal_rounds(rmat_graph):
+    """uint16 hop payloads halve the payload side on every round that
+    ships anything (quantize compresses unconditionally — no density
+    requirement)."""
+    g = rmat_graph
+    src = G.highest_out_degree_vertex(g)
+    mesh = gluon.device_mesh(NDEV)
+    sg, meta = partition(g, NDEV, "oec")
+    cfg = BalancerConfig(strategy="alb", threshold=64, wire="quantize")
+    _, _, _, stats = gluon.bfs_distributed(
+        sg, mesh, src, cfg, collect_stats=True, sync="mirror", meta=meta)
+    for pr in stats:
+        for st in pr:
+            assert st.bytes_wire == st.mirrors_synced * (4 + 2)
+            if st.mirrors_synced:
+                assert st.bytes_wire < st.bytes_synced
+
+
+@multidevice
+def test_quantize_raises_at_config_time_distributed(rmat_graph):
+    """The driver refuses quantize on an operator with no declared
+    narrowing BEFORE tracing or dispatching any round."""
+    g = rmat_graph
+    mesh = gluon.device_mesh(NDEV)
+    sg, meta = partition(g, NDEV, "oec")
+    cfg = BalancerConfig(wire="quantize")
+    with pytest.raises(ValueError, match="declares none"):
+        gluon.sssp_distributed(sg, mesh, 0, cfg, sync="mirror",
+                               meta=meta)
+    with pytest.raises(ValueError):
+        gluon.pagerank_distributed(sg, mesh, g.out_degrees(), cfg=cfg)
