@@ -360,8 +360,11 @@ def make_mirror_round_fn(mesh, cfg: BalancerConfig, op: Operator,
                     "dev", perm_bwd[s])
                 in_idx = mirror_t[(me + s) % ndev]
                 safe_in = jnp.where(in_idx < v, in_idx, 0)
+                # signed=False: the broadcast ships full labels, which
+                # are non-negative — unsigned narrow words zero-extend
+                # (kcore degrees in [2^15, 2^16) stay exact)
                 recv = codec.decode(recv, labels[:, safe_in], op,
-                                    final.dtype)
+                                    final.dtype, signed=False)
                 final = final.at[:, in_idx].set(recv, mode="drop")
 
             new_frontier = next_frontier(labels, final, frontier)

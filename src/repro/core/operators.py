@@ -64,9 +64,13 @@ CC_MIN = Operator("cc_min", "push", "min",
                   lambda v, w: v, uses_weight=False)
 
 # kcore: when a vertex dies, its (symmetrized) neighbours lose a degree.
-# Payloads are degree decrements with magnitude bounded by the max
-# degree, so the uint16 wire word (two's-complement wrap, sign-extended
-# on decode — exact while |delta| < 2^15) is safe.
+# The uint16 wire word is exact for BOTH ring directions within the
+# declared bound of max degree < 2^15: reduce-ring payloads are degree
+# decrements (two's-complement wrap, sign-extended on decode — exact
+# while |delta| < 2^15), and broadcast-ring payloads are the remaining
+# degrees themselves (non-negative, zero-extended on decode — exact
+# while label < 2^16).  Graphs with max degree >= 2^15 must not pair
+# kcore with wire="quantize" (DESIGN.md section 14).
 KCORE_DEC = Operator("kcore_dec", "push", "add",
                      lambda v, w: jnp.full_like(v, -1), uses_weight=False,
                      wire_narrow=("uint16",))

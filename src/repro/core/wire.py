@@ -119,7 +119,6 @@ def _is_float(dtype) -> bool:
 def _narrow_info(name: str):
     """(jnp dtype, itemsize, min-combine sentinel) of a declared
     narrowing."""
-    dt = jnp.dtype(name)
     if name == "uint16":
         return jnp.uint16, 2, (1 << 16) - 1
     if name == "int8":
@@ -204,10 +203,20 @@ class WireCodec:
         return payload
 
     def decode(self, wire: jax.Array, prev: jax.Array,
-               op: Operator, dtype) -> jax.Array:
+               op: Operator, dtype, signed: bool = True) -> jax.Array:
         """Exact inverse of :meth:`encode` given the receiver's copy
         of the same ``prev`` reference; returns the logical payload in
-        the label dtype."""
+        the label dtype.
+
+        ``signed`` disambiguates the add-combine quantize widening,
+        where the narrow word alone cannot tell ``-1`` from ``2^16-1``:
+        the reduce ring ships two's-complement-wrapped deltas (may be
+        negative — sign-extend, exact while ``|value| < 2^(bits-1)``),
+        while the broadcast ring ships full labels (non-negative by
+        construction — ``signed=False`` zero-extends unsigned narrow
+        words, exact while ``value < 2^bits``; without it kcore's
+        remaining degrees in ``[2^15, 2^16)`` would decode negative).
+        Signed narrow dtypes and every other codec ignore the flag."""
         if self.name == "delta" and not _is_float(dtype):
             return prev + wire
         if self.name == "quantize":
@@ -216,11 +225,15 @@ class WireCodec:
                 wide = wire.astype(dtype)
                 return jnp.where(wire == jnp.asarray(sent, wire.dtype),
                                  jnp.asarray(INF, dtype), wide)
-            # add: sign-extend the narrow word back to the label dtype
-            signed = jnp.dtype(self.narrow) \
-                if jnp.issubdtype(jnp.dtype(self.narrow), jnp.signedinteger) \
-                else jnp.dtype(f"int{jnp.dtype(self.narrow).itemsize * 8}")
-            return wire.astype(signed).astype(dtype)
+            # add: widen the wrapped narrow word back to the label
+            # dtype — through the same-width signed dtype when the
+            # payload may be negative, directly (zero-extending
+            # unsigned words) when it is a non-negative label
+            if signed and jnp.issubdtype(jnp.dtype(self.narrow),
+                                         jnp.unsignedinteger):
+                bits = jnp.dtype(self.narrow).itemsize * 8
+                return wire.astype(jnp.dtype(f"int{bits}")).astype(dtype)
+            return wire.astype(dtype)
         return wire
 
     # -- wire accounting (jit int32 scalars) -----------------------------

@@ -26,6 +26,7 @@ from repro.core.balancer import BalancerConfig, RoundStats, relax, relax_spmd
 from repro.core.frontier import single_source, single_sources, union_frontier
 from repro.core import operators as ops
 from repro.core import gluon
+from repro.core import wire
 from repro.core.partition import partition
 from repro.core.apps import bfs, sssp, bfs_batch, sssp_batch
 
@@ -212,12 +213,15 @@ def test_batched_mirror_sync_4dev(policy):
         sg, mesh, srcs, cfg, sync="mirror", meta=meta,
         collect_stats=True)
     np.testing.assert_array_equal(np.asarray(labels), ref)
-    # payload accounting: bytes = dirty vertices * B * itemsize, and the
+    # payload accounting: every exchanged vertex ships its int32 index
+    # word plus its [B] payload (the logical-bytes definition of
+    # tests/test_mirror_sync.py's accounting regression), and the
     # boundary exchange still undercuts the replicated all-reduce's
     # B * V * itemsize * D baseline
     for per_round in stats:
         for st in per_round:
-            assert st.bytes_synced == st.mirrors_synced * b * 4
+            assert st.bytes_synced == st.mirrors_synced * (
+                wire.INDEX_BYTES + b * 4)
     baseline = b * g.num_vertices * 4 * NDEV
     per_round_bytes = [sum(st.bytes_synced for st in pr) for pr in stats]
     assert len(per_round_bytes) == rounds

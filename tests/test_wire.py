@@ -121,6 +121,25 @@ def test_quantize_add_round_trip_sign_extends():
     np.testing.assert_array_equal(np.asarray(dec), np.asarray(deltas))
 
 
+def test_quantize_add_broadcast_labels_zero_extend():
+    """The broadcast ring ships full labels (kcore's remaining
+    degrees), which are non-negative: ``signed=False`` zero-extends
+    the uint16 word, so degrees in [2^15, 2^16) round-trip exactly
+    instead of decoding negative through sign-extension."""
+    codec = wire.get_codec("quantize", ops.KCORE_DEC)
+    labels = jnp.asarray([[0, 7, 32768, 40000, 65535]], jnp.int32)
+    prev = jnp.zeros_like(labels)
+    enc = codec.encode(labels, prev, ops.KCORE_DEC)
+    assert enc.dtype == jnp.uint16
+    dec = codec.decode(enc, prev, ops.KCORE_DEC, jnp.int32,
+                       signed=False)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(labels))
+    # the reduce-ring (signed) widening would corrupt these labels —
+    # the asymmetry is the point of the direction-aware decode
+    signed_dec = codec.decode(enc, prev, ops.KCORE_DEC, jnp.int32)
+    assert int(signed_dec[0, 2]) < 0
+
+
 def test_quantize_int8_round_trip():
     codec = wire.get_codec("quantize:int8", ops.BFS_HOP)
     hops = jnp.asarray([[0, 3, 126, int(G.INF)]], jnp.int32)
@@ -282,6 +301,22 @@ def test_symmetric_apps_codec_parity(rmat_graph, app, codec):
     ref, _, _ = driver(sg, mesh, CFG, sync="mirror", meta=meta)
     cfg = BalancerConfig(strategy="alb", threshold=64, wire=codec)
     got, _, _ = driver(sg, mesh, cfg, sync="mirror", meta=meta)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@multidevice
+def test_kcore_quantize_codec_parity(rmat_graph):
+    """kcore + quantize exercises both add-combine widenings through
+    the real rings: sign-extended decrements on the reduce ring,
+    zero-extended remaining degrees on the broadcast ring."""
+    g = G.symmetrized(rmat_graph)
+    mesh = gluon.device_mesh(NDEV)
+    sg, meta = partition(g, NDEV, "oec")
+    ref, _, _ = gluon.kcore_distributed(sg, mesh, 8, CFG,
+                                        sync="mirror", meta=meta)
+    cfg = BalancerConfig(strategy="alb", threshold=64, wire="quantize")
+    got, _, _ = gluon.kcore_distributed(sg, mesh, 8, cfg,
+                                        sync="mirror", meta=meta)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
 
